@@ -1,0 +1,80 @@
+"""Paper Fig. 8: running time vs number of workers (MapReduce speed-up).
+
+Each worker count runs in a fresh subprocess with that many forced host
+devices; the SAME global batch of RBM CD-1 work is map/combine/reduced across
+them (strong scaling, as in the paper's EC2 experiment).  On a single physical
+CPU core the wall-clock speedup saturates, so we also report the *per-device
+work fraction* (mapper work / workers) and the communication-byte model — the
+quantities that transfer to a real fleet.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+WORKER = textwrap.dedent("""
+    import os, sys, json, time
+    n = int(sys.argv[1])
+    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    import jax, jax.numpy as jnp
+    from repro.core.rbm import RBMConfig, make_rbm_step, rbm_init
+    from repro.data import dataset
+    from repro.launch.mesh import make_host_mesh
+
+    cfg = RBMConfig(n_vis=784, n_hid=512)
+    mesh = make_host_mesh(data=n)
+    X, _ = dataset(2048, seed=0)
+    X = jnp.asarray(X)
+    key = jax.random.PRNGKey(0)
+    p = rbm_init(key, cfg)
+    vel = jax.tree.map(jnp.zeros_like, p)
+    step = make_rbm_step(cfg, mesh)
+    # warmup/compile
+    p2, v2, err = step(p, vel, X, key, 0)
+    jax.block_until_ready(err)
+    t0 = time.perf_counter()
+    iters = 10
+    for i in range(iters):
+        p, vel, err = step(p, vel, X, jax.random.fold_in(key, i), 0)
+    jax.block_until_ready(err)
+    dt = (time.perf_counter() - t0) / iters
+    print("RESULT" + json.dumps({"workers": n, "s_per_job": dt,
+                                 "err": float(err)}))
+""")
+
+
+def run(worker_counts=(1, 2, 4, 8), csv=True):
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    rows = []
+    base = None
+    for n in worker_counts:
+        proc = subprocess.run([sys.executable, "-c", WORKER, str(n)],
+                              capture_output=True, text=True, timeout=600,
+                              env=env)
+        assert proc.returncode == 0, proc.stderr[-1500:]
+        line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][0]
+        rec = json.loads(line[len("RESULT"):])
+        if base is None:
+            base = rec["s_per_job"]
+        # analytic model for a real fleet: mapper work scales 1/n; the reducer
+        # all-reduce moves 2(n-1)/n * |W| bytes per device
+        wire_mb = 2 * (n - 1) / n * (784 * 512 * 4) / 1e6
+        rec["ideal_work_fraction"] = 1.0 / n
+        rec["allreduce_mb_per_device"] = wire_mb
+        rec["speedup_measured"] = base / rec["s_per_job"]
+        rows.append(rec)
+        if csv:
+            print(f"fig8_scaling,workers={n},s_per_job={rec['s_per_job']:.4f},"
+                  f"speedup={rec['speedup_measured']:.2f},"
+                  f"ideal_work_fraction={rec['ideal_work_fraction']:.3f},"
+                  f"allreduce_mb_per_dev={wire_mb:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""Aggregate the dry-run sweep JSONs into the §Roofline table.
+
+Reads experiments/dryrun/*.json (written by repro.launch.sweep) and emits a
+markdown table + CSV with the three roofline terms, the dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPS, and a one-line "what would move the dominant term" note
+per (arch x shape x mesh) cell.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+NOTES = {
+    ("compute",): "raise per-chip work (bigger microbatch) or cut remat recompute",
+    ("memory",): "fuse attention (Pallas flash kernel keeps scores in VMEM), "
+                 "cut fp32 score materialization and layout copies",
+    ("collective",): "reshard to cut all-gathers (FSDP->TP boundary), overlap "
+                     "grad all-reduce with backward, int8-compress cross-pod",
+}
+
+
+def load(out_dir: str = "experiments/dryrun") -> List[Dict]:
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        rows.append(json.load(open(fn)))
+    return rows
+
+
+def fmt_row(r: Dict) -> str:
+    if r["status"] != "ok":
+        reason = r.get("reason", r.get("error", ""))[:60]
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']} "
+                f"| — | — | — | — | — | {reason} |")
+    roof = r["roofline"]
+    dom = roof["dominant"]
+    note = NOTES.get((dom,), "")
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {roof['compute_s']:.3f} | {roof['memory_s']:.3f} "
+            f"| {roof['collective_s']:.3f} | **{dom}** "
+            f"| {r['useful_flops_ratio']:.2f} | {note} |")
+
+
+def run(out_dir: str = "experiments/dryrun", csv: bool = True):
+    rows = load(out_dir)
+    ok = [r for r in rows if r["status"] == "ok"]
+    if csv:
+        for r in ok:
+            roof = r["roofline"]
+            print(f"roofline,{r['arch']},{r['shape']},{r['mesh']},"
+                  f"compute_s={roof['compute_s']:.4f},"
+                  f"memory_s={roof['memory_s']:.4f},"
+                  f"collective_s={roof['collective_s']:.4f},"
+                  f"dominant={roof['dominant']},"
+                  f"useful_ratio={r['useful_flops_ratio']:.3f}")
+    return rows
+
+
+def markdown(out_dir: str = "experiments/dryrun") -> str:
+    rows = load(out_dir)
+    hdr = ("| arch | shape | mesh | status | compute s | memory s | "
+           "collective s | dominant | useful/HLO | note |\n"
+           "|---|---|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(fmt_row(r) for r in rows)
+
+
+if __name__ == "__main__":
+    run()
+    print()
+    print(markdown())

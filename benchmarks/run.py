@@ -1,0 +1,51 @@
+# One function per paper table/figure. Prints CSV rows (name,key=value,...).
+"""Benchmark harness entry point:
+
+  fig6  — unsupervised reconstruction error vs iteration   (paper Fig. 6)
+  fig7  — supervised misclassification vs iteration        (paper Fig. 7)
+  fig8  — MapReduce scaling: time vs #workers              (paper Fig. 8)
+  roofline — 3-term roofline per (arch x shape x mesh) from the dry-run sweep
+
+``--quick`` shrinks sizes so the full harness runs in a few minutes on CPU.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=[None, "fig6", "fig7", "fig8", "roofline"])
+    ap.add_argument("--quick", action="store_true", default=True)
+    ap.add_argument("--full", dest="quick", action="store_false")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    if args.only in (None, "fig6"):
+        from . import fig6_unsup_error
+        if args.quick:
+            fig6_unsup_error.run(n_train=1024, n_test=256, epochs=4,
+                                 stack=(784, 128, 32))
+        else:
+            fig6_unsup_error.run()
+    if args.only in (None, "fig7"):
+        from . import fig7_sup_error
+        if args.quick:
+            fig7_sup_error.run(n_train=1024, n_test=256, epochs=10,
+                               stack=(784, 128))
+        else:
+            fig7_sup_error.run()
+    if args.only in (None, "fig8"):
+        from . import fig8_scaling
+        fig8_scaling.run(worker_counts=(1, 2, 4, 8))
+    if args.only in (None, "roofline"):
+        from . import roofline
+        roofline.run()
+    print(f"benchmarks,total_s={time.time() - t0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

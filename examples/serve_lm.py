@@ -1,0 +1,25 @@
+"""Batched serving example: prefill + greedy decode for any assigned arch.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch mamba2-780m
+  PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-2b --gen 32
+"""
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    serve_main(["--arch", args.arch, "--reduced",
+                "--batch", str(args.batch),
+                "--prompt-len", str(args.prompt_len),
+                "--gen", str(args.gen)])
+
+
+if __name__ == "__main__":
+    main()

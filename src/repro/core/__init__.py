@@ -1,0 +1,6 @@
+# The paper's primary contribution: MapReduce-decomposed deep learning.
+from .mapreduce import (REDUCE_MODES, map_reduce_job, mapreduce_value_and_grad,
+                        reduce_tree)  # noqa: F401
+from .rbm import RBMConfig, cd_statistics, free_energy, make_rbm_step, rbm_init  # noqa: F401
+from .dbn import DBNConfig, forward_stack, train_dbn  # noqa: F401
+from . import adaboost, autoencoder, finetune  # noqa: F401

@@ -1,0 +1,96 @@
+"""Deep autoencoder: DBN unroll + MapReduce back-propagation fine-tuning.
+
+This is the paper's unsupervised pipeline (Figs. 6/10/12): the RBM stack is
+unrolled into encoder+decoder (decoder weights = transposed encoder weights as
+*initialization*, then trained independently) and fine-tuned with the MapReduce
+BP job minimizing the sigmoid cross-entropy reconstruction loss (Hinton &
+Salakhutdinov 2006).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from .mapreduce import mapreduce_value_and_grad
+
+
+def unroll(stack_params: Sequence[dict]) -> Dict[str, list]:
+    """RBM stack -> autoencoder params {enc_W, enc_b, dec_W, dec_b} lists."""
+    enc_W = [jnp.asarray(p["W"]) for p in stack_params]
+    enc_b = [jnp.asarray(p["bh"]) for p in stack_params]
+    dec_W = [jnp.asarray(p["W"]).T for p in reversed(stack_params)]
+    dec_b = [jnp.asarray(p["bv"]) for p in reversed(stack_params)]
+    return {"enc_W": enc_W, "enc_b": enc_b, "dec_W": dec_W, "dec_b": dec_b}
+
+
+def encode(params, v, linear_code: bool = True):
+    h = v
+    n = len(params["enc_W"])
+    for i, (w, b) in enumerate(zip(params["enc_W"], params["enc_b"])):
+        z = h @ w + b
+        h = z if (linear_code and i == n - 1) else jax.nn.sigmoid(z)
+    return h
+
+
+def decode(params, code):
+    h = code
+    n = len(params["dec_W"])
+    for i, (w, b) in enumerate(zip(params["dec_W"], params["dec_b"])):
+        z = h @ w + b
+        h = jax.nn.sigmoid(z)  # final layer sigmoid: pixels in [0,1]
+    return h
+
+
+def reconstruct(params, v):
+    return decode(params, encode(params, v))
+
+
+def recon_loss(params, batch):
+    """Sigmoid cross-entropy reconstruction loss (per Hinton's fine-tuning)."""
+    v = batch["x"]
+    r = jnp.clip(reconstruct(params, v), 1e-6, 1 - 1e-6)
+    ce = -jnp.mean(jnp.sum(v * jnp.log(r) + (1 - v) * jnp.log(1 - r), axis=-1))
+    mse = jnp.mean(jnp.sum(jnp.square(v - r), axis=-1))
+    return ce, {"mse": mse}
+
+
+def make_finetune_step(mesh: Optional[Mesh], lr: float = 0.05,
+                       reduce_mode: str = "allreduce", n_micro: int = 1):
+    """MapReduce BP fine-tuning step with plain SGD-momentum."""
+    if mesh is None:
+        vg = jax.value_and_grad(recon_loss, has_aux=True)
+
+        @jax.jit
+        def step(params, vel, batch):
+            (loss, aux), grads = vg(params, batch)
+            vel = jax.tree.map(lambda v, g: 0.9 * v - lr * g, vel, grads)
+            params = jax.tree.map(lambda p, v: p + v, params, vel)
+            return params, vel, loss, aux
+        return step
+
+    mr = mapreduce_value_and_grad(recon_loss, mesh, reduce_mode=reduce_mode,
+                                  n_micro=n_micro)
+
+    @jax.jit
+    def step(params, vel, batch):
+        loss, grads, _, aux = mr(params, batch, None)
+        vel = jax.tree.map(lambda v, g: 0.9 * v - lr * g, vel, grads)
+        params = jax.tree.map(lambda p, v: p + v, params, vel)
+        return params, vel, loss, aux
+
+    return step
+
+
+def reconstruction_error(params, data: np.ndarray, batch: int = 1000) -> float:
+    """Mean per-image squared reconstruction error (the paper's Fig. 6 metric)."""
+    tot, n = 0.0, 0
+    f = jax.jit(lambda p, v: jnp.sum(jnp.square(v - reconstruct(p, v))))
+    for i in range(0, len(data), batch):
+        v = jnp.asarray(data[i:i + batch], jnp.float32)
+        tot += float(f(params, v))
+        n += v.shape[0]
+    return tot / max(1, n)

@@ -1,0 +1,114 @@
+"""Deep-belief-network driver — the paper's Algorithm 1 (`DeepLearningDriver`).
+
+Greedy layer-wise loop: for each layer, run ``maxEpoch`` epochs of MapReduce RBM
+jobs (Algorithms 2/3), then one forward-propagation MapReduce job (Algorithm 4)
+whose output becomes the next layer's "data".  The learned stack unrolls into a
+deep autoencoder (``core.autoencoder``) or a classifier (``core.finetune``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from .mapreduce import map_reduce_job
+from .rbm import RBMConfig, hidden_probs, make_rbm_step, rbm_init
+
+
+@dataclasses.dataclass(frozen=True)
+class DBNConfig:
+    stack: Sequence[int]              # e.g. (784, 1000, 500, 250, 30)
+    max_epoch: int = 10
+    batch_size: int = 100
+    lr: float = 0.1
+    momentum: float = 0.5
+    cd_k: int = 1
+    weight_decay: float = 2e-4
+    use_kernel: bool = False
+    log_every: int = 0
+
+
+def train_dbn(
+    data: np.ndarray,                 # [N, stack[0]] in [0, 1]
+    cfg: DBNConfig,
+    key,
+    mesh: Optional[Mesh] = None,
+    callback: Optional[Callable] = None,
+) -> List[dict]:
+    """Algorithm 1. Returns the trained RBM stack (list of param dicts)."""
+    layer_input = jnp.asarray(data, jnp.float32)
+    stack_params: List[dict] = []
+    n = layer_input.shape[0]
+
+    for layer in range(len(cfg.stack) - 1):
+        rcfg = RBMConfig(n_vis=cfg.stack[layer], n_hid=cfg.stack[layer + 1],
+                         lr=cfg.lr, momentum=cfg.momentum, cd_k=cfg.cd_k,
+                         weight_decay=cfg.weight_decay, use_kernel=cfg.use_kernel)
+        key, sub = jax.random.split(key)
+        p = rbm_init(sub, rcfg)
+        vel = jax.tree.map(jnp.zeros_like, p)
+        step = make_rbm_step(rcfg, mesh)
+
+        nb = n // cfg.batch_size
+        for epoch in range(cfg.max_epoch):
+            key, sub = jax.random.split(key)
+            perm = jax.random.permutation(sub, n)[: nb * cfg.batch_size]
+            errs = []
+            for b in range(nb):
+                idx = perm[b * cfg.batch_size:(b + 1) * cfg.batch_size]
+                batch = layer_input[idx]
+                key, sub = jax.random.split(key)
+                p, vel, err = step(p, vel, batch, sub, epoch)
+                errs.append(float(err))
+            if callback:
+                callback(layer=layer, epoch=epoch, recon_err=float(np.mean(errs)))
+            if cfg.log_every and epoch % cfg.log_every == 0:
+                print(f"[dbn] layer {layer} epoch {epoch} recon_err {np.mean(errs):.5f}")
+        stack_params.append(jax.device_get(p))
+
+        # Algorithm 4: forward-propagation job to produce the next layer's input
+        prop = map_reduce_job(
+            lambda pp, batch: hidden_probs(pp, batch, cfg.use_kernel),
+            mesh, reduce="concat")
+        layer_input = jax.jit(prop)(
+            {k: jnp.asarray(v) for k, v in stack_params[-1].items()}, layer_input)
+
+    return stack_params
+
+
+def forward_stack(stack_params: Sequence[dict], v: jax.Array) -> jax.Array:
+    """Encode data through the trained stack (all sigmoid layers)."""
+    h = v
+    for p in stack_params:
+        h = jax.nn.sigmoid(h @ p["W"] + p["bh"])
+    return h
+
+
+def progressive_stack_lm(train_fn, grow_schedule: Sequence[int]):
+    """Beyond-paper: the greedy layer-wise idea carried to LM pre-training
+    (progressive stacking).  ``train_fn(n_layers, init_params) -> params`` is
+    invoked per stage; each stage initializes the deeper model by duplicating
+    the shallower stage's stacked layer params.
+
+    Returns the final params.  (Carries the paper's layer-wise-init insight to
+    architectures where RBM pre-training is inapplicable — see DESIGN.md §5.)"""
+    params = None
+    for n_layers in grow_schedule:
+        params = train_fn(n_layers, params)
+    return params
+
+
+def grow_stacked_params(params, n_new: int):
+    """Duplicate stacked [L, ...] block params to depth ``n_new`` (cycled)."""
+    def grow(x):
+        if x.ndim == 0:
+            return x
+        L = x.shape[0]
+        reps = [x[i % L] for i in range(n_new)]
+        return jnp.stack(reps)
+    return jax.tree.map(grow, params)

@@ -1,0 +1,75 @@
+"""Supervised fine-tuning (paper §IV-B): the DBN stack + softmax head trained
+with MapReduce back-propagation — the hand-written-digit recognizer of Figs. 7/9/11."""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from .mapreduce import mapreduce_value_and_grad
+
+
+def classifier_init(stack_params: Sequence[dict], n_classes: int, key) -> Dict:
+    """Encoder layers initialized from the pre-trained RBM stack (the paper's
+    'well-initialized weights'), plus a fresh softmax head."""
+    Ws = [jnp.asarray(p["W"]) for p in stack_params]
+    bs = [jnp.asarray(p["bh"]) for p in stack_params]
+    head = 0.01 * jax.random.normal(key, (Ws[-1].shape[1], n_classes), jnp.float32)
+    return {"W": Ws, "b": bs, "head_W": head,
+            "head_b": jnp.zeros((n_classes,), jnp.float32)}
+
+
+def logits_fn(params, v):
+    h = v
+    for w, b in zip(params["W"], params["b"]):
+        h = jax.nn.sigmoid(h @ w + b)
+    return h @ params["head_W"] + params["head_b"]
+
+
+def ce_loss(params, batch):
+    lg = logits_fn(params, batch["x"])
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, batch["y"][:, None], axis=-1)[:, 0]
+    loss = jnp.mean(lse - gold)
+    acc = jnp.mean((jnp.argmax(lg, -1) == batch["y"]).astype(jnp.float32))
+    return loss, {"acc": acc}
+
+
+def make_classifier_step(mesh: Optional[Mesh], lr: float = 0.1,
+                         reduce_mode: str = "allreduce", n_micro: int = 1):
+    if mesh is None:
+        vg = jax.value_and_grad(ce_loss, has_aux=True)
+
+        @jax.jit
+        def step(params, vel, batch):
+            (loss, aux), grads = vg(params, batch)
+            vel = jax.tree.map(lambda v, g: 0.9 * v - lr * g, vel, grads)
+            params = jax.tree.map(lambda p, v: p + v, params, vel)
+            return params, vel, loss, aux
+        return step
+
+    mr = mapreduce_value_and_grad(ce_loss, mesh, reduce_mode=reduce_mode,
+                                  n_micro=n_micro)
+
+    @jax.jit
+    def step(params, vel, batch):
+        loss, grads, _, aux = mr(params, batch, None)
+        vel = jax.tree.map(lambda v, g: 0.9 * v - lr * g, vel, grads)
+        params = jax.tree.map(lambda p, v: p + v, params, vel)
+        return params, vel, loss, aux
+
+    return step
+
+
+def error_rate(params, X: np.ndarray, y: np.ndarray, batch: int = 1000) -> float:
+    """Misclassification rate (the paper's Fig. 7 metric)."""
+    wrong, n = 0, 0
+    f = jax.jit(lambda p, v: jnp.argmax(logits_fn(p, v), -1))
+    for i in range(0, len(X), batch):
+        pred = np.asarray(f(params, jnp.asarray(X[i:i + batch], jnp.float32)))
+        wrong += int((pred != y[i:i + batch]).sum())
+        n += len(pred)
+    return wrong / max(1, n)

@@ -1,0 +1,119 @@
+"""Restricted Boltzmann Machine with CD-k — the paper's Algorithm 2/3 mapper/reducer.
+
+Function names follow the paper's pseudo-code (`getposphase`, `getnegphase`,
+`update`).  The mapper computes the CD statistics for its (micro)batch; the
+reducer is the cross-device mean delivered by the MapReduce engine.  Following
+Hinton's practical guide: hidden *probabilities* are used for statistics, hidden
+*samples* drive the negative phase, and the reconstruction uses probabilities.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from .mapreduce import map_reduce_job
+
+
+@dataclasses.dataclass(frozen=True)
+class RBMConfig:
+    n_vis: int
+    n_hid: int
+    lr: float = 0.1
+    momentum: float = 0.5
+    final_momentum: float = 0.9
+    momentum_switch: int = 5          # epoch at which momentum increases
+    weight_decay: float = 2e-4
+    cd_k: int = 1
+    use_kernel: bool = False          # fused Pallas hidden-probs (interpret on CPU)
+
+
+def rbm_init(key, cfg: RBMConfig) -> Dict[str, jax.Array]:
+    w = 0.1 * jax.random.normal(key, (cfg.n_vis, cfg.n_hid), jnp.float32)
+    return {"W": w,
+            "bv": jnp.zeros((cfg.n_vis,), jnp.float32),
+            "bh": jnp.zeros((cfg.n_hid,), jnp.float32)}
+
+
+def hidden_probs(p, v, use_kernel: bool = False):
+    if use_kernel:
+        from ..kernels.rbm_cd import ops as _ops
+        return _ops.gemm_sigmoid(v, p["W"], p["bh"])
+    return jax.nn.sigmoid(v @ p["W"] + p["bh"])
+
+
+def visible_probs(p, h, use_kernel: bool = False):
+    if use_kernel:
+        from ..kernels.rbm_cd import ops as _ops
+        return _ops.gemm_sigmoid(h, p["W"].T, p["bv"])
+    return jax.nn.sigmoid(h @ p["W"].T + p["bv"])
+
+
+def getposphase(p, v, key, use_kernel=False):
+    """Positive phase: hidden probabilities + samples for one batch."""
+    h_prob = hidden_probs(p, v, use_kernel)
+    h_sample = (jax.random.uniform(key, h_prob.shape) < h_prob).astype(v.dtype)
+    return h_prob, h_sample
+
+
+def getnegphase(p, h_sample, key, cd_k: int = 1, use_kernel=False):
+    """Negative (reconstruction) phase, CD-k."""
+    h = h_sample
+    for i in range(cd_k):
+        v_prob = visible_probs(p, h, use_kernel)
+        h_prob = hidden_probs(p, v_prob, use_kernel)
+        if i < cd_k - 1:
+            h = (jax.random.uniform(jax.random.fold_in(key, i), h_prob.shape)
+                 < h_prob).astype(v_prob.dtype)
+    return v_prob, h_prob
+
+
+def cd_statistics(p, v, key, cfg: RBMConfig):
+    """The mapper: per-batch CD statistics (already combiner-aggregated)."""
+    k1, k2 = jax.random.split(key)
+    h_prob, h_sample = getposphase(p, v, k1, cfg.use_kernel)
+    v_neg, h_neg = getnegphase(p, h_sample, k2, cfg.cd_k, cfg.use_kernel)
+    B = v.shape[0]
+    dW = (v.T @ h_prob - v_neg.T @ h_neg) / B
+    dbv = jnp.mean(v - v_neg, axis=0)
+    dbh = jnp.mean(h_prob - h_neg, axis=0)
+    err = jnp.mean(jnp.square(v - v_neg))
+    return {"W": dW, "bv": dbv, "bh": dbh, "err": err}
+
+
+def update(p, vel, stats, cfg: RBMConfig, epoch):
+    """Momentum update from reduced statistics (the paper's weight update)."""
+    mom = jnp.where(jnp.asarray(epoch) >= cfg.momentum_switch,
+                    cfg.final_momentum, cfg.momentum)
+    new_vel = {
+        "W": mom * vel["W"] + cfg.lr * (stats["W"] - cfg.weight_decay * p["W"]),
+        "bv": mom * vel["bv"] + cfg.lr * stats["bv"],
+        "bh": mom * vel["bh"] + cfg.lr * stats["bh"],
+    }
+    new_p = {k: p[k] + new_vel[k] for k in p}
+    return new_p, new_vel
+
+
+def make_rbm_step(cfg: RBMConfig, mesh: Optional[Mesh]):
+    """Jitted MapReduce CD step: (params, vel, batch, key, epoch) -> (p, vel, err)."""
+    job = map_reduce_job(
+        lambda pk, batch: cd_statistics(pk[0], batch, pk[1], cfg),
+        mesh, reduce="mean")
+
+    @jax.jit
+    def step(p, vel, batch, key, epoch):
+        stats = job((p, key), batch)
+        err = stats.pop("err")
+        new_p, new_vel = update(p, vel, stats, cfg, epoch)
+        return new_p, new_vel, err
+
+    return step
+
+
+def free_energy(p, v):
+    """RBM free energy (diagnostic; decreasing on train data = learning)."""
+    wx = v @ p["W"] + p["bh"]
+    return -v @ p["bv"] - jnp.sum(jax.nn.softplus(wx), axis=-1)

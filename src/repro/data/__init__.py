@@ -1,0 +1,3 @@
+from .synthetic_mnist import dataset, train_test  # noqa: F401
+from .dedup import dedup, duplicate_stats  # noqa: F401
+from .pipeline import Prefetcher, ShardedBatches, token_batches  # noqa: F401

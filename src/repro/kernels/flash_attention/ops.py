@@ -1,0 +1,32 @@
+"""Jit'd public wrapper for the flash attention kernel.
+
+On CPU (this container) the kernel body executes in interpret mode; on TPU the
+same ``pallas_call`` lowers to Mosaic.  The wrapper accepts the model-layout
+tensors ([B, S, H, D]) and handles the kernel's [B, H, S, D] layout.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_fwd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = None):
+    """q: [B, S, H, D]; k, v: [B, S, K, D] -> [B, S, H, D]."""
+    if interpret is None:
+        interpret = _on_cpu()
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    o = flash_attention_fwd(qt, kt, vt, causal=causal, block_q=block_q,
+                            block_k=block_k, interpret=interpret)
+    return jnp.swapaxes(o, 1, 2)

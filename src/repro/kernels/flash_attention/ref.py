@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True) -> jax.Array:
+    """q: [B, H, S, D]; k, v: [B, K, S, D]. Full-softmax reference."""
+    B, H, S, D = q.shape
+    K = k.shape[1]
+    G = H // K
+    qg = q.reshape(B, K, G, S, D)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    if causal:
+        pos = jnp.arange(S)
+        mask = pos[None, :] <= pos[:, None]
+        s = jnp.where(mask, s, -jnp.inf)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", a, v.astype(jnp.float32))
+    return o.reshape(B, H, S, D).astype(q.dtype)

@@ -1,0 +1,2 @@
+from .ops import gemm_sigmoid  # noqa: F401
+from .ref import gemm_sigmoid_ref  # noqa: F401

@@ -1,0 +1,21 @@
+"""Jit'd wrapper: fused hidden/visible-probability GEMM for RBM CD."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import gemm_sigmoid_fwd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret"))
+def gemm_sigmoid(x, w, b, *, block_m: int = 128, block_n: int = 128,
+                 block_k: int = 128, interpret: bool = None):
+    if interpret is None:
+        interpret = _on_cpu()
+    return gemm_sigmoid_fwd(x, w, b, block_m=block_m, block_n=block_n,
+                            block_k=block_k, interpret=interpret)

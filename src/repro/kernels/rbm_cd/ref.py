@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the fused RBM GEMM+sigmoid kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_sigmoid_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    z = x.astype(jnp.float32) @ w.astype(jnp.float32) + b.astype(jnp.float32)
+    return jax.nn.sigmoid(z).astype(x.dtype)

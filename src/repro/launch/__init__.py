@@ -1,0 +1,1 @@
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_host_mesh, make_production_mesh  # noqa: F401

@@ -1,0 +1,185 @@
+"""Compiled-artifact analysis: collective parsing + three-term roofline.
+
+``compiled.cost_analysis()`` on the CPU backend reports **per-device** (post-SPMD-
+partitioning) FLOPs and bytes; collective tensor shapes in the HLO are likewise
+per-device.  Roofline terms are therefore seconds-per-chip directly:
+
+    compute    = HLO_FLOPs / PEAK_FLOPS_BF16
+    memory     = HLO_bytes / HBM_BW
+    collective = wire_bytes / ICI_BW
+
+Wire bytes use ring-algorithm factors: all-reduce 2(n-1)/n, all-gather /
+reduce-scatter / all-to-all (n-1)/n, collective-permute 1.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, List, Optional
+
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLL = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+# e.g. "%all-gather.3 = bf16[8,128]{1,0} all-gather(..." or tuple results
+_LINE_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^ ]*\s*(?:,\s*[a-z0-9]+\[[0-9,]*\][^ ]*\s*)*(?:\))?\s*"
+    r"(all-reduce-start|all-gather-start|reduce-scatter|all-to-all|"
+    r"collective-permute-start|all-reduce|all-gather|collective-permute)\b")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _nelems(dims: str) -> int:
+    if not dims:
+        return 1
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n
+
+
+def parse_collectives(hlo_text: str) -> List[Dict]:
+    """Extract every collective op with per-device tensor + wire bytes."""
+    out = []
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, op = m.group(1), m.group(2), m.group(3)
+        op = op.replace("-start", "")
+        if op not in _COLL:
+            continue
+        # result may be a tuple (e.g. all-reduce of several tensors): sum all
+        head = line.split(op)[0]
+        shapes = _SHAPE_RE.findall(head)
+        nbytes = sum(_nelems(d) * _DTYPE_BYTES.get(t, 4) for t, d in shapes)
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            group = len(gm.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            group = int(gi.group(2)) if gi else 1
+        if group <= 1:
+            factor = 0.0
+        elif op == "all-reduce":
+            factor = 2.0 * (group - 1) / group
+        elif op == "collective-permute":
+            factor = 1.0
+        else:
+            factor = (group - 1) / group
+        out.append({"op": op, "bytes": nbytes, "group": group,
+                    "wire_bytes": nbytes * factor})
+    return out
+
+
+def collective_summary(hlo_text: str) -> Dict:
+    colls = parse_collectives(hlo_text)
+    by_op: Dict[str, Dict] = {}
+    for c in colls:
+        d = by_op.setdefault(c["op"], {"count": 0, "bytes": 0, "wire_bytes": 0.0})
+        d["count"] += 1
+        d["bytes"] += c["bytes"]
+        d["wire_bytes"] += c["wire_bytes"]
+    return {"ops": by_op,
+            "total_bytes": sum(c["bytes"] for c in colls),
+            "total_wire_bytes": sum(c["wire_bytes"] for c in colls),
+            "count": len(colls)}
+
+
+def roofline(flops_per_dev: float, bytes_per_dev: float,
+             wire_bytes_per_dev: float) -> Dict:
+    compute_s = flops_per_dev / PEAK_FLOPS_BF16
+    memory_s = bytes_per_dev / HBM_BW
+    coll_s = wire_bytes_per_dev / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s}
+    dom = max(terms, key=terms.get)
+    total = max(terms.values())
+    return {**terms, "dominant": dom.replace("_s", ""),
+            "step_lower_bound_s": total,
+            "compute_fraction": compute_s / total if total else 0.0}
+
+
+def attn_score_traffic(cfg, shape, mesh_axes: Dict[str, int]) -> float:
+    """Per-device HBM bytes attributable to materialized attention-score
+    tensors in the XLA (non-flash) attention path.  The Pallas flash kernel
+    (kernels/flash_attention) keeps these blocks in VMEM, so the 'with flash'
+    roofline subtracts this traffic.  Factors: train ≈ 6 passes over the score
+    tensor (fwd write+read, remat re-fwd, bwd dS write+read), prefill ≈ 2.
+    """
+    if not cfg.n_heads:
+        return 0.0
+    if shape.kind == "decode":
+        return 0.0                      # one q row; negligible and streamed
+    S, B = shape.seq_len, shape.global_batch
+    model = mesh_axes.get("model", 1)
+    dp = 1
+    for a in ("pod", "data"):
+        dp *= mesh_axes.get(a, 1)
+    H = cfg.n_heads
+    h_local = H // model if H % model == 0 else H   # non-divisible -> replicated
+    b_local = max(1, B // dp)
+    L = cfg.n_layers if not cfg.enc_dec else cfg.n_enc_layers + cfg.n_dec_layers
+    if cfg.family == "hybrid":
+        L = max(1, cfg.n_layers // len(cfg.block_pattern or (1,)))
+    win = cfg.attn_window if cfg.family == "hybrid" else cfg.sliding_window
+    pairs = (S * min(win, S)) if win else (S * S * 0.5)
+    passes = 6.0 if shape.kind == "train" else 2.0
+    return passes * 4.0 * b_local * h_local * pairs * L
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful-work FLOPs: 6·N·D for training, 2·N·D for inference forward, with
+    the quadratic attention term added explicitly.  MoE counts active params."""
+    N = cfg.param_count(active_only=True)
+    S, B = shape.seq_len, shape.global_batch
+    if shape.kind == "train":
+        D = S * B
+        base = 6.0 * N * D
+        mult = 3.0          # fwd + 2x bwd
+    elif shape.kind == "prefill":
+        D = S * B
+        base = 2.0 * N * D
+        mult = 1.0
+    else:  # decode: one token per sequence
+        D = B
+        base = 2.0 * N * D
+        mult = 1.0
+    attn = 0.0
+    if cfg.n_heads and not cfg.use_mla:
+        hd = cfg.head_dim_
+        H = cfg.n_heads
+        L = cfg.n_layers if not cfg.enc_dec else cfg.n_enc_layers + cfg.n_dec_layers
+        if shape.kind == "decode":
+            ctx = min(S, cfg.attn_window or S) if cfg.family == "hybrid" else S
+            attn = 4.0 * B * ctx * H * hd * L * mult
+            if cfg.family == "hybrid":
+                n_g, tail, n_attn = 0, 0, 0
+                attn *= (cfg.n_layers // 3) / cfg.n_layers  # only attn layers
+        else:
+            causal = 0.5
+            win = cfg.attn_window if cfg.family == "hybrid" else (cfg.sliding_window or 0)
+            if win:
+                ctx_pairs = min(win, S) * S
+            else:
+                ctx_pairs = S * S * causal
+            n_attn_layers = L if cfg.family != "hybrid" else max(1, cfg.n_layers // 3)
+            attn = 4.0 * B * ctx_pairs * H * hd * n_attn_layers * mult
+    elif cfg.use_mla:
+        L = cfg.n_layers
+        qk = cfg.nope_head_dim + cfg.rope_head_dim
+        H = cfg.n_heads
+        if shape.kind == "decode":
+            attn = 2.0 * B * S * (cfg.kv_lora_rank + cfg.rope_head_dim) * H * 2
+        else:
+            attn = 4.0 * B * S * S * 0.5 * H * (qk + cfg.v_head_dim) / 2 * L * \
+                (3.0 if shape.kind == "train" else 1.0)
+    return base + attn

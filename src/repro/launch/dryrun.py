@@ -1,0 +1,218 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the production
+meshes, with ShapeDtypeStruct stand-ins (zero allocation), and record the
+memory / cost / collective analysis that feeds EXPERIMENTS.md §Dry-run/§Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
+"""
+import argparse     # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+import jax          # noqa: E402
+
+from ..configs import ARCHS, SHAPES, get_arch, get_shape, supports   # noqa: E402
+from ..models.params import sharded_bytes   # noqa: E402
+from ..models.registry import build_model, input_defs   # noqa: E402
+from ..models.steps import (abstract_serve_args, abstract_train_args,   # noqa: E402
+                            make_serve_step, make_train_step,
+                            serve_shardings, train_shardings)
+from ..optim import OptConfig, opt_state_defs   # noqa: E402
+from . import analysis, hlo_cost   # noqa: E402
+from .mesh import make_production_mesh   # noqa: E402
+
+
+def dryrun_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
+                opt_name: str = "adamw", remat: str = None,
+                unroll: bool = False, overrides: dict = None,
+                engine: str = "pjit", reduce_mode: str = "allreduce",
+                verbose: bool = True) -> dict:
+    import dataclasses
+    cfg = get_arch(arch_name)
+    # the compiled program keeps its layer scans (realistic compile times &
+    # buffers); roofline terms come from the loop-aware HLO walker
+    # (launch.hlo_cost), which multiplies while bodies by their trip counts.
+    cfg = dataclasses.replace(cfg, unroll=unroll, **(overrides or {}))
+    if remat:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    shape = get_shape(shape_name)
+    ok, why = supports(cfg, shape)
+    if not ok:
+        return {"arch": arch_name, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skip", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    opt_cfg = OptConfig(name=opt_name)
+    t0 = time.perf_counter()
+
+    if shape.kind == "train":
+        step = make_train_step(cfg, mesh, opt_cfg, engine=engine,
+                               reduce_mode=reduce_mode)
+        args = abstract_train_args(cfg, shape, mesh, opt_cfg)
+        shards = train_shardings(cfg, shape, mesh, opt_cfg)
+        fn = jax.jit(step, in_shardings=shards,
+                     out_shardings=(shards[0], shards[1], None))
+    elif shape.kind == "prefill":
+        step = make_serve_step(cfg, mesh, "prefill")
+        p_sh, b_sh = serve_shardings(cfg, shape, mesh)
+        args = abstract_serve_args(cfg, shape, mesh)
+        fn = jax.jit(step, in_shardings=(p_sh, b_sh), out_shardings=None)
+    else:  # decode
+        step = make_serve_step(cfg, mesh, "decode")
+        p_sh, c_sh, t_sh = serve_shardings(cfg, shape, mesh)
+        args = abstract_serve_args(cfg, shape, mesh)
+        fn = jax.jit(step, in_shardings=(p_sh, c_sh, t_sh),
+                     out_shardings=(t_sh, c_sh))
+
+    with jax.sharding.set_mesh(mesh):
+        lowered = fn.lower(*args)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    hc = hlo_cost.module_cost(hlo)
+    flops_dev = hc.flops
+    bytes_dev = hc.bytes
+    roof = analysis.roofline(flops_dev, bytes_dev, hc.wire_bytes)
+    mflops = analysis.model_flops(cfg, shape)
+    # "with Pallas flash attention" variant: score blocks stay in VMEM
+    mesh_axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    score_traffic = analysis.attn_score_traffic(cfg, shape, mesh_axes)
+    roof_flash = analysis.roofline(
+        flops_dev, max(bytes_dev - score_traffic, flops_dev / 500.0),
+        hc.wire_bytes)
+
+    # analytic steady-state memory (CPU buffer assignment over-reports: XLA:CPU
+    # schedules for thread parallelism, not memory; see EXPERIMENTS.md)
+    model = build_model(cfg)
+    pdefs = model.param_defs()
+    p_bytes = sharded_bytes(pdefs, mesh)
+    if shape.kind == "train":
+        o_bytes = sharded_bytes(opt_state_defs(pdefs, opt_cfg), mesh)
+        g_bytes = p_bytes                           # bf16 grad transient (n_micro=1)
+        dp = 1
+        for a in ("pod", "data"):
+            if a in mesh.shape:
+                dp *= mesh.shape[a]
+        n_layers = (cfg.n_layers if not cfg.enc_dec
+                    else cfg.n_enc_layers + cfg.n_dec_layers)
+        resid = (n_layers * (shape.global_batch // dp) * shape.seq_len
+                 * cfg.d_model * 2)                 # remat residuals (bf16)
+        if cfg.seq_parallel and "model" in mesh.shape:
+            resid //= mesh.shape["model"]           # SP shards the residuals
+        analytic = p_bytes + o_bytes + g_bytes + resid
+    else:
+        c_bytes = (sharded_bytes(model.cache_defs(shape.global_batch,
+                                                  shape.seq_len), mesh)
+                   if shape.kind == "decode" else 0)
+        analytic = p_bytes + c_bytes
+        o_bytes = 0
+    analytic_gb = analytic / 1e9
+
+    per_dev_bytes = {
+        "argument": mem.argument_size_in_bytes,
+        "output": mem.output_size_in_bytes,
+        "temp": mem.temp_size_in_bytes,
+        "alias": mem.alias_size_in_bytes,
+        "code": mem.generated_code_size_in_bytes,
+    }
+    live = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+    rec = {
+        "arch": arch_name, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "status": "ok",
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "per_device_bytes": per_dev_bytes,
+        "live_bytes_per_device": live,
+        "analytic_bytes_per_device": analytic,
+        "params_bytes_per_device": p_bytes,
+        "opt_bytes_per_device": o_bytes,
+        "fits_16GB": bool(analytic < 16e9),
+        "hlo_flops_per_device": flops_dev,
+        "hlo_bytes_per_device": bytes_dev,
+        "xla_cost_flops_loop_blind": float(cost.get("flops", 0.0)),
+        "collectives": {"ops": {k: {"count": v,
+                                    "wire_bytes": hc.coll_wire_by_op[k]}
+                                for k, v in hc.coll_counts.items()},
+                        "total_bytes": hc.coll_bytes,
+                        "total_wire_bytes": hc.wire_bytes},
+        "roofline": roof,
+        "attn_score_bytes_per_device": score_traffic,
+        "roofline_flash": roof_flash,
+        "model_flops_global": mflops,
+        "model_flops_per_device": mflops / n_chips,
+        "useful_flops_ratio": (mflops / n_chips) / flops_dev if flops_dev else 0.0,
+    }
+    if verbose:
+        print(json.dumps({k: rec[k] for k in
+                          ("arch", "shape", "mesh", "status", "compile_s",
+                           "analytic_bytes_per_device", "fits_16GB")}, indent=None))
+        print("  memory_analysis:", per_dev_bytes)
+        print("  cost(loop-aware): flops/dev=%.3e bytes/dev=%.3e" % (flops_dev, bytes_dev))
+        print("  collectives:", json.dumps(rec["collectives"]["ops"]))
+        print("  roofline:", json.dumps(roof))
+        print("  useful_flops_ratio: %.3f" % rec["useful_flops_ratio"])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--opt", default="adamw")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--unroll", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    archs = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multipod]
+
+    results = []
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                try:
+                    rec = dryrun_cell(a, s, multi_pod=mp, opt_name=args.opt,
+                                      remat=args.remat,
+                                      unroll=args.unroll)
+                except Exception as e:  # a failed cell is a bug: record it
+                    traceback.print_exc()
+                    rec = {"arch": a, "shape": s,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "error", "error": f"{type(e).__name__}: {e}"}
+                results.append(rec)
+                if args.out:
+                    os.makedirs(args.out, exist_ok=True)
+                    fn = os.path.join(
+                        args.out, f"{a}__{s}__{rec['mesh']}.json")
+                    with open(fn, "w") as f:
+                        json.dump(rec, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\n== dry-run: {n_ok} ok, {n_skip} skip, {n_err} error "
+          f"of {len(results)} cells ==")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,282 @@
+"""Loop-aware HLO cost model.
+
+``compiled.cost_analysis()`` visits each ``while`` body **once**, so any program
+that scans over layers (which every production LM must, for compile time)
+under-reports FLOPs/bytes/collectives by ~n_layers.  This module walks the
+optimized HLO text, computes per-computation costs, parses each while loop's
+trip count from its condition, and accumulates ``entry + Σ trip_i × body_i``
+(handling nesting multiplicatively).
+
+Costs per op:
+  * ``dot``: 2 × |result| × K  (K = product of lhs contracting dims)
+  * ``convolution``: 2 × |result| × K_window
+  * elementwise/other: |result| FLOPs (1 op/element; softmax/norm/scan honesty)
+  * bytes: |result| + Σ|operands|, counted only for *materializing* ops
+    (dot/conv/fusion/reduce/gather/scatter/copy/transpose/...).  Standalone
+    elementwise ops are skipped: on the TPU target XLA fuses them into
+    neighbors, so charging their operands as HBM traffic would bake the CPU
+    backend's weak fusion into the roofline.  This mirrors XLA:TPU's
+    post-fusion accounting, conservatively.
+  * collectives: wire-byte model (ring factors)
+
+Validated against cost_analysis() on fully-unrolled programs in
+tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+"
+                     r"([a-z][\w\-]*)\(")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# ops whose operands/results genuinely hit HBM on the TPU target; everything
+# else is assumed fused into a neighbor (elementwise, broadcast, compare, ...)
+_MATERIALIZING = {
+    "dot", "convolution", "fusion", "reduce", "reduce-window", "scatter",
+    "gather", "dynamic-slice", "dynamic-update-slice", "copy", "transpose",
+    "concatenate", "pad", "sort", "rng", "rng-bit-generator", "slice",
+    "reverse", "iota", "custom-call",
+}
+
+
+def _shape_bytes(typestr: str) -> int:
+    total = 0
+    for t, dims in _SHAPE_RE.findall(typestr):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(t, 4)
+    return total
+
+
+def _shape_elems(typestr: str) -> int:
+    total = 0
+    for _, dims in _SHAPE_RE.findall(typestr):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    typestr: str
+    opcode: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    ops: List[Op]
+    shapes: Dict[str, str]        # symbol -> type string (incl. params)
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if current is None:
+            if line and not line.startswith(" ") and "{" in line and "->" in line:
+                m = _COMP_RE.match(line)
+                if m:
+                    current = Computation(m.group(2), bool(m.group(1)), [], {})
+                    # parameter shapes from the signature
+                    sig = line[line.find("(") + 1:line.rfind("->")]
+                    for pm in re.finditer(r"([\w\.\-]+):\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^,)]*))", sig):
+                        current.shapes[pm.group(1)] = pm.group(2)
+            continue
+        if line.strip() == "}":
+            comps[current.name] = current
+            current = None
+            continue
+        m = _DEF_RE.match(line)
+        if m:
+            name, typestr, opcode = m.group(1), m.group(2), m.group(3)
+            current.shapes[name] = typestr
+            current.ops.append(Op(name, typestr, opcode, line.strip()))
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    consts = [int(c) for op in cond.ops for c in _CONST_RE.findall(op.line)]
+    sig_consts = [int(c) for c in _CONST_RE.findall(
+        " ".join(o.line for o in cond.ops))]
+    allc = consts + sig_consts
+    return max(allc) if allc else 1
+
+
+def _collective_wire(op: Op) -> Tuple[int, float, int]:
+    nbytes = _shape_bytes(op.typestr)
+    gm = _GROUPS_RE.search(op.line)
+    if gm:
+        group = len(gm.group(1).split(","))
+    else:
+        gi = _GROUPS_IOTA_RE.search(op.line)
+        group = int(gi.group(2)) if gi else 1
+    kind = op.opcode.replace("-start", "").replace("-done", "")
+    if group <= 1:
+        factor = 0.0
+    elif kind == "all-reduce":
+        factor = 2.0 * (group - 1) / group
+    elif kind == "collective-permute":
+        factor = 1.0
+    else:
+        factor = (group - 1) / group
+    return nbytes, nbytes * factor, group
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_counts: Counter = dataclasses.field(default_factory=Counter)
+    coll_wire_by_op: Counter = dataclasses.field(default_factory=Counter)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.wire_bytes += other.wire_bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] += v * mult
+        for k, v in other.coll_wire_by_op.items():
+            self.coll_wire_by_op[k] += v * mult
+
+
+def _fusion_flops(comp: Computation, comps) -> float:
+    """dot/conv FLOPs inside a fused computation (elementwise excluded; the
+    fusion's output element count is charged at the call site)."""
+    fl = 0.0
+    for op in comp.ops:
+        if op.opcode in ("dot", "convolution"):
+            fl += _dot_flops(op, comp)
+        elif op.opcode == "fusion":
+            cm = _CALLS_RE.search(op.line)
+            if cm and cm.group(1) in comps:
+                fl += _fusion_flops(comps[cm.group(1)], comps)
+    return fl
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_elems = _shape_elems(op.typestr)
+    operands = _OPERAND_RE.findall(op.line.split("(", 1)[1])
+    k = 1
+    cm = _CONTRACT_RE.search(op.line)
+    if cm and operands:
+        lhs_shape = comp.shapes.get(operands[0], "")
+        sm = _SHAPE_RE.search(lhs_shape)
+        if sm and sm.group(2):
+            dims = [int(d) for d in sm.group(2).split(",")]
+            for ci in cm.group(1).split(","):
+                if ci != "" and int(ci) < len(dims):
+                    k *= dims[int(ci)]
+    return 2.0 * out_elems * k
+
+
+def _comp_cost(comp: Computation, comps: Dict[str, Computation],
+               memo: Dict[str, Cost]) -> Cost:
+    if comp.name in memo:
+        return memo[comp.name]
+    c = Cost()
+    for op in comp.ops:
+        kind = op.opcode.replace("-start", "").replace("-done", "")
+        if op.opcode.endswith("-done"):
+            continue                      # async pair: count at -start
+        if kind in _COLLECTIVES:
+            nbytes, wire, group = _collective_wire(op)
+            c.coll_bytes += nbytes
+            c.wire_bytes += wire
+            c.coll_counts[kind] += 1
+            c.coll_wire_by_op[kind] += wire
+            c.bytes += 2 * nbytes
+            continue
+        if op.opcode == "while":
+            m = _WHILE_RE.search(op.line)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                tm = _TRIP_RE.search(op.line)   # XLA's own annotation, if present
+                if tm:
+                    trip = int(tm.group(1))
+                else:
+                    trip = _trip_count(comps[cond]) if cond in comps else 1
+                if body in comps:
+                    c.add(_comp_cost(comps[body], comps, memo), max(1, trip))
+            continue
+        if op.opcode in ("call", "conditional", "async-start"):
+            for name in _CALLS_RE.findall(op.line):
+                if name in comps:
+                    c.add(_comp_cost(comps[name], comps, memo))
+            continue
+        # ---- plain op ----
+        out_bytes = _shape_bytes(op.typestr)
+        in_bytes = 0
+        if "(" in op.line:
+            for o in _OPERAND_RE.findall(op.line.split("(", 1)[1]):
+                if o in comp.shapes:
+                    in_bytes += _shape_bytes(comp.shapes[o])
+        if op.opcode in ("dot", "convolution"):
+            c.flops += _dot_flops(op, comp)
+            c.bytes += out_bytes + in_bytes
+        elif op.opcode == "fusion":
+            cm = _CALLS_RE.search(op.line)
+            if cm and cm.group(1) in comps:
+                c.flops += _fusion_flops(comps[cm.group(1)], comps)
+            c.flops += _shape_elems(op.typestr)      # elementwise estimate
+            # result-only: XLA:CPU fuses far less than XLA:TPU, so charging
+            # fusion *operands* as HBM reads would bake the CPU backend's
+            # fine fusion boundaries into the roofline (they dominated 92%
+            # of bytes before this fix).  Each tensor is charged once, as
+            # the write of whatever op produced it.
+            c.bytes += out_bytes
+        elif op.opcode in ("parameter", "constant", "get-tuple-element",
+                           "tuple", "bitcast", "copy-start", "copy-done"):
+            pass
+        else:
+            c.flops += _shape_elems(op.typestr)
+            if op.opcode in ("scatter", "gather", "dynamic-slice",
+                             "dynamic-update-slice", "sort", "rng",
+                             "rng-bit-generator"):
+                c.bytes += out_bytes + in_bytes
+            elif op.opcode in _MATERIALIZING:
+                c.bytes += 2 * out_bytes             # read + write of a copy
+    memo[comp.name] = c
+    return c
+
+
+def module_cost(hlo_text: str) -> Cost:
+    comps = parse_module(hlo_text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:                    # fall back: biggest computation
+        entry = max(comps.values(), key=lambda c: len(c.ops))
+    return _comp_cost(entry, comps, {})

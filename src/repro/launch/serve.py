@@ -1,0 +1,91 @@
+"""Batched serving driver: prefill a batch of prompts, then greedy-decode.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_arch, reduced as make_reduced
+from ..models.registry import build_model, init_cache, init_params
+from ..models.steps import make_serve_step
+
+
+def pad_cache_to(cache, max_len, model, cfg):
+    """Grow the prefill cache's sequence dim to max_len (zero-padded)."""
+    fresh = init_cache(cfg, cache["pos"].shape[0], max_len)
+
+    def merge(f, c):
+        if f.shape == c.shape:
+            return c
+        pad = [(0, fs - cs) for fs, cs in zip(f.shape, c.shape)]
+        return jnp.pad(c, pad)
+    return jax.tree.map(merge, fresh, cache)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = make_reduced(cfg)
+    cfg = dataclasses.replace(cfg, remat="none")
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(cfg, key)
+    max_len = args.prompt_len + args.gen
+
+    B = args.batch
+    toks = jax.random.randint(key, (B, args.prompt_len), 0, cfg.vocab)
+    if cfg.enc_dec:
+        batch = {"frames": jax.random.normal(
+            key, (B, args.prompt_len, cfg.frontend_dim), jnp.bfloat16),
+            "tokens": toks}
+    elif cfg.n_image_tokens:
+        batch = {"tokens": toks,
+                 "image_embeds": jax.random.normal(
+                     key, (B, cfg.n_image_tokens, cfg.frontend_dim), jnp.bfloat16)}
+    else:
+        batch = {"tokens": toks}
+
+    prefill = jax.jit(make_serve_step(cfg, None, "prefill"))
+    decode = jax.jit(make_serve_step(cfg, None, "decode"))
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, batch)
+    cache = pad_cache_to(cache, max_len, model, cfg)
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    t_prefill = time.perf_counter() - t0
+
+    out_tokens = [np.asarray(nxt)]
+    t0 = time.perf_counter()
+    for _ in range(args.gen - 1):
+        nxt, cache = decode(params, cache, nxt)
+        out_tokens.append(np.asarray(nxt))
+    jax.block_until_ready(nxt)
+    t_decode = time.perf_counter() - t0
+
+    gen = np.stack(out_tokens, axis=1)
+    print(f"[serve] {cfg.name}: prefill {args.prompt_len} tok x{B} in "
+          f"{t_prefill*1e3:.1f} ms; {args.gen-1} decode steps in "
+          f"{t_decode*1e3:.1f} ms ({(args.gen-1)*B/max(t_decode,1e-9):.1f} tok/s)")
+    print("[serve] sample generations:", gen[:2, :8].tolist())
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Dry-run sweep driver: one subprocess per (arch x shape x mesh) cell.
+
+Each cell gets a fresh process (fresh XLA device state, bounded RSS) and writes
+its JSON record under --out.  Already-completed cells are skipped, so the sweep
+is resumable — the same property the training loop gets from checkpoints.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+
+def cell_list(archs, shapes, meshes):
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                yield a, s, mp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--timeout", type=int, default=3000)
+    ap.add_argument("--remat", default=None)
+    args = ap.parse_args()
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", ".."))
+    from repro.configs import ARCHS, SHAPES
+
+    archs = [args.arch] if args.arch else sorted(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    os.makedirs(args.out, exist_ok=True)
+    results = []
+    t00 = time.time()
+    for a, s, mp in cell_list(archs, shapes, [False, True]):
+        mesh = "2x16x16" if mp else "16x16"
+        path = os.path.join(args.out, f"{a}__{s}__{mesh}.json")
+        if os.path.exists(path):
+            rec = json.load(open(path))
+            results.append(rec)
+            print(f"[sweep] cached {a} {s} {mesh}: {rec['status']}")
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", a,
+               "--shape", s, "--out", args.out]
+        if mp:
+            cmd.append("--multipod")
+        if args.remat:
+            cmd += ["--remat", args.remat]
+        t0 = time.time()
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..")),
+             env.get("PYTHONPATH", "")])
+        try:
+            proc = subprocess.run(cmd, capture_output=True, text=True,
+                                  timeout=args.timeout, env=env)
+            ok = proc.returncode == 0
+            tail = (proc.stdout + proc.stderr).strip().splitlines()[-3:]
+        except subprocess.TimeoutExpired:
+            ok, tail = False, ["TIMEOUT"]
+        if os.path.exists(path):
+            rec = json.load(open(path))
+        else:
+            rec = {"arch": a, "shape": s, "mesh": mesh, "status": "error",
+                   "error": "; ".join(tail)}
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+        results.append(rec)
+        print(f"[sweep] {a:24s} {s:12s} {mesh:8s} -> {rec['status']:5s} "
+              f"({time.time() - t0:.0f}s, total {time.time() - t00:.0f}s)",
+              flush=True)
+    n = {"ok": 0, "skip": 0, "error": 0}
+    for r in results:
+        n[r["status"]] = n.get(r["status"], 0) + 1
+    print(f"[sweep] done: {n}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .registry import (abstract_cache, abstract_params, build_model, init_cache,
+                       init_params, input_defs, input_specs)  # noqa: F401
+from .params import ParamDef, abstract_tree, init_tree, specs_tree, stack_tree  # noqa: F401

@@ -1,0 +1,189 @@
+"""Attention: GQA / MQA / MHA with RoPE, causal + sliding-window masks, KV cache.
+
+The training/prefill path is a *chunked* (query-blocked) attention: a ``lax.scan``
+over query blocks keeps the live score tensor at ``[B, H, q_block, S]`` instead of
+``[B, H, S, S]`` — this is what makes the 32k-prefill cells compile with sane
+``memory_analysis`` numbers, and it is the XLA analogue of the Pallas flash kernel
+(``repro.kernels.flash_attention``) that is the TPU target.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import apply_rope, rope_freqs
+from .params import ParamDef
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------ param defs
+
+def attn_defs(cfg: ArchConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    hd = cfg.head_dim_
+    h, k = cfg.n_heads_padded, cfg.n_kv_heads
+    defs = {
+        "wq": ParamDef((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((d, k, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((d, k, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((h, hd), ("heads", "head_dim"), init="zeros")
+        defs["bk"] = ParamDef((k, hd), ("kv_heads", "head_dim"), init="zeros")
+        defs["bv"] = ParamDef((k, hd), ("kv_heads", "head_dim"), init="zeros")
+    return defs
+
+
+def qkv(cfg: ArchConfig, p, x):
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", x, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return q, k, v
+
+
+# --------------------------------------------------------- chunked core attention
+
+def chunked_attention(
+    q: jax.Array,            # [B, Sq, H, D]
+    k: jax.Array,            # [B, Sk, K, D]
+    v: jax.Array,            # [B, Sk, K, D]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_block: int = 512,
+    softcap: float = 0.0,
+    q_offset: int = 0,       # absolute position of q[0] relative to k[0]
+    unroll: bool = False,
+) -> jax.Array:
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(D)
+    q_block = min(q_block, Sq)
+    # pad Sq to a multiple of q_block
+    pad = (-Sq) % q_block
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nb = q.shape[1] // q_block
+    qb = q.reshape(B, nb, q_block, K, G, D)
+    qb = jnp.moveaxis(qb, 1, 0)                      # [nb, B, q_block, K, G, D]
+    kpos = jnp.arange(k.shape[1])
+
+    def block(carry, inp):
+        qi, bidx = inp
+        qpos = q_offset + bidx * q_block + jnp.arange(q_block)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qi, k, preferred_element_type=jnp.float32)
+        s = s * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = jnp.ones((q_block, k.shape[1]), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        a = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", a, v)
+        return carry, o
+
+    # flash-style recompute: without this the q-block scan stacks every block's
+    # fp32 softmax residuals for backward ([nb, B, H, q, S] — tens of GB)
+    _, out = jax.lax.scan(jax.checkpoint(block), None, (qb, jnp.arange(nb)),
+                          unroll=unroll)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, nb * q_block, H, v.shape[-1])
+    if pad:
+        out = out[:, :Sq]
+    return out
+
+
+def full_attention_block(cfg: ArchConfig, p, x, freqs, *, causal=True, window=0,
+                         positions=None, q_block=512, unroll=False):
+    """Self-attention over a full sequence (train / prefill)."""
+    B, S, _ = x.shape
+    q, k, v = qkv(cfg, p, x)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    if freqs is not None:
+        q = apply_rope(q, positions, freqs)
+        k = apply_rope(k, positions, freqs)
+    o = chunked_attention(q, k, v, causal=causal, window=window, q_block=q_block,
+                          softcap=cfg.attn_logit_softcap, unroll=unroll)
+    return jnp.einsum("bshe,hed->bsd", o, p["wo"])
+
+
+def cross_attention_block(cfg: ArchConfig, p, x, enc_out, q_block=512, unroll=False):
+    """Decoder cross-attention (no rope, no mask)."""
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    k = jnp.einsum("bsd,dhe->bshe", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", enc_out, p["wv"])
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    o = chunked_attention(q, k, v, causal=False, q_block=q_block, unroll=unroll)
+    return jnp.einsum("bshe,hed->bsd", o, p["wo"])
+
+
+# ------------------------------------------------------------------- KV cache
+
+def cache_defs(cfg: ArchConfig, batch: int, max_len: int, window: int = 0):
+    """Abstract defs for one layer's KV cache. Ring buffer when window > 0."""
+    hd = cfg.head_dim_
+    L = min(window, max_len) if window else max_len
+    return {
+        "k": ParamDef((batch, L, cfg.n_kv_heads, hd), ("batch", "seq", "kv_heads", "head_dim"), init="zeros"),
+        "v": ParamDef((batch, L, cfg.n_kv_heads, hd), ("batch", "seq", "kv_heads", "head_dim"), init="zeros"),
+    }
+
+
+def decode_attention_block(cfg: ArchConfig, p, x, cache, pos, freqs, *, window=0):
+    """One-token decode step.  x: [B, d]; pos: [B] absolute positions; cache ring-
+    buffered when window > 0.  Returns (out [B, d], new_cache)."""
+    B = x.shape[0]
+    x1 = x[:, None, :]
+    q = jnp.einsum("bsd,dhe->bshe", x1, p["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", x1, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", x1, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if freqs is not None:
+        q = apply_rope(q, pos[:, None], freqs)
+        k = apply_rope(k, pos[:, None], freqs)
+    L = cache["k"].shape[1]
+    slot = (pos % L) if window else pos
+    b = jnp.arange(B)
+    ck = cache["k"].at[b, slot].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[b, slot].set(v[:, 0].astype(cache["v"].dtype))
+
+    scale = 1.0 / math.sqrt(cfg.head_dim_)
+    K = cfg.n_kv_heads
+    G = cfg.n_heads_padded // K
+    qg = q[:, 0].reshape(B, K, G, cfg.head_dim_)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, ck, preferred_element_type=jnp.float32) * scale
+    if cfg.attn_logit_softcap:
+        s = cfg.attn_logit_softcap * jnp.tanh(s / cfg.attn_logit_softcap)
+    idx = jnp.arange(L)
+    if window:
+        # slot is valid if it has been written and is within the window
+        age = jnp.minimum(pos[:, None] + 1, L)
+        # ring: entries idx written at absolute position pos - ((slot - idx) mod L)
+        k_abs = pos[:, None] - ((slot[:, None] - idx[None, :]) % L)
+        valid = (k_abs >= 0) & (k_abs <= pos[:, None]) & (k_abs > pos[:, None] - L)
+        del age
+    else:
+        valid = idx[None, :] <= pos[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1).astype(cv.dtype)
+    o = jnp.einsum("bkgs,bskd->bkgd", a, cv).reshape(
+        B, cfg.n_heads_padded, cfg.head_dim_)
+    out = jnp.einsum("bhe,hed->bd", o, p["wo"])
+    return out, {"k": ck, "v": cv}

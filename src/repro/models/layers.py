@@ -1,0 +1,120 @@
+"""Shared neural layers: norms, activations, MLPs, RoPE, embeddings."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .params import ParamDef
+
+# ----------------------------------------------------------------------------- norms
+
+def norm_defs(cfg: ArchConfig, d: int):
+    if cfg.norm == "layernorm":
+        return {"scale": ParamDef((d,), ("embed",), init="ones"),
+                "bias": ParamDef((d,), ("embed",), init="zeros")}
+    return {"scale": ParamDef((d,), ("embed",), init="ones")}
+
+
+def apply_norm(cfg: ArchConfig, p, x, eps: float = 1e-5):
+    if cfg.norm_fp32:
+        xf = x.astype(jnp.float32)
+        if cfg.norm == "layernorm":
+            mu = jnp.mean(xf, -1, keepdims=True)
+            var = jnp.var(xf, -1, keepdims=True)
+            y = (xf - mu) * jax.lax.rsqrt(var + eps)
+            y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+        else:  # rmsnorm
+            ms = jnp.mean(jnp.square(xf), -1, keepdims=True)
+            y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+        return y.astype(x.dtype)
+    # bf16 elementwise path: only the variance statistics are fp32, so the
+    # backward activation tensors (and their TP all-reduces) stay bf16
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(x.astype(jnp.float32), -1, keepdims=True)
+        var = jnp.var(x.astype(jnp.float32), -1, keepdims=True)
+        inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+        return (x - mu.astype(x.dtype)) * inv * p["scale"] + p["bias"]
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps).astype(x.dtype) * p["scale"]
+
+
+def rmsnorm(x, scale, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), -1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+# ----------------------------------------------------------------- activations
+
+def act_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "relu": jax.nn.relu,
+        "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+    }[name]
+
+# ------------------------------------------------------------------------ MLP
+
+def mlp_defs(cfg: ArchConfig, d: int, ff: int):
+    defs = {"down": ParamDef((ff, d), ("ff", "embed"))}
+    if cfg.mlp_gated:
+        defs["gate"] = ParamDef((d, ff), ("embed", "ff"))
+        defs["up"] = ParamDef((d, ff), ("embed", "ff"))
+    else:
+        defs["up"] = ParamDef((d, ff), ("embed", "ff"))
+        if cfg.qkv_bias:  # starcoder2-style biased MLP
+            defs["up_b"] = ParamDef((ff,), ("ff",), init="zeros")
+            defs["down_b"] = ParamDef((d,), ("embed",), init="zeros")
+    return defs
+
+
+def apply_mlp(cfg: ArchConfig, p, x):
+    act = act_fn(cfg.act)
+    if cfg.mlp_gated:
+        h = act(x @ p["gate"]) * (x @ p["up"])
+    else:
+        h = x @ p["up"]
+        if "up_b" in p:
+            h = h + p["up_b"]
+        h = act(h)
+    y = h @ p["down"]
+    if "down_b" in p:
+        y = y + p["down_b"]
+    return y
+
+# ----------------------------------------------------------------------- RoPE
+
+def rope_freqs(cfg: ArchConfig, head_dim: int) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (cfg.rope_theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, freqs: jax.Array) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] (broadcastable)."""
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., seq, half]
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return y.astype(x.dtype)
+
+# ------------------------------------------------------------------ embeddings
+
+def embed_defs(cfg: ArchConfig):
+    v, d = cfg.vocab_padded, cfg.d_model
+    defs = {"tok": ParamDef((v, d), ("vocab", "embed"), init="embed")}
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((d, v), ("embed", "vocab"))
+    return defs
+
+
+def embed_tokens(p, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def lm_logits(cfg: ArchConfig, p, x: jax.Array) -> jax.Array:
+    w = p["tok"].T if cfg.tie_embeddings else p["lm_head"]
+    return x @ w

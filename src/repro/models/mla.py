@@ -1,0 +1,112 @@
+"""Multi-head Latent Attention (DeepSeek-V2).
+
+Train/prefill materialize per-head K/V from the rank-``kv_lora`` joint compression;
+decode uses the *absorbed* formulation so the per-token cache is only
+``kv_lora + rope_head_dim`` floats (512 + 64 for the 236B config) — this is what makes
+the decode_32k cell fit, and is the TPU-native analogue of the paper-era concern of
+shipping the full weight matrix to every mapper (here: shipping the full KV to every
+chip) being the bottleneck.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import NEG_INF, chunked_attention
+from .layers import apply_rope, rmsnorm
+from .params import ParamDef
+
+
+def mla_defs(cfg: ArchConfig):
+    d, h = cfg.d_model, cfg.n_heads
+    qk = cfg.nope_head_dim + cfg.rope_head_dim
+    defs = {
+        "wkv_a": ParamDef((d, cfg.kv_lora_rank + cfg.rope_head_dim), ("embed", "lora")),
+        "kv_norm": ParamDef((cfg.kv_lora_rank,), ("lora",), init="ones"),
+        "wkv_b": ParamDef((cfg.kv_lora_rank, h, cfg.nope_head_dim + cfg.v_head_dim),
+                          ("lora", "heads", "head_dim")),
+        "wo": ParamDef((h, cfg.v_head_dim, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.q_lora_rank:
+        defs["wq_a"] = ParamDef((d, cfg.q_lora_rank), ("embed", "lora"))
+        defs["q_norm"] = ParamDef((cfg.q_lora_rank,), ("lora",), init="ones")
+        defs["wq_b"] = ParamDef((cfg.q_lora_rank, h, qk), ("lora", "heads", "head_dim"))
+    else:
+        defs["wq"] = ParamDef((d, h, qk), ("embed", "heads", "head_dim"))
+    return defs
+
+
+def _queries(cfg: ArchConfig, p, x):
+    if cfg.q_lora_rank:
+        cq = rmsnorm(x @ p["wq_a"], p["q_norm"])
+        q = jnp.einsum("bsl,lhe->bshe", cq, p["wq_b"])
+    else:
+        q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    return q  # [B, S, H, nope+rope]
+
+
+def mla_full_block(cfg: ArchConfig, p, x, freqs, *, positions=None, q_block=512, unroll=False):
+    """Training / prefill MLA self-attention (materialized K/V)."""
+    B, S, _ = x.shape
+    nope, rope_d, vd = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q = _queries(cfg, p, x)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, freqs)
+
+    ckv_full = x @ p["wkv_a"]
+    ckv = rmsnorm(ckv_full[..., :cfg.kv_lora_rank], p["kv_norm"])
+    k_rope = ckv_full[..., cfg.kv_lora_rank:][:, :, None, :]       # [B,S,1,rope]
+    k_rope = apply_rope(k_rope, positions, freqs)
+
+    kv = jnp.einsum("bsl,lhe->bshe", ckv, p["wkv_b"])
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:-1] + (rope_d,))], -1)
+    qq = jnp.concatenate([q_nope, q_rope], -1)
+    o = chunked_attention(qq, k, v, causal=True, q_block=q_block, unroll=unroll)
+    return jnp.einsum("bshe,hed->bsd", o, p["wo"])
+
+
+def mla_cache_defs(cfg: ArchConfig, batch: int, max_len: int):
+    return {
+        "ckv": ParamDef((batch, max_len, cfg.kv_lora_rank), ("batch", "seq", "lora"), init="zeros"),
+        "krope": ParamDef((batch, max_len, cfg.rope_head_dim), ("batch", "seq", None), init="zeros"),
+    }
+
+
+def mla_decode_block(cfg: ArchConfig, p, x, cache, pos, freqs):
+    """Absorbed one-token decode.  x: [B, d]."""
+    B = x.shape[0]
+    nope, rope_d = cfg.nope_head_dim, cfg.rope_head_dim
+    scale = 1.0 / math.sqrt(nope + rope_d)
+
+    q = _queries(cfg, p, x[:, None, :])[:, 0]                      # [B,H,nope+rope]
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope[:, None], pos[:, None], freqs)[:, 0]
+
+    ckv_full = x @ p["wkv_a"]
+    ckv_new = rmsnorm(ckv_full[..., :cfg.kv_lora_rank], p["kv_norm"])
+    kr_new = apply_rope(ckv_full[..., None, cfg.kv_lora_rank:][:, None], pos[:, None], freqs)[:, 0, 0]
+
+    b = jnp.arange(B)
+    cc = cache["ckv"].at[b, pos].set(ckv_new.astype(cache["ckv"].dtype))
+    cr = cache["krope"].at[b, pos].set(kr_new.astype(cache["krope"].dtype))
+
+    # absorb W_uk into q:  q_eff[b,h,l] = sum_n q_nope[b,h,n] wkv_b[l,h,n]
+    w_uk = p["wkv_b"][..., :nope]                                  # [L, H, nope]
+    q_eff = jnp.einsum("bhn,lhn->bhl", q_nope, w_uk)
+    s = jnp.einsum("bhl,bsl->bhs", q_eff, cc, preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bhr,bsr->bhs", q_rope, cr, preferred_element_type=jnp.float32)
+    s = s * scale
+    valid = jnp.arange(cc.shape[1])[None, :] <= pos[:, None]
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1).astype(cc.dtype)
+    ctx = jnp.einsum("bhs,bsl->bhl", a, cc)
+    w_uv = p["wkv_b"][..., nope:]                                  # [L, H, v]
+    o = jnp.einsum("bhl,lhv->bhv", ctx, w_uv)
+    out = jnp.einsum("bhv,hvd->bd", o, p["wo"])
+    return out, {"ckv": cc, "krope": cr}

@@ -1,0 +1,109 @@
+"""Mixture-of-Experts with token-choice top-k routing and per-expert capacity.
+
+Dispatch is *gather-based*: for each (group, expert) the top-C tokens by gate
+probability are gathered into a dense ``[G, E, C, D]`` buffer (C = capacity), run
+through the expert matmuls, weighted by their gate, and scatter-added back.  This
+keeps dispatch cost at gather/scatter (≈0 FLOPs) instead of the classic
+``[tokens, E, C]`` one-hot einsum, whose FLOPs would dwarf the expert matmuls at
+160 experts.  Experts are sharded over the ``model`` mesh axis (EP); the gathered
+buffer is sharding-constrained so XLA materializes the EP all-to-all around the
+expert matmuls.  Tokens over capacity are dropped (lowest gate first), per the
+standard capacity-factor contract.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, round_up
+from . import shardings
+from .layers import act_fn
+from .params import ParamDef
+
+
+def moe_defs(cfg: ArchConfig):
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+    defs = {
+        "router": ParamDef((d, e), ("embed", None), dtype=jnp.float32),
+        "up": ParamDef((e, d, f), ("experts", "embed", "ff")),
+        "down": ParamDef((e, f, d), ("experts", "ff", "embed")),
+    }
+    if cfg.mlp_gated:
+        defs["gate"] = ParamDef((e, d, f), ("experts", "embed", "ff"))
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * f
+        defs["shared_up"] = ParamDef((d, fs), ("embed", "ff"))
+        defs["shared_down"] = ParamDef((fs, d), ("ff", "embed"))
+        if cfg.mlp_gated:
+            defs["shared_gate"] = ParamDef((d, fs), ("embed", "ff"))
+    return defs
+
+
+def capacity(cfg: ArchConfig, tokens_per_group: int) -> int:
+    c = math.ceil(tokens_per_group * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return min(tokens_per_group, max(8, round_up(c, 8)))
+
+
+def moe_apply(cfg: ArchConfig, p, x, *, mesh=None) -> Tuple[jax.Array, jax.Array]:
+    """x: [G, S, D] (groups route independently).  Returns (out, aux_loss)."""
+    G, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = capacity(cfg, S)
+    act = act_fn(cfg.act)
+
+    logits = (x.astype(jnp.float32) @ p["router"])                 # [G,S,E] fp32
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, K)                         # [G,S,K]
+    top_p = top_p / jnp.sum(top_p, -1, keepdims=True)              # renormalize top-k
+
+    # dense gate map via scatter-add (no [G,S,K,E] one-hot materialized)
+    gg = jnp.arange(G)[:, None, None]
+    ss = jnp.arange(S)[None, :, None]
+    gates = jnp.zeros((G, S, E), jnp.float32).at[gg, ss, top_i].add(top_p)
+
+    # per-expert top-C tokens by gate (capacity with lowest-gate dropping)
+    scores = jnp.swapaxes(gates, 1, 2)                             # [G,E,S]
+    vals, idx = jax.lax.top_k(scores, C)                           # [G,E,C]
+    keep = (vals > 0.0)
+
+    xe = jax.vmap(lambda xg, ig: xg[ig])(x, idx)                   # [G,E,C,D]
+    if mesh is not None:
+        xe = shardings.constrain(xe, mesh, ("batch", "experts", None, None))
+    if cfg.mlp_gated:
+        h = act(jnp.einsum("gecd,edf->gecf", xe, p["gate"])) * jnp.einsum(
+            "gecd,edf->gecf", xe, p["up"])
+    else:
+        h = act(jnp.einsum("gecd,edf->gecf", xe, p["up"]))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["down"])
+    ye = ye * (vals * keep)[..., None].astype(ye.dtype)
+    if mesh is not None:
+        ye = shardings.constrain(ye, mesh, ("batch", "experts", None, None))
+
+    def scatter_g(idx_g, ye_g):
+        return jnp.zeros((S, D), ye.dtype).at[idx_g.reshape(-1)].add(
+            ye_g.reshape(-1, D), mode="drop")
+    out = jax.vmap(scatter_g)(idx, ye)                             # [G,S,D]
+    if mesh is not None:
+        out = shardings.constrain(out, mesh, ("batch", None, None))
+
+    if cfg.n_shared_experts:
+        if cfg.mlp_gated:
+            hs = act(x @ p["shared_gate"]) * (x @ p["shared_up"])
+        else:
+            hs = act(x @ p["shared_up"])
+        out = out + hs @ p["shared_down"]
+
+    # switch-style load-balance auxiliary loss
+    frac = jnp.mean(gates > 0.0, axis=(0, 1)).astype(jnp.float32)  # fraction routed
+    mean_p = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac * mean_p)
+    return out, aux
+
+
+def moe_decode_apply(cfg: ArchConfig, p, x, *, mesh=None) -> jax.Array:
+    """x: [B, D] single-token batch — routed as one group of B tokens."""
+    out, _ = moe_apply(cfg, p, x[None], mesh=mesh)
+    return out[0]

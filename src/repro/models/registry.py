@@ -1,0 +1,72 @@
+"""Model registry: ``build_model(cfg)`` + abstract input specs per workload shape."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from ..configs.base import ArchConfig, ShapeConfig, supports
+from . import shardings
+from .encdec import EncDecLM
+from .params import ParamDef, abstract_tree, init_tree, specs_tree
+from .transformer import DecoderLM
+
+
+def build_model(cfg: ArchConfig):
+    if cfg.enc_dec:
+        return EncDecLM(cfg)
+    return DecoderLM(cfg)
+
+
+def input_defs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, ParamDef]:
+    """ParamDef tree for every model input of this (arch, shape) cell.
+
+    Training / prefill inputs are token ids (plus stub frontend embeddings for
+    audio/vlm archs); decode inputs are one token + the KV cache (declared via
+    ``build_model(cfg).cache_defs``)."""
+    ok, why = supports(cfg, shape)
+    if not ok:
+        raise ValueError(f"{cfg.name} x {shape.name}: {why}")
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        if cfg.enc_dec:
+            return {
+                "frames": ParamDef((B, S, cfg.frontend_dim), ("batch", None, None),
+                                   jnp.bfloat16, "zeros"),
+                "tokens": ParamDef((B, S), ("batch", None), jnp.int32, "zeros"),
+            }
+        if cfg.n_image_tokens:
+            return {
+                "tokens": ParamDef((B, S - cfg.n_image_tokens), ("batch", None),
+                                   jnp.int32, "zeros"),
+                "image_embeds": ParamDef((B, cfg.n_image_tokens, cfg.frontend_dim),
+                                         ("batch", None, None), jnp.bfloat16, "zeros"),
+            }
+        return {"tokens": ParamDef((B, S), ("batch", None), jnp.int32, "zeros")}
+    # decode: one new token against a seq_len cache
+    return {"tokens": ParamDef((B,), ("batch",), jnp.int32, "zeros")}
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Optional[Mesh] = None):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    return abstract_tree(input_defs(cfg, shape), mesh)
+
+
+def abstract_params(cfg: ArchConfig, mesh: Optional[Mesh] = None):
+    return abstract_tree(build_model(cfg).param_defs(), mesh)
+
+
+def abstract_cache(cfg: ArchConfig, shape: ShapeConfig, mesh: Optional[Mesh] = None):
+    model = build_model(cfg)
+    return abstract_tree(model.cache_defs(shape.global_batch, shape.seq_len), mesh)
+
+
+def init_params(cfg: ArchConfig, key):
+    return init_tree(build_model(cfg).param_defs(), key)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, key=None):
+    defs = build_model(cfg).cache_defs(batch, max_len)
+    return init_tree(defs, jax.random.PRNGKey(0) if key is None else key)

@@ -1,0 +1,90 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Training uses ``jax.lax.associative_scan`` over time (log-depth, TPU-friendly);
+decode is the exact O(1) per-step recurrence — with the bounded local-attention
+window this makes recurrentgemma eligible for the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .params import ParamDef
+
+_C = 8.0  # RG-LRU temperature constant (Griffin §2.4)
+
+
+def rglru_defs(cfg: ArchConfig):
+    d, dr, w = cfg.d_model, cfg.d_rnn or cfg.d_model, cfg.conv_width
+    return {
+        "w_in": ParamDef((d, dr), ("embed", "rnn")),
+        "w_gate": ParamDef((d, dr), ("embed", "rnn")),
+        "conv": ParamDef((w, dr), ("conv", "rnn")),
+        "w_a": ParamDef((dr, dr), ("rnn", "embed_tp")),
+        "b_a": ParamDef((dr,), ("rnn",), init="zeros"),
+        "w_i": ParamDef((dr, dr), ("rnn", "embed_tp")),
+        "b_i": ParamDef((dr,), ("rnn",), init="zeros"),
+        "lam": ParamDef((dr,), ("rnn",), dtype=jnp.float32, init="const:2.0"),
+        "w_out": ParamDef((dr, d), ("rnn", "embed")),
+    }
+
+
+def _gates(p, u):
+    r = jax.nn.sigmoid(u @ p["w_a"] + p["b_a"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(u @ p["w_i"] + p["b_i"]).astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r                    # log a_t  (<= 0)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = beta * (i * u.astype(jnp.float32))
+    return a, b
+
+
+def _conv(u, w):
+    W = w.shape[0]
+    out = u * w[-1]
+    for k in range(1, W):
+        out = out + jnp.pad(u, ((0, 0), (k, 0), (0, 0)))[:, :-k] * w[-1 - k]
+    return out
+
+
+def rglru_block(cfg: ArchConfig, p, x, *, init_state=None) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence recurrent block. x: [B,S,d] -> ([B,S,d], final_state [B,dr])."""
+    u = _conv(x @ p["w_in"], p["conv"])
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    a, b = _gates(p, u)                                            # [B,S,dr] fp32
+    if init_state is not None:
+        # fold the initial state into the first step: h_1 = a_1 h_0 + b_1
+        b = b.at[:, 0].add(a[:, 0] * init_state.astype(jnp.float32))
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    final = h[:, -1]
+    y = (h.astype(x.dtype) * gate) @ p["w_out"]
+    return y, final
+
+
+def rglru_cache_defs(cfg: ArchConfig, batch: int):
+    dr = cfg.d_rnn or cfg.d_model
+    return {
+        "conv": ParamDef((batch, cfg.conv_width - 1, dr), ("batch", None, "rnn"), init="zeros"),
+        "state": ParamDef((batch, dr), ("batch", "rnn"), dtype=jnp.float32, init="zeros"),
+    }
+
+
+def rglru_decode_block(cfg: ArchConfig, p, x, cache):
+    """One-token decode. x: [B, d]."""
+    u_raw = x @ p["w_in"]
+    full = jnp.concatenate([cache["conv"], u_raw[:, None]], axis=1)
+    u = jnp.einsum("bwc,wc->bc", full, p["conv"])
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    a, b = _gates(p, u)
+    h = a * cache["state"] + b
+    y = (h.astype(x.dtype) * gate) @ p["w_out"]
+    return y, {"conv": full[:, 1:], "state": h}

@@ -1,0 +1,180 @@
+"""Mamba-2 SSD (state-space duality) block — chunked, matmul-dominant formulation.
+
+The chunked algorithm (Dao & Gu, 2024, §6) splits the sequence into chunks of Q
+tokens: within-chunk terms are batched matmuls (MXU-friendly on TPU), and the
+cross-chunk recurrence is a length-``S/Q`` scan over the tiny ``[H, P, N]`` state.
+Decode is the exact O(1) recurrence, which is why mamba2 runs the ``long_500k``
+cell that full-attention archs must skip.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import rmsnorm
+from .params import ParamDef
+
+
+# ------------------------------------------------------------------ param defs
+
+def ssm_defs(cfg: ArchConfig):
+    d, di = cfg.d_model, cfg.d_inner
+    n, g, h, w = cfg.ssm_state, cfg.ssm_n_groups, cfg.ssm_n_heads, cfg.conv_width
+    return {
+        "wz": ParamDef((d, di), ("embed", "ff")),
+        "wx": ParamDef((d, di), ("embed", "ff")),
+        "wB": ParamDef((d, g * n), ("embed", None)),
+        "wC": ParamDef((d, g * n), ("embed", None)),
+        "wdt": ParamDef((d, h), ("embed", "heads")),
+        "dt_bias": ParamDef((h,), ("heads",), init="zeros"),
+        "A_log": ParamDef((h,), ("heads",), dtype=jnp.float32, init="zeros"),
+        "D": ParamDef((h,), ("heads",), dtype=jnp.float32, init="ones"),
+        "conv_x": ParamDef((w, di), ("conv", "ff")),
+        "conv_B": ParamDef((w, g * n), ("conv", None)),
+        "conv_C": ParamDef((w, g * n), ("conv", None)),
+        "norm": ParamDef((di,), ("ff",), init="ones"),
+        "wo": ParamDef((di, d), ("ff", "embed")),
+    }
+
+
+def _causal_depthwise_conv(u: jax.Array, w: jax.Array) -> jax.Array:
+    """u: [B, S, C]; w: [W, C] — causal depthwise conv via W shifted adds."""
+    W = w.shape[0]
+    out = u * w[-1]
+    for i in range(1, W):
+        shifted = jnp.pad(u, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[-1 - i]
+    return out
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: [..., T] -> [..., T, T] lower-triangular segment sums (−inf above diag)."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, -1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(xd, dtA, B, C, chunk: int, init_state=None):
+    """SSD scan.
+
+    xd:  [b, s, h, p]   (already dt-scaled inputs)
+    dtA: [b, s, h]      (dt * A, negative)
+    B,C: [b, s, n]      (single group)
+    Returns (y [b,s,h,p], final_state [b,h,p,n]).
+    """
+    b, s, h, p = xd.shape
+    n = B.shape[-1]
+    Q = min(chunk, s)
+    pad = (-s) % Q
+    if pad:
+        # zero-pad: dtA=0 -> decay 1, xd=0 -> state unchanged through padding
+        xd = jnp.pad(xd, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtA = jnp.pad(dtA, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        s_out = s
+        s = s + pad
+    else:
+        s_out = s
+    c = s // Q
+    xd = xd.reshape(b, c, Q, h, p)
+    dtA = dtA.reshape(b, c, Q, h).transpose(0, 3, 1, 2)            # [b,h,c,q]
+    Bc = B.reshape(b, c, Q, n)
+    Cc = C.reshape(b, c, Q, n)
+
+    A_cs = jnp.cumsum(dtA, -1)                                     # [b,h,c,q]
+    L = jnp.exp(_segsum(dtA))                                      # [b,h,c,q,q]
+    # within-chunk (diagonal) term
+    y_diag = jnp.einsum("bcqn,bckn,bhcqk,bckhp->bcqhp", Cc, Bc, L, xd)
+
+    # per-chunk input states (recurrence is carried in fp32)
+    decay_states = jnp.exp(A_cs[..., -1:] - A_cs)                  # [b,h,c,q]
+    states = jnp.einsum("bckn,bhck,bckhp->bchpn", Bc, decay_states, xd)
+    states = states.astype(jnp.float32)
+
+    # cross-chunk recurrence
+    chunk_decay = jnp.exp(A_cs[..., -1]).astype(jnp.float32)       # [b,h,c]
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st, dec = inp                                              # [b,h,p,n], [b,h]
+        new = carry * dec[..., None, None] + st
+        return new, carry                                          # emit state *before* chunk
+
+    final, prev = jax.lax.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, -1, 0)))
+    prev = jnp.moveaxis(prev, 0, 1)                                # [b,c,h,p,n]
+
+    state_decay = jnp.exp(A_cs)                                    # [b,h,c,q]
+    y_off = jnp.einsum("bcqn,bchpn,bhcq->bcqhp", Cc, prev, state_decay)
+    y = (y_diag + y_off).astype(xd.dtype).reshape(b, s, h, p)
+    return y[:, :s_out], final
+
+
+def ssm_block(cfg: ArchConfig, p, x, *, init_state=None) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence SSD block. x: [B, S, d_model] -> ([B,S,d_model], final_state)."""
+    h, pd, n = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z = x @ p["wz"]
+    xs = _causal_depthwise_conv(x @ p["wx"], p["conv_x"])
+    xs = jax.nn.silu(xs)
+    B = jax.nn.silu(_causal_depthwise_conv(x @ p["wB"], p["conv_B"]))
+    C = jax.nn.silu(_causal_depthwise_conv(x @ p["wC"], p["conv_C"]))
+    dt = jax.nn.softplus((x @ p["wdt"]).astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"])                                       # [h], negative
+    xh = xs.reshape(*xs.shape[:2], h, pd)
+    xd = xh * dt[..., None].astype(xh.dtype)
+    y, final = ssd_chunked(xd, dt * A, B, C, cfg.ssm_chunk, init_state)
+    y = y + p["D"].astype(y.dtype)[:, None] * xh
+    y = y.reshape(*x.shape[:2], cfg.d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["wo"], final
+
+
+# --------------------------------------------------------------------- decode
+
+def ssm_cache_defs(cfg: ArchConfig, batch: int):
+    di, gn = cfg.d_inner, cfg.ssm_n_groups * cfg.ssm_state
+    return {
+        "conv_x": ParamDef((batch, cfg.conv_width - 1, di), ("batch", None, "ff"), init="zeros"),
+        "conv_B": ParamDef((batch, cfg.conv_width - 1, gn), ("batch", None, None), init="zeros"),
+        "conv_C": ParamDef((batch, cfg.conv_width - 1, gn), ("batch", None, None), init="zeros"),
+        "state": ParamDef((batch, cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                          ("batch", "heads", None, None), dtype=jnp.float32, init="zeros"),
+    }
+
+
+def _conv_step(u, cache, w):
+    """u: [B, C]; cache: [B, W-1, C]; w: [W, C] -> (y [B,C], new_cache)."""
+    full = jnp.concatenate([cache, u[:, None]], axis=1)            # [B, W, C]
+    y = jnp.einsum("bwc,wc->bc", full, w)
+    return y, full[:, 1:]
+
+
+def ssm_decode_block(cfg: ArchConfig, p, x, cache):
+    """One-token decode. x: [B, d_model]."""
+    h, pd, n = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z = x @ p["wz"]
+    xs, cx = _conv_step(x @ p["wx"], cache["conv_x"], p["conv_x"])
+    xs = jax.nn.silu(xs)
+    B, cB = _conv_step(x @ p["wB"], cache["conv_B"], p["conv_B"])
+    C, cC = _conv_step(x @ p["wC"], cache["conv_C"], p["conv_C"])
+    B, C = jax.nn.silu(B), jax.nn.silu(C)
+    dt = jax.nn.softplus((x @ p["wdt"]).astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                           # [B,h]
+    xh = xs.reshape(-1, h, pd)
+    st = cache["state"]
+    st = st * dA[..., None, None] + jnp.einsum(
+        "bhp,bn,bh->bhpn", xh.astype(jnp.float32), B.astype(jnp.float32), dt)
+    y = jnp.einsum("bhpn,bn->bhp", st, C.astype(jnp.float32)).astype(x.dtype)
+    y = y + p["D"].astype(y.dtype)[:, None] * xh
+    y = y.reshape(-1, cfg.d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    new_cache = {"conv_x": cx, "conv_B": cB, "conv_C": cC, "state": st}
+    return y @ p["wo"], new_cache

@@ -1,0 +1,147 @@
+"""Train / serve step factories.
+
+Two engines build the same training step (see DESIGN.md §2):
+  * ``pjit``      — sharding-constraint formulation; XLA schedules/overlaps the
+    gradient collectives.  The dry-run/roofline substrate.
+  * ``mapreduce`` — the paper-faithful explicit map/combine/reduce via
+    ``shard_map`` with selectable reduce mode (allreduce | hierarchical |
+    compressed int8+EF).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..core.mapreduce import mapreduce_value_and_grad
+from ..optim import OptConfig, apply_updates, init_opt_state, opt_state_defs
+from . import shardings
+from .params import abstract_tree, init_tree, specs_tree
+from .registry import build_model, input_defs
+
+
+# ------------------------------------------------------------- train steps
+
+def make_train_step(cfg: ArchConfig, mesh: Optional[Mesh], opt_cfg: OptConfig,
+                    *, engine: str = "pjit", reduce_mode: str = "allreduce",
+                    n_micro: int = 1):
+    """Returns ``step(params, opt_state, batch) -> (params, opt_state, metrics)``
+    (un-jitted; caller jits with the sharding trees from ``train_shardings``)."""
+    model = build_model(cfg)
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, mesh)
+
+    if engine == "pjit":
+        def step(params, opt_state, batch):
+            if n_micro > 1:
+                def to_micro(x):
+                    return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+                mb = jax.tree.map(to_micro, batch)
+
+                def acc(carry, m):
+                    gsum, lsum = carry
+                    (l, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, m)
+                    return (jax.tree.map(lambda a, b: a + b.astype(a.dtype), gsum, g),
+                            lsum + l), None
+                g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (gsum, lsum), _ = jax.lax.scan(acc, (g0, jnp.zeros((), jnp.float32)), mb)
+                grads = jax.tree.map(lambda g: g / n_micro, gsum)
+                loss = lsum / n_micro
+                aux = {}
+            else:
+                (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, batch)
+            params, opt_state, om = apply_updates(params, grads, opt_state, opt_cfg)
+            return params, opt_state, {"loss": loss, **om}
+        return step
+
+    assert engine == "mapreduce", engine
+    # inside shard_map the data axes are Manual: global sharding constraints
+    # would reference a mismatched mesh, so the model runs constraint-free and
+    # the engine's in_specs/psum carry the distribution
+    def loss_fn_manual(params, batch):
+        return model.loss(params, batch, None)
+
+    mr = mapreduce_value_and_grad(loss_fn_manual, mesh, reduce_mode=reduce_mode,
+                                  n_micro=n_micro)
+
+    def step(params, opt_state, batch):
+        err = opt_state.get("comp_err") if isinstance(opt_state, dict) else None
+        loss, grads, new_err, aux = mr(params, batch, err)
+        inner = {k: v for k, v in opt_state.items() if k != "comp_err"}
+        params, inner, om = apply_updates(params, grads, inner, opt_cfg)
+        if new_err is not None:
+            inner["comp_err"] = new_err
+        return params, inner, {"loss": loss, **om}
+    return step
+
+
+def train_shardings(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                    opt_cfg: OptConfig):
+    """(params, opt_state, batch) NamedSharding trees for jit in/out_shardings."""
+    model = build_model(cfg)
+    pdefs = model.param_defs()
+    odefs = opt_state_defs(pdefs, opt_cfg)
+    bdefs = input_defs(cfg, shape)
+    return (specs_tree(pdefs, mesh), specs_tree(odefs, mesh),
+            specs_tree(bdefs, mesh))
+
+
+def abstract_train_args(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                        opt_cfg: OptConfig):
+    """ShapeDtypeStructs (with shardings) for lower() — zero allocation."""
+    model = build_model(cfg)
+    pdefs = model.param_defs()
+    odefs = opt_state_defs(pdefs, opt_cfg)
+    bdefs = input_defs(cfg, shape)
+    return (abstract_tree(pdefs, mesh), abstract_tree(odefs, mesh),
+            abstract_tree(bdefs, mesh))
+
+
+# ------------------------------------------------------------- serve steps
+
+def make_serve_step(cfg: ArchConfig, mesh: Optional[Mesh], kind: str):
+    """kind='decode': step(params, cache, tokens) -> (next_tokens, logits?, cache)
+       kind='prefill': step(params, batch) -> (logits, cache)"""
+    model = build_model(cfg)
+    if kind == "decode":
+        def step(params, cache, tokens):
+            logits, cache = model.decode(params, cache, tokens, mesh)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt, cache
+        return step
+    assert kind == "prefill", kind
+
+    def step(params, batch):
+        return model.prefill(params, batch, mesh)
+    return step
+
+
+def abstract_serve_args(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh):
+    model = build_model(cfg)
+    pdefs = model.param_defs()
+    if shape.kind == "decode":
+        cdefs = model.cache_defs(shape.global_batch, shape.seq_len)
+        bdefs = input_defs(cfg, shape)
+        return (abstract_tree(pdefs, mesh), abstract_tree(cdefs, mesh),
+                abstract_tree(bdefs, mesh)["tokens"])
+    bdefs = input_defs(cfg, shape)
+    return (abstract_tree(pdefs, mesh), abstract_tree(bdefs, mesh))
+
+
+def serve_shardings(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh):
+    model = build_model(cfg)
+    pdefs = model.param_defs()
+    if shape.kind == "decode":
+        cdefs = model.cache_defs(shape.global_batch, shape.seq_len)
+        bdefs = input_defs(cfg, shape)
+        return (specs_tree(pdefs, mesh), specs_tree(cdefs, mesh),
+                specs_tree(bdefs, mesh)["tokens"])
+    bdefs = input_defs(cfg, shape)
+    return (specs_tree(pdefs, mesh), specs_tree(bdefs, mesh))

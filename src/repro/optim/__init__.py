@@ -1,0 +1,3 @@
+from .optimizers import (OptConfig, apply_updates, global_norm, init_opt_state,
+                         lr_at, opt_state_defs)  # noqa: F401
+from . import compression  # noqa: F401

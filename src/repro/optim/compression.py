@@ -1,0 +1,59 @@
+"""Gradient compression for the cross-pod reduce (distributed-optimization trick).
+
+Int8 block-quantization with *error feedback*: the quantization residual is kept
+locally and added to the next step's gradient, so compression error does not
+accumulate (Seide et al. 1-bit SGD / EF-SGD).  Used by the ``compressed`` reduce
+mode of the MapReduce engine: pod-local reduction runs at full precision; only
+the (slow, cross-pod DCI) all-reduce sees int8 — a 4x wire-byte cut exactly where
+the paper's Hadoop shuffle was the bottleneck.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-block symmetric int8 quantization. Returns (q int8, scale fp32)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12)), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape, dtype) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def compress_tree(grads):
+    return jax.tree.map(lambda g: quantize_int8(g), grads)
+
+
+def decompress_tree(qtree, like):
+    return jax.tree.map(
+        lambda qs, g: dequantize_int8(qs[0], qs[1], g.shape, g.dtype),
+        qtree, like, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+
+
+def ef_compress(g: jax.Array, err: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Error-feedback compression of one tensor.
+
+    Returns (dequantized_g, new_error, wire_bytes_est)."""
+    corrected = g.astype(jnp.float32) + err
+    q, scale = quantize_int8(corrected)
+    deq = dequantize_int8(q, scale, g.shape, jnp.float32)
+    new_err = corrected - deq
+    wire = jnp.int32(q.size + scale.size * 4)
+    return deq.astype(g.dtype), new_err, wire

@@ -1,0 +1,2 @@
+from .fault_tolerance import LoopConfig, TrainLoop  # noqa: F401
+from .elastic import degraded_mesh, restore_on_mesh  # noqa: F401

@@ -1,0 +1,35 @@
+"""Elastic re-meshing: restore a checkpoint onto a different device topology.
+
+At 1000+ nodes the common failure unit is a pod (or a slice of one); recovery
+is restarting the job on the surviving/replacement topology.  Because our
+checkpoints store *global* arrays keyed by pytree path, restoring onto a new
+mesh is just re-placing each leaf with the sharding resolved against that mesh
+(``models.shardings.resolve`` handles non-dividing axes by replication)."""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh
+
+from ..checkpoint import ckpt
+from ..models import params as params_lib
+
+
+def restore_on_mesh(path: str, defs, mesh: Optional[Mesh], *,
+                    step: Optional[int] = None):
+    """Restore a checkpoint of a defs-described pytree onto ``mesh``."""
+    like = params_lib.abstract_tree(defs, None)
+    like = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), like)
+    shardings = params_lib.specs_tree(defs, mesh) if mesh is not None else None
+    # restore() needs concrete leaves only for structure; abstract works
+    return ckpt.restore(path, like, step=step, shardings=shardings)
+
+
+def degraded_mesh(original: Mesh, lost_axis: str = "pod") -> dict:
+    """Describe the fallback topology after losing one unit of ``lost_axis``
+    (used by launch scripts to compute the restart mesh)."""
+    shape = dict(zip(original.axis_names, original.devices.shape))
+    if lost_axis in shape and shape[lost_axis] > 1:
+        shape[lost_axis] -= 1
+    return shape

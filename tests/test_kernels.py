@@ -1,0 +1,65 @@
+"""Per-kernel allclose sweeps: shapes x dtypes against the pure-jnp oracles,
+executed with interpret=True on CPU (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.rbm_cd import gemm_sigmoid, gemm_sigmoid_ref
+
+FLASH_SHAPES = [
+    # (B, S, H, K, D, block)
+    (2, 128, 4, 2, 64, 64),
+    (1, 256, 8, 8, 32, 128),
+    (2, 64, 6, 1, 64, 64),      # MQA
+    (1, 128, 2, 2, 128, 64),
+]
+
+
+@pytest.mark.parametrize("B,S,H,K,D,blk", FLASH_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(B, S, H, K, D, blk, dtype, causal):
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(keys[0], (B, S, H, D), dtype)
+    k = jax.random.normal(keys[1], (B, S, K, D), dtype)
+    v = jax.random.normal(keys[2], (B, S, K, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=blk, block_k=blk,
+                          interpret=True)
+    ref = jnp.swapaxes(
+        attention_ref(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                      jnp.swapaxes(v, 1, 2), causal=causal), 1, 2)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+GEMM_SHAPES = [(100, 784, 1000), (128, 128, 128), (37, 200, 61), (1, 30, 10)]
+
+
+@pytest.mark.parametrize("M,K,N", GEMM_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemm_sigmoid_matches_ref(M, K, N, dtype):
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    x = (jax.random.normal(keys[0], (M, K), dtype) * 0.1).astype(dtype)
+    w = (jax.random.normal(keys[1], (K, N), dtype) * 0.1).astype(dtype)
+    b = (jax.random.normal(keys[2], (N,), dtype) * 0.1).astype(dtype)
+    out = gemm_sigmoid(x, w, b, interpret=True)
+    ref = gemm_sigmoid_ref(x, w, b)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_blocks_sweep():
+    """Block-shape invariance: different VMEM tilings give identical results."""
+    keys = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(keys[0], (1, 256, 4, 64), jnp.float32)
+    k = jax.random.normal(keys[1], (1, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(keys[2], (1, 256, 2, 64), jnp.float32)
+    outs = [flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+            for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   atol=1e-5, rtol=1e-5)

@@ -1,0 +1,95 @@
+"""MoE routing invariants + equivalence with a dense (no-capacity) reference."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.models.moe import capacity, moe_apply, moe_defs
+from repro.models.params import init_tree
+
+
+def _cfg(**kw):
+    base = reduced(ARCHS["dbrx-132b"])
+    return dataclasses.replace(base, **kw)
+
+
+def _dense_ref(cfg, p, x):
+    """Every token through its top-k experts, no capacity limit."""
+    G, S, D = x.shape
+    logits = (x.astype(jnp.float32) @ p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, cfg.top_k)
+    top_p = top_p / jnp.sum(top_p, -1, keepdims=True)
+    out = jnp.zeros(x.shape, jnp.float32)
+    act = jax.nn.silu
+    for e in range(cfg.n_experts):
+        h = act(x @ p["gate"][e]) * (x @ p["up"][e])
+        ye = (h @ p["down"][e]).astype(jnp.float32)
+        w = jnp.sum(jnp.where(top_i == e, top_p, 0.0), -1)
+        out = out + ye * w[..., None]
+    return out
+
+
+def test_moe_matches_dense_when_capacity_ample():
+    cfg = _cfg(capacity_factor=8.0)   # capacity >> load: nothing dropped
+    key = jax.random.PRNGKey(0)
+    p = init_tree(moe_defs(cfg), key)
+    p = jax.tree.map(lambda a: a.astype(jnp.float32), p)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 32, cfg.d_model))
+    out, aux = moe_apply(cfg, p, x)
+    ref = _dense_ref(cfg, p, x)
+    if cfg.n_shared_experts:
+        pytest.skip("reference covers routed experts only")
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               atol=2e-3, rtol=2e-2)
+
+
+def test_capacity_drops_lowest_gate_tokens():
+    cfg = _cfg(capacity_factor=0.25)
+    key = jax.random.PRNGKey(1)
+    p = init_tree(moe_defs(cfg), key)
+    x = jax.random.normal(jax.random.fold_in(key, 2), (1, 64, cfg.d_model),
+                          jnp.float32)
+    out, aux = moe_apply(cfg, p, x)
+    assert out.shape == x.shape
+    assert jnp.all(jnp.isfinite(out))
+    # with tight capacity some tokens must receive zero routed output
+    norms = jnp.linalg.norm(out[0], axis=-1)
+    assert float(jnp.min(norms)) < float(jnp.max(norms))
+
+
+def test_capacity_formula():
+    cfg = _cfg(capacity_factor=1.0)
+    c = capacity(cfg, 4096)
+    # top_k * tokens / n_experts, rounded up to 8
+    assert c >= 4096 * cfg.top_k / cfg.n_experts
+    assert c % 8 == 0 or c == 4096
+
+
+def test_aux_loss_balanced_router_is_minimal():
+    """A perfectly uniform router gives aux ~= top_k; an unbalanced one more."""
+    cfg = _cfg()
+    key = jax.random.PRNGKey(3)
+    p = init_tree(moe_defs(cfg), key)
+    # uniform logits -> balanced: aux == top_k exactly
+    p["router"] = jnp.zeros_like(p["router"])
+    x = jnp.ones((2, 64, cfg.d_model), jnp.float32)
+    _, aux_bal = moe_apply(cfg, p, x)
+    assert abs(float(aux_bal) - cfg.top_k) < 0.5
+    # heavily biased router (x constant positive -> expert 0 always wins)
+    p["router"] = p["router"].at[:, 0].set(1.0)
+    _, aux_skew = moe_apply(cfg, p, x)
+    assert float(aux_skew) > float(aux_bal)
+
+
+def test_deepseek_shared_experts_path():
+    cfg = reduced(ARCHS["deepseek-v2-236b"])
+    key = jax.random.PRNGKey(4)
+    p = init_tree(moe_defs(cfg), key)
+    x = jax.random.normal(key, (2, 16, cfg.d_model), jnp.bfloat16)
+    out, aux = moe_apply(cfg, p, x)
+    assert out.shape == x.shape
+    assert jnp.all(jnp.isfinite(out.astype(jnp.float32)))

@@ -1,0 +1,108 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import chunked_attention
+from repro.models.ssm import ssd_chunked
+from repro.models.rglru import _gates
+from repro.optim.compression import dequantize_int8, ef_compress, quantize_int8
+from repro.data.dedup import dedup
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------- compression
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4), st.integers(1, 300))
+def test_quantize_roundtrip_bounded_error(seed, rows, cols):
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (rows, cols)))
+    q, s = quantize_int8(jnp.asarray(x))
+    back = np.asarray(dequantize_int8(q, s, x.shape, jnp.float32))
+    # error bounded by half a quantization step per block
+    step = np.asarray(s).max()
+    assert np.max(np.abs(back - x)) <= step * 0.51 + 1e-7
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_error_feedback_residual_is_exact(seed):
+    """g_deq + err_new == g + err_old (EF bookkeeping conserves mass)."""
+    key = jax.random.PRNGKey(seed)
+    g = jax.random.normal(key, (64,))
+    err = jax.random.normal(jax.random.fold_in(key, 1), (64,)) * 0.1
+    deq, new_err, _ = ef_compress(g, err)
+    lhs = np.asarray(deq, np.float64) + np.asarray(new_err, np.float64)
+    rhs = np.asarray(g, np.float64) + np.asarray(err, np.float64)
+    np.testing.assert_allclose(lhs, rhs, atol=1e-5)
+
+
+# ----------------------------------------------------------- attention blocks
+
+@given(st.sampled_from([1, 2]), st.sampled_from([16, 32, 48]),
+       st.sampled_from([(2, 1), (4, 2), (4, 4)]), st.sampled_from([8, 16]))
+def test_chunked_attention_block_invariance(B, S, HK, D):
+    H, K = HK
+    key = jax.random.PRNGKey(B * 1000 + S)
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, K, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, K, D))
+    full = chunked_attention(q, k, v, q_block=S)
+    blocked = chunked_attention(q, k, v, q_block=8)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(blocked),
+                               atol=1e-5, rtol=1e-4)
+
+
+# ----------------------------------------------------------------- SSD (ssm)
+
+def _ssd_naive(xd, dtA, B, C):
+    b, s, h, p = xd.shape
+    n = B.shape[-1]
+    st_ = np.zeros((b, h, p, n), np.float64)
+    ys = np.zeros((b, s, h, p), np.float64)
+    xd, dtA, B, C = map(lambda a: np.asarray(a, np.float64), (xd, dtA, B, C))
+    for t in range(s):
+        decay = np.exp(dtA[:, t])                       # [b,h]
+        st_ = st_ * decay[..., None, None] + np.einsum(
+            "bhp,bn->bhpn", xd[:, t], B[:, t])
+        ys[:, t] = np.einsum("bhpn,bn->bhp", st_, C[:, t])
+    return ys
+
+
+@given(st.sampled_from([8, 16, 32]), st.sampled_from([4, 8]),
+       st.integers(0, 10**6))
+def test_ssd_chunked_equals_naive_recurrence(S, chunk, seed):
+    key = jax.random.PRNGKey(seed)
+    b, h, p, n = 1, 2, 4, 3
+    xd = jax.random.normal(key, (b, S, h, p))
+    dtA = -jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (b, S, h)))
+    B = jax.random.normal(jax.random.fold_in(key, 2), (b, S, n))
+    C = jax.random.normal(jax.random.fold_in(key, 3), (b, S, n))
+    y, _ = ssd_chunked(xd, dtA, B, C, chunk)
+    ref = _ssd_naive(xd, dtA, B, C)
+    np.testing.assert_allclose(np.asarray(y, np.float64), ref,
+                               atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------- misc
+
+@given(st.integers(0, 100))
+def test_rglru_decay_in_unit_interval(seed):
+    key = jax.random.PRNGKey(seed)
+    p = {"w_a": jax.random.normal(key, (8, 8)) * 0.2,
+         "b_a": jnp.zeros(8), "w_i": jax.random.normal(key, (8, 8)) * 0.2,
+         "b_i": jnp.zeros(8), "lam": jnp.full((8,), 2.0)}
+    u = jax.random.normal(jax.random.fold_in(key, 1), (2, 4, 8))
+    a, b = _gates(p, u)
+    assert np.all(np.asarray(a) > 0) and np.all(np.asarray(a) < 1)
+    assert np.all(np.isfinite(np.asarray(b)))
+
+
+@given(st.integers(1, 4))
+def test_dedup_idempotent(max_dup):
+    X, y = __import__("repro.data", fromlist=["dataset"]).dataset(
+        100, seed=1, duplicate_frac=0.4)
+    X1, y1 = dedup(X, y, max_dup=max_dup)
+    X2, y2 = dedup(X1, y1, max_dup=max_dup)
+    assert len(X1) == len(X2)

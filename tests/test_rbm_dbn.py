@@ -1,0 +1,93 @@
+"""RBM / DBN / autoencoder / classifier correctness on synthetic MNIST."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (DBNConfig, RBMConfig, autoencoder, finetune, rbm,
+                        train_dbn)
+from repro.core.rbm import (cd_statistics, free_energy, getnegphase,
+                            getposphase, make_rbm_step, rbm_init)
+from repro.data import train_test
+
+
+def test_cd_statistics_shapes_and_signs():
+    cfg = RBMConfig(n_vis=20, n_hid=8)
+    key = jax.random.PRNGKey(0)
+    p = rbm_init(key, cfg)
+    v = jax.random.uniform(jax.random.fold_in(key, 1), (16, 20))
+    stats = cd_statistics(p, v, key, cfg)
+    assert stats["W"].shape == (20, 8)
+    assert stats["bv"].shape == (20,)
+    assert stats["bh"].shape == (8,)
+    assert jnp.isfinite(stats["err"])
+
+
+def test_rbm_learning_reduces_reconstruction_error():
+    cfg = RBMConfig(n_vis=784, n_hid=64, lr=0.1)
+    key = jax.random.PRNGKey(0)
+    X, _ = __import__("repro.data", fromlist=["dataset"]).dataset(512, seed=3)
+    p = rbm_init(key, cfg)
+    vel = jax.tree.map(jnp.zeros_like, p)
+    step = make_rbm_step(cfg, None)
+    errs = []
+    for epoch in range(6):
+        for b in range(0, 512, 128):
+            key, sub = jax.random.split(key)
+            p, vel, err = step(p, vel, jnp.asarray(X[b:b + 128]), sub, epoch)
+        errs.append(float(err))
+    assert errs[-1] < errs[0] * 0.7, errs
+
+
+def test_free_energy_gap_data_vs_noise_widens():
+    """Training must lower the free energy of data *relative to* noise (the
+    absolute level is not monotone as weights grow)."""
+    cfg = RBMConfig(n_vis=784, n_hid=32)
+    key = jax.random.PRNGKey(1)
+    X, _ = __import__("repro.data", fromlist=["dataset"]).dataset(256, seed=5)
+    X = jnp.asarray(X)
+    noise = jax.random.uniform(jax.random.fold_in(key, 9), X.shape)
+    p = rbm_init(key, cfg)
+    gap0 = float(jnp.mean(free_energy(p, X)) - jnp.mean(free_energy(p, noise)))
+    vel = jax.tree.map(jnp.zeros_like, p)
+    step = make_rbm_step(cfg, None)
+    for epoch in range(5):
+        key, sub = jax.random.split(key)
+        p, vel, _ = step(p, vel, X, sub, epoch)
+    gap1 = float(jnp.mean(free_energy(p, X)) - jnp.mean(free_energy(p, noise)))
+    assert gap1 < gap0
+
+
+def test_dbn_autoencoder_end_to_end():
+    """Algorithm 1 + unroll + fine-tune: reconstruction error improves."""
+    Xtr, ytr, Xte, yte = train_test(n_train=512, n_test=128, seed=0)
+    cfg = DBNConfig(stack=(784, 128, 32), max_epoch=3, batch_size=128, lr=0.1)
+    key = jax.random.PRNGKey(0)
+    stack = train_dbn(Xtr, cfg, key)
+    assert len(stack) == 2
+    params = autoencoder.unroll(stack)
+    err_pre = autoencoder.reconstruction_error(params, Xte)
+    step = autoencoder.make_finetune_step(None, lr=0.02)
+    vel = jax.tree.map(lambda x: jnp.zeros_like(x), params)
+    for e in range(4):
+        for b in range(0, 512, 128):
+            params, vel, loss, aux = step(params, vel,
+                                          {"x": jnp.asarray(Xtr[b:b + 128])})
+    err_post = autoencoder.reconstruction_error(params, Xte)
+    assert err_post < err_pre, (err_pre, err_post)
+
+
+def test_classifier_beats_chance():
+    Xtr, ytr, Xte, yte = train_test(n_train=1024, n_test=256, seed=1)
+    cfg = DBNConfig(stack=(784, 64), max_epoch=2, batch_size=128)
+    key = jax.random.PRNGKey(0)
+    stack = train_dbn(Xtr, cfg, key)
+    params = finetune.classifier_init(stack, 10, key)
+    step = finetune.make_classifier_step(None, lr=1.0)
+    vel = jax.tree.map(jnp.zeros_like, params)
+    for e in range(15):
+        for b in range(0, 1024, 128):
+            params, vel, loss, aux = step(
+                params, vel, {"x": jnp.asarray(Xtr[b:b + 128]),
+                              "y": jnp.asarray(ytr[b:b + 128])})
+    err = finetune.error_rate(params, Xte, yte)
+    assert err < 0.5, f"test error {err} (chance = 0.9)"
