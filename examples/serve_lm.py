@@ -1,5 +1,7 @@
-"""Batched serving example: prefill + greedy decode for any assigned arch.
+"""Serving example: continuous batching for attention LMs, static for the
+recurrent families (``--engine auto`` picks per arch).
 
+  PYTHONPATH=src python examples/serve_lm.py --arch qwen2-0.5b --mixed
   PYTHONPATH=src python examples/serve_lm.py --arch mamba2-780m
   PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-2b --gen 32
 """
@@ -11,14 +13,18 @@ from repro.launch.serve import main as serve_main
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--mixed", action="store_true")
     args = ap.parse_args()
     serve_main(["--arch", args.arch, "--reduced",
+                "--requests", str(args.requests),
                 "--batch", str(args.batch),
                 "--prompt-len", str(args.prompt_len),
-                "--gen", str(args.gen)])
+                "--gen", str(args.gen)]
+               + (["--mixed"] if args.mixed else []))
 
 
 if __name__ == "__main__":

@@ -1,7 +1,8 @@
 """Config registry: one module per assigned architecture (+ the paper's own DBN)."""
 from __future__ import annotations
 
-from .base import ArchConfig, ShapeConfig, SHAPES, supports, reduced  # noqa: F401
+from .base import (ArchConfig, ServeConfig, ShapeConfig, SHAPES,  # noqa: F401
+                   supports, reduced)
 
 from . import (  # noqa: E402
     starcoder2_7b,

@@ -202,6 +202,57 @@ class ArchConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Continuous-batching serving knobs (consumed by ``repro.serving``).
+
+    The engine decodes at a single fixed batch shape (``max_slots``) and
+    prefills at a small set of bucketed prompt lengths, so the whole serving
+    loop compiles a handful of programs regardless of traffic mix.  KV lives
+    in a paged pool: ``num_pages`` fixed-size pages of ``page_size`` tokens,
+    with physical page 0 reserved as a write sink for idle slots.
+    """
+    page_size: int = 16          # tokens per KV page
+    max_slots: int = 8           # concurrent decode slots (fixed jit batch dim)
+    max_len: int = 96            # per-request prompt + generation cap (tokens)
+    num_pages: int = 0           # 0 -> auto: max_slots * pages_per_request + 1
+    prefill_buckets: Tuple[int, ...] = ()   # () -> pow2 multiples of page_size
+    eos_id: int = -1             # -1: no EOS; requests run to max_new tokens
+
+    def __post_init__(self):
+        assert self.page_size > 0 and self.max_slots > 0
+        assert self.max_len % self.page_size == 0, \
+            "max_len must be a multiple of page_size (page-table geometry)"
+
+    @property
+    def pages_per_request(self) -> int:
+        return self.max_len // self.page_size
+
+    @property
+    def total_pages(self) -> int:
+        # +1 for the reserved null page
+        return self.num_pages or self.max_slots * self.pages_per_request + 1
+
+    @property
+    def buckets(self) -> Tuple[int, ...]:
+        """Prefill length buckets (each a multiple of page_size, <= max_len).
+
+        User-supplied buckets are rounded up to page multiples, clamped to
+        max_len, and max_len itself is always present so every admissible
+        prompt (< max_len) has a bucket."""
+        if self.prefill_buckets:
+            bs = {min(round_up(b, self.page_size), self.max_len)
+                  for b in self.prefill_buckets}
+            bs.add(self.max_len)
+            return tuple(sorted(bs))
+        out, b = [], self.page_size
+        while b < self.max_len:
+            out.append(b)
+            b *= 2
+        out.append(self.max_len)
+        return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
 class ShapeConfig:
     name: str
     kind: str            # train | prefill | decode

@@ -147,15 +147,17 @@ def mapreduce_value_and_grad(
             def local2(params, batch):
                 l, g, _, a = local(params, batch, None)
                 return l, g, a
-            fm = jax.shard_map(local2, mesh=mesh,
-                               in_specs=in_specs[:2],
-                               out_specs=(P(), jax.tree.map(lambda _: P(), params), P()),
-                               axis_names=set(dp), check_vma=False)
+            fm = shardings.shard_map_compat(
+                local2, mesh,
+                in_specs=in_specs[:2],
+                out_specs=(P(), jax.tree.map(lambda _: P(), params), P()),
+                axis_names=set(dp), check_vma=False)
             l, g, a = fm(params, batch)
             return l, g, None, a
-        fm = jax.shard_map(lambda p, b, e: local(p, b, e), mesh=mesh,
-                           in_specs=in_specs, out_specs=out_specs,
-                           axis_names=set(dp), check_vma=False)
+        fm = shardings.shard_map_compat(
+            lambda p, b, e: local(p, b, e), mesh,
+            in_specs=in_specs, out_specs=out_specs,
+            axis_names=set(dp), check_vma=False)
         return fm(params, batch, err)
 
     return step
@@ -189,8 +191,8 @@ def map_reduce_job(
 
     def run(params, batch):
         out_spec = P() if reduce in ("sum", "mean") else batch_spec
-        fm = jax.shard_map(
-            local, mesh=mesh,
+        fm = shardings.shard_map_compat(
+            local, mesh,
             in_specs=(jax.tree.map(lambda _: P(), params),
                       jax.tree.map(lambda _: batch_spec, batch)),
             out_specs=jax.tree.map(lambda _: out_spec, jax.eval_shape(

@@ -1,3 +1,13 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Shared Pallas-TPU helpers (version compat)."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` on new jax, ``pltpu.TPUCompilerParams`` on old."""
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

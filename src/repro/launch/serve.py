@@ -1,42 +1,65 @@
-"""Batched serving driver: prefill a batch of prompts, then greedy-decode.
+"""Serving CLI — a thin front-end over ``repro.serving``.
 
+  # continuous batching (paged KV pool + request scheduler)
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
-      --batch 4 --prompt-len 32 --gen 16
+      --engine continuous --requests 16 --mixed --gen 16
+
+  # static batching (contiguous caches, the pre-paging path)
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
+      --engine static --requests 4 --prompt-len 32 --gen 16
+
+``--verify`` additionally replays every request through the static
+single-request baseline and checks the greedy tokens agree per request.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from ..configs import get_arch, reduced as make_reduced
-from ..models.registry import build_model, init_cache, init_params
-from ..models.steps import make_serve_step
+from ..configs import ServeConfig, get_arch, reduced as make_reduced
+from ..serving import Engine, generate_static
 
 
-def pad_cache_to(cache, max_len, model, cfg):
-    """Grow the prefill cache's sequence dim to max_len (zero-padded)."""
-    fresh = init_cache(cfg, cache["pos"].shape[0], max_len)
-
-    def merge(f, c):
-        if f.shape == c.shape:
-            return c
-        pad = [(0, fs - cs) for fs, cs in zip(f.shape, c.shape)]
-        return jnp.pad(c, pad)
-    return jax.tree.map(merge, fresh, cache)
+def make_prompts(args, vocab: int):
+    """Deterministic synthetic prompts; ``--mixed`` varies length + budget."""
+    rng = np.random.RandomState(args.seed)
+    prompts, budgets = [], []
+    for i in range(args.requests):
+        if args.mixed:
+            n = int(rng.randint(args.min_prompt_len, args.prompt_len + 1))
+            g = int(rng.randint(max(1, args.gen // 4), args.gen + 1))
+        else:
+            n, g = args.prompt_len, args.gen
+        prompts.append(rng.randint(1, vocab, size=n).tolist())
+        budgets.append(g)
+    return prompts, budgets
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--engine", choices=("auto", "static", "continuous"),
+                    default="auto",
+                    help="auto: continuous when the arch's cache is pageable "
+                         "(dense/GQA/MoE), else the static contiguous path")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="number of requests (static: also the batch size)")
+    ap.add_argument("--batch", type=int, default=0,
+                    help="static batch size / continuous max_slots "
+                         "(0 -> min(requests, 8))")
     ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--min-prompt-len", type=int, default=4)
+    ap.add_argument("--mixed", action="store_true",
+                    help="mixed prompt lengths and token budgets")
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="per-request length cap (0 -> fitted to workload)")
+    ap.add_argument("--verify", action="store_true",
+                    help="check tokens against the static single-request path")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -44,47 +67,68 @@ def main(argv=None):
     if args.reduced:
         cfg = make_reduced(cfg)
     cfg = dataclasses.replace(cfg, remat="none")
-    model = build_model(cfg)
-    key = jax.random.PRNGKey(args.seed)
-    params = init_params(cfg, key)
-    max_len = args.prompt_len + args.gen
 
-    B = args.batch
-    toks = jax.random.randint(key, (B, args.prompt_len), 0, cfg.vocab)
-    if cfg.enc_dec:
-        batch = {"frames": jax.random.normal(
-            key, (B, args.prompt_len, cfg.frontend_dim), jnp.bfloat16),
-            "tokens": toks}
-    elif cfg.n_image_tokens:
-        batch = {"tokens": toks,
-                 "image_embeds": jax.random.normal(
-                     key, (B, cfg.n_image_tokens, cfg.frontend_dim), jnp.bfloat16)}
+    slots = args.batch or min(args.requests, 8)
+    ps = args.page_size
+    max_len = args.max_len or ((args.prompt_len + args.gen + ps - 1) // ps) * ps
+    scfg = ServeConfig(page_size=ps, max_slots=slots, max_len=max_len)
+
+    prompts, budgets = make_prompts(args, cfg.vocab)
+
+    engine = args.engine
+    if engine == "auto":
+        from ..models.registry import build_model
+        ok, _ = build_model(cfg).supports_paged_decode()
+        engine = "continuous" if ok and not cfg.n_image_tokens else "static"
+    if engine == "continuous":
+        eng = Engine(cfg, scfg, seed=args.seed)   # init_params inside
+        params = eng.params
+        results, metrics = eng.run_offline(prompts, budgets)
+        tokens = [r.tokens for r in results]
+        ttft = [r.ttft for r in results]
+        print(f"[serve] {cfg.name} continuous: {metrics['n_requests']} reqs, "
+              f"{metrics['new_tokens']} toks in {metrics['wall_s']*1e3:.1f} ms "
+              f"({metrics['tokens_per_s']:.1f} tok/s, "
+              f"{metrics['requests_per_s']:.2f} req/s); "
+              f"latency p50 {metrics['latency_p50_s']*1e3:.1f} / "
+              f"p95 {metrics['latency_p95_s']*1e3:.1f} ms; "
+              f"ttft p50 {np.percentile(ttft, 50)*1e3:.1f} ms")
     else:
-        batch = {"tokens": toks}
+        from ..models.registry import init_params
+        import jax
+        params = init_params(cfg, jax.random.PRNGKey(args.seed))
+        tokens, metrics = generate_static(cfg, params, prompts, budgets, scfg,
+                                          batch_size=slots, seed=args.seed)
+        print(f"[serve] {cfg.name} static(batch={slots}): "
+              f"{metrics['n_requests']} reqs, {metrics['new_tokens']} toks in "
+              f"{metrics['wall_s']*1e3:.1f} ms "
+              f"({metrics['tokens_per_s']:.1f} tok/s)")
+    print("[serve] sample generations:", [t[:8] for t in tokens[:2]])
 
-    prefill = jax.jit(make_serve_step(cfg, None, "prefill"))
-    decode = jax.jit(make_serve_step(cfg, None, "decode"))
-
-    t0 = time.perf_counter()
-    logits, cache = prefill(params, batch)
-    cache = pad_cache_to(cache, max_len, model, cfg)
-    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
-    t_prefill = time.perf_counter() - t0
-
-    out_tokens = [np.asarray(nxt)]
-    t0 = time.perf_counter()
-    for _ in range(args.gen - 1):
-        nxt, cache = decode(params, cache, nxt)
-        out_tokens.append(np.asarray(nxt))
-    jax.block_until_ready(nxt)
-    t_decode = time.perf_counter() - t0
-
-    gen = np.stack(out_tokens, axis=1)
-    print(f"[serve] {cfg.name}: prefill {args.prompt_len} tok x{B} in "
-          f"{t_prefill*1e3:.1f} ms; {args.gen-1} decode steps in "
-          f"{t_decode*1e3:.1f} ms ({(args.gen-1)*B/max(t_decode,1e-9):.1f} tok/s)")
-    print("[serve] sample generations:", gen[:2, :8].tolist())
-    return gen
+    if args.verify:
+        lens = {len(p) for p in prompts}
+        recurrent = cfg.family in ("ssm", "hybrid")
+        if cfg.enc_dec or cfg.n_image_tokens:
+            # synthetic frames / image embeddings are drawn per batch shape,
+            # so a differently-batched replay sees different frontend inputs
+            print("[serve] verify skipped: synthetic frontend inputs are "
+                  "batch-shape dependent for enc-dec/vlm archs")
+            return tokens
+        if engine == "static" and recurrent and len(lens) > 1 and slots > 1:
+            # recurrent state absorbs pad tokens, so batched static output is
+            # approximate for mixed lengths — exact comparison would be unfair
+            print("[serve] verify skipped: batched static serving of mixed-"
+                  "length prompts is approximate for recurrent families "
+                  "(state absorbs padding); rerun with --batch 1")
+            return tokens
+        ref, _ = generate_static(cfg, params, prompts, budgets, scfg,
+                                 batch_size=1, seed=args.seed)
+        bad = [i for i, (a, b) in enumerate(zip(tokens, ref)) if a != b]
+        if bad:
+            raise SystemExit(f"[serve] VERIFY FAILED for requests {bad}")
+        print(f"[serve] verify OK: {len(tokens)} requests match the "
+              f"single-request static baseline exactly")
+    return tokens
 
 
 if __name__ == "__main__":

@@ -145,6 +145,69 @@ def cache_defs(cfg: ArchConfig, batch: int, max_len: int, window: int = 0):
     }
 
 
+def paged_cache_defs(cfg: ArchConfig, num_pages: int, page_size: int):
+    """One layer's share of the paged KV pool: [P, page_size, K, D] per tensor.
+
+    Unlike ``cache_defs`` there is no batch dim — requests own disjoint page
+    sets and a per-request page table maps logical pages to physical ones."""
+    hd = cfg.head_dim_
+    return {
+        "k": ParamDef((num_pages, page_size, cfg.n_kv_heads, hd),
+                      (None, "seq", "kv_heads", "head_dim"), init="zeros"),
+        "v": ParamDef((num_pages, page_size, cfg.n_kv_heads, hd),
+                      (None, "seq", "kv_heads", "head_dim"), init="zeros"),
+    }
+
+
+def paged_decode_attention_block(cfg: ArchConfig, p, x, cache, tables, pos,
+                                 freqs):
+    """One-token decode step against the paged KV pool.
+
+    x: [B, d] slot activations; cache: {"k","v": [P, ps, K, D]} (one layer's
+    pages, shared by all slots); tables: [B, maxp] int32 logical->physical page
+    map; pos: [B] absolute positions.  The new K/V lands at page
+    ``tables[b, pos // ps]`` offset ``pos % ps``; attention reads the gathered
+    pages with positions > pos masked, so stale data in partially-filled or
+    recycled pages is softmax-zero.  Returns (out [B, d], new_cache)."""
+    B = x.shape[0]
+    ps = cache["k"].shape[1]
+    x1 = x[:, None, :]
+    q = jnp.einsum("bsd,dhe->bshe", x1, p["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", x1, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", x1, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if freqs is not None:
+        q = apply_rope(q, pos[:, None], freqs)
+        k = apply_rope(k, pos[:, None], freqs)
+    b = jnp.arange(B)
+    page = tables[b, pos // ps]                    # [B] physical pages
+    off = pos % ps
+    ck = cache["k"].at[page, off].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[page, off].set(v[:, 0].astype(cache["v"].dtype))
+
+    # gather each slot's pages into a contiguous [B, maxp*ps, K, D] view
+    kg = ck[tables].reshape(B, -1, cfg.n_kv_heads, cfg.head_dim_)
+    vg = cv[tables].reshape(B, -1, cfg.n_kv_heads, cfg.head_dim_)
+
+    scale = 1.0 / math.sqrt(cfg.head_dim_)
+    K = cfg.n_kv_heads
+    G = cfg.n_heads_padded // K
+    qg = q[:, 0].reshape(B, K, G, cfg.head_dim_)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, kg,
+                   preferred_element_type=jnp.float32) * scale
+    if cfg.attn_logit_softcap:
+        s = cfg.attn_logit_softcap * jnp.tanh(s / cfg.attn_logit_softcap)
+    idx = jnp.arange(kg.shape[1])
+    valid = idx[None, :] <= pos[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1).astype(vg.dtype)
+    o = jnp.einsum("bkgs,bskd->bkgd", a, vg).reshape(
+        B, cfg.n_heads_padded, cfg.head_dim_)
+    out = jnp.einsum("bhe,hed->bd", o, p["wo"])
+    return out, {"k": ck, "v": cv}
+
+
 def decode_attention_block(cfg: ArchConfig, p, x, cache, pos, freqs, *, window=0):
     """One-token decode step.  x: [B, d]; pos: [B] absolute positions; cache ring-
     buffered when window > 0.  Returns (out [B, d], new_cache)."""

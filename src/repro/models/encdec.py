@@ -27,6 +27,9 @@ class EncDecLM:
     def __init__(self, cfg: ArchConfig):
         self.cfg = cfg
 
+    def supports_paged_decode(self):
+        return False, "enc-dec cross-attention cache is not paged yet"
+
     # ------------------------------------------------------------ param defs
 
     def _enc_block(self):
@@ -183,7 +186,7 @@ class EncDecLM:
 
     # --------------------------------------------------------------- prefill
 
-    def prefill(self, params, batch, mesh=None):
+    def prefill(self, params, batch, mesh=None, logits_idx=None):
         """Encode frames + run the decoder prompt, emitting self/cross caches."""
         cfg = self.cfg
         enc_out = self.encode(params, batch["frames"], mesh)
@@ -209,7 +212,8 @@ class EncDecLM:
 
         x, (cself, ccross) = _scan_blocks_emit(body, x, params["dec_blocks"], unroll=cfg.unroll)
         x = apply_norm(cfg, params["final_norm"], x)
-        logits = lm_logits(cfg, params["embed"], x[:, -1])
+        last = x[:, -1] if logits_idx is None else x[jnp.arange(B), logits_idx]
+        logits = lm_logits(cfg, params["embed"], last)
         cache = {"self": cself, "cross": ccross,
                  "pos": jnp.full((B,), S, jnp.int32)}
         return logits, cache

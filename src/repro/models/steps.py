@@ -107,14 +107,29 @@ def abstract_train_args(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
 # ------------------------------------------------------------- serve steps
 
 def make_serve_step(cfg: ArchConfig, mesh: Optional[Mesh], kind: str):
-    """kind='decode': step(params, cache, tokens) -> (next_tokens, logits?, cache)
-       kind='prefill': step(params, batch) -> (logits, cache)"""
+    """kind='decode': step(params, cache, tokens) -> (next_tokens, cache)
+       kind='prefill': step(params, batch) -> (logits, cache)
+       kind='prefill_at': step(params, batch, last_idx) -> (logits, cache)
+         (logits read at per-row position ``last_idx`` — bucketed prompts)
+       kind='decode_paged': step(params, kv, tables, pos, tokens)
+         -> (next_tokens, new_kv) — slot-indexed continuous-batching decode
+         against the paged KV pool (see repro.serving)."""
     model = build_model(cfg)
     if kind == "decode":
         def step(params, cache, tokens):
             logits, cache = model.decode(params, cache, tokens, mesh)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             return nxt, cache
+        return step
+    if kind == "decode_paged":
+        def step(params, kv, tables, pos, tokens):
+            logits, kv = model.decode_paged(params, kv, tables, pos, tokens, mesh)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt, kv
+        return step
+    if kind == "prefill_at":
+        def step(params, batch, last_idx):
+            return model.prefill(params, batch, mesh, logits_idx=last_idx)
         return step
     assert kind == "prefill", kind
 

@@ -17,7 +17,8 @@ import jax.numpy as jnp
 from ..configs.base import ArchConfig
 from . import shardings
 from .attention import (attn_defs, cache_defs, decode_attention_block,
-                        full_attention_block)
+                        full_attention_block, paged_cache_defs,
+                        paged_decode_attention_block)
 from .layers import (apply_mlp, apply_norm, embed_defs, embed_tokens, lm_logits,
                      mlp_defs, norm_defs, rope_freqs)
 from .mla import (mla_cache_defs, mla_decode_block, mla_defs, mla_full_block)
@@ -410,8 +411,13 @@ class DecoderLM:
 
     # --------------------------------------------------------------- prefill
 
-    def prefill(self, params, batch, mesh=None):
+    def prefill(self, params, batch, mesh=None, logits_idx=None):
         """Forward the full prompt; returns (last-token logits, filled cache).
+
+        ``logits_idx`` ([B] int32, optional) selects which hidden position's
+        logits to return instead of the last — serving uses this to prefill
+        right-padded bucketed prompts (causal masking makes the padding
+        invisible to every real position).
 
         Implemented as forward + per-layer cache extraction.  For attention
         families the K/V are recomputed from the hidden states layer-by-layer
@@ -481,8 +487,96 @@ class DecoderLM:
             cache = {"blocks": blocks, "pos": jnp.full((B,), S, jnp.int32)}
 
         x = apply_norm(cfg, params["final_norm"], x)
-        logits = lm_logits(cfg, params["embed"], x[:, -1])
+        last = x[:, -1] if logits_idx is None else x[jnp.arange(B), logits_idx]
+        logits = lm_logits(cfg, params["embed"], last)
         return logits, cache
+
+    def supports_paged_decode(self) -> Tuple[bool, str]:
+        """Whether ``decode_paged`` covers this arch; else a reason string."""
+        cfg = self.cfg
+        if cfg.enc_dec or cfg.family in ("ssm", "hybrid"):
+            return False, f"family {cfg.family!r} keeps non-KV decode state"
+        if cfg.use_mla:
+            return False, "MLA absorbed decode cache is not paged yet"
+        if cfg.sliding_window:
+            return False, "sliding-window ring buffer is not paged yet"
+        return True, ""
+
+    def paged_cache_defs(self, num_pages: int, page_size: int):
+        """Abstract defs for the layer-stacked paged KV pool."""
+        ok, why = self.supports_paged_decode()
+        if not ok:
+            raise NotImplementedError(f"{self.cfg.name}: {why}")
+        per = paged_cache_defs(self.cfg, num_pages, page_size)
+        return stack_tree(per, self.cfg.n_layers)
+
+    def decode_paged(self, params, kv, tables, pos, tokens, mesh=None):
+        """One-token continuous-batching decode step over the paged KV pool.
+
+        kv: {"k","v": [L, P, ps, K, D]} shared pool; tables: [B, maxp] int32
+        per-slot page tables; pos: [B] int32 absolute positions; tokens: [B]
+        int32.  Returns (logits [B, V], new_kv).  Slots the scheduler considers
+        idle should have their table rows pointed at the reserved null page —
+        their writes land there and their outputs are discarded by the host."""
+        cfg = self.cfg
+        ok, why = self.supports_paged_decode()
+        if not ok:
+            raise NotImplementedError(f"{cfg.name}: {why}")
+        x = embed_tokens(params["embed"], tokens)
+        freqs = self._freqs()
+
+        def dense_step(x, p, c):
+            h = apply_norm(cfg, p["ln1"], x)
+            a, c2 = paged_decode_attention_block(cfg, p["attn"], h, c, tables,
+                                                 pos, freqs)
+            x = x + a
+            x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x))
+            return x, c2
+
+        def moe_step(x, p, c):
+            h = apply_norm(cfg, p["ln1"], x)
+            a, c2 = paged_decode_attention_block(cfg, p["attn"], h, c, tables,
+                                                 pos, freqs)
+            x = x + a
+            x = x + moe_decode_apply(cfg, p["moe"], apply_norm(cfg, p["ln2"], x),
+                                     mesh=mesh)
+            return x, c2
+
+        if cfg.is_moe:
+            k = cfg.first_k_dense
+            if k:
+                head = jax.tree.map(lambda a: a[:k], kv)
+                tail = jax.tree.map(lambda a: a[k:], kv)
+
+                def dbody(x, pc):
+                    p, c = pc
+                    return dense_step(x, p, c)
+                x, nhead = _scan_blocks(dbody, x, params["dense_blocks"], head,
+                                        unroll=cfg.unroll)
+
+                def mbody(x, pc):
+                    p, c = pc
+                    return moe_step(x, p, c)
+                x, ntail = _scan_blocks(mbody, x, params["blocks"], tail,
+                                        unroll=cfg.unroll)
+                new_kv = jax.tree.map(
+                    lambda a, b: jnp.concatenate([a, b]), nhead, ntail)
+            else:
+                def mbody(x, pc):
+                    p, c = pc
+                    return moe_step(x, p, c)
+                x, new_kv = _scan_blocks(mbody, x, params["blocks"], kv,
+                                         unroll=cfg.unroll)
+        else:
+            def dbody(x, pc):
+                p, c = pc
+                return dense_step(x, p, c)
+            x, new_kv = _scan_blocks(dbody, x, params["blocks"], kv,
+                                     unroll=cfg.unroll)
+
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = lm_logits(cfg, params["embed"], x)
+        return logits, new_kv
 
     def _prefill_hybrid(self, params, x, freqs, S):
         cfg = self.cfg

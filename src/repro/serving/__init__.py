@@ -1,0 +1,59 @@
+"""repro.serving — continuous-batching inference engine with a paged KV cache.
+
+The paper's end goal is an online recognition *service*: a MapReduce-trained
+network absorbing live traffic.  This package is the serving half of that
+story, built from the three standard pieces of a modern LLM-serving stack:
+
+``kv_pool``
+    Paged KV cache pool.  KV for every live request lives in one
+    ``[L, num_pages, page_size, K, D]`` array pair; requests own disjoint
+    page sets tracked by an int32 page table, allocation is an O(1)
+    host-side free list, and physical page 0 is a reserved write sink for
+    idle slots.  Replaces the old ``pad_cache_to`` whole-cache zero-pad copy
+    — admitting or retiring a request no longer touches device memory.
+
+``scheduler``
+    Continuous-batching policy: an admission queue, prefill/decode
+    interleaving (prefill has priority — keeping slots full is the
+    throughput lever), page-granular growth with youngest-first preemption
+    when the pool runs dry, and slot eviction on EOS or max-len.
+
+``engine``
+    Synchronous driver: ``Engine.add_request() / step() / collect()`` plus
+    the ``run_offline(prompts)`` batch front-end with per-request latency
+    (TTFT, total) and aggregate tokens/s / requests/s metrics.  Exactly
+    ``len(buckets) + 1`` programs are compiled — one single-request prefill
+    per prompt-length bucket and one fixed-shape ``[max_slots]`` paged
+    decode step — so the traffic mix never causes recompilation.
+    ``generate_static`` is the static-batching baseline (contiguous caches,
+    batch padded together, slowest member gates the batch) kept for
+    verification and benchmark comparison.
+
+Model-side support lives in ``models.attention.paged_decode_attention_block``
+(slot-indexed paged reads/writes) and ``models.transformer.DecoderLM
+.decode_paged``; knobs (page size, slot count, length caps, buckets, EOS) in
+``configs.base.ServeConfig``.
+
+Quick start::
+
+    from repro.configs import ServeConfig, get_arch, reduced
+    from repro.serving import Engine
+
+    cfg = reduced(get_arch("qwen2-0.5b"))
+    eng = Engine(cfg, ServeConfig(max_slots=8))
+    results, metrics = eng.run_offline([[1, 2, 3], [4, 5]], max_new_tokens=16)
+
+or from the CLI::
+
+    python -m repro.launch.serve --arch qwen2-0.5b --reduced \
+        --engine continuous --requests 16 --mixed --verify
+
+Covered: dense / GQA / MQA and MoE decoder LMs.  Not yet paged: MLA's
+absorbed cache, sliding-window ring buffers, SSM/RG-LRU state, enc-dec
+cross-attention (the engine raises NotImplementedError for those).
+"""
+from __future__ import annotations
+
+from .engine import Engine, RequestResult, generate_static  # noqa: F401
+from .kv_pool import NULL_PAGE, PagedKVPool  # noqa: F401
+from .scheduler import Request, Scheduler  # noqa: F401

@@ -1,0 +1,322 @@
+"""Synchronous continuous-batching inference engine.
+
+``Engine`` exposes the classic three-call serving API:
+
+    eng = Engine(cfg)                      # or Engine(cfg, scfg, params)
+    eng.add_request([1, 2, 3], max_new_tokens=16)
+    while eng.step():                      # one prefill OR one decode step
+        pass
+    results = eng.collect()                # finished RequestResults
+
+plus ``run_offline(prompts)``, the batch driver used by ``launch/serve.py``
+and the throughput benchmark.  The engine compiles exactly
+``len(buckets) + 1`` programs: one single-request prefill per prompt-length
+bucket and one fixed-shape ``[max_slots]`` paged decode step — traffic mix
+never triggers recompilation.
+
+``generate_static`` is the static-batching baseline kept for comparison and
+verification: contiguous per-request KV caches, the whole batch padded
+together and decoded until its slowest member finishes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig, ServeConfig
+from ..models.registry import build_model, init_cache, init_params
+from ..models.steps import make_serve_step
+from .kv_pool import NULL_PAGE, PagedKVPool
+from .scheduler import Request, Scheduler
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    prompt: List[int]
+    tokens: List[int]                 # generated tokens (greedy), incl. EOS
+    latency: float                    # arrival -> finish (s)
+    ttft: float                       # arrival -> first token (s)
+    n_preemptions: int = 0
+
+
+def _percentile(xs: Sequence[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    return float(np.percentile(np.asarray(xs), q))
+
+
+def _metrics(n_requests: int, n_tokens: int, latencies: Sequence[float],
+             wall: float) -> Dict[str, float]:
+    """The one metrics schema both engines report (keep them comparable)."""
+    return {
+        "n_requests": n_requests,
+        "new_tokens": n_tokens,
+        "wall_s": wall,
+        "tokens_per_s": n_tokens / max(wall, 1e-9),
+        "requests_per_s": n_requests / max(wall, 1e-9),
+        "latency_p50_s": _percentile(latencies, 50),
+        "latency_p95_s": _percentile(latencies, 95),
+    }
+
+
+def _aggregate(results: List[RequestResult], wall: float) -> Dict[str, float]:
+    return _metrics(len(results), sum(len(r.tokens) for r in results),
+                    [r.latency for r in results], wall)
+
+
+class Engine:
+    """Continuous-batching engine over a paged KV pool (attention families)."""
+
+    def __init__(self, cfg: ArchConfig, scfg: Optional[ServeConfig] = None,
+                 params=None, *, mesh=None, seed: int = 0):
+        self.cfg = cfg
+        self.scfg = scfg or ServeConfig()
+        self.model = build_model(cfg)
+        ok, why = self.model.supports_paged_decode()
+        if not ok:
+            raise NotImplementedError(f"Engine({cfg.name}): {why}")
+        if cfg.n_image_tokens:
+            raise NotImplementedError(
+                f"Engine({cfg.name}): image-conditioned prefill not wired up")
+        self.params = init_params(cfg, jax.random.PRNGKey(seed)) \
+            if params is None else params
+        self.pool = PagedKVPool(cfg, self.scfg)
+        self.sched = Scheduler(self.scfg, self.pool)
+        self._next_rid = 0
+        self._prefill = jax.jit(make_serve_step(cfg, mesh, "prefill_at"))
+        self._decode = jax.jit(make_serve_step(cfg, mesh, "decode_paged"),
+                               donate_argnums=(1,))
+        self._scatter = jax.jit(self._scatter_fn, donate_argnums=(0,))
+
+    # ----------------------------------------------------------- public API
+
+    def add_request(self, prompt: Sequence[int], max_new_tokens: int = 16,
+                    rid: Optional[int] = None) -> int:
+        """Queue a prompt; returns the request id."""
+        if rid is None:
+            rid = self._next_rid
+        self._next_rid = max(self._next_rid, rid) + 1
+        prompt = [int(t) for t in prompt]
+        max_new = min(int(max_new_tokens), self.scfg.max_len - len(prompt))
+        if max_new < 1:
+            raise ValueError(f"request {rid}: no token budget under "
+                             f"max_len={self.scfg.max_len}")
+        req = Request(rid=rid, prompt=prompt, max_new=max_new,
+                      arrival=time.perf_counter())
+        self.sched.add(req)
+        return rid
+
+    def step(self) -> bool:
+        """Run one scheduler action (a prefill or a decode). False when idle."""
+        action = self.sched.next_action()
+        if action is None:
+            return False
+        if action[0] == "prefill":
+            _, slot_idx, req = action
+            self._run_prefill(slot_idx, req)
+        else:
+            self._run_decode(action[1])
+        return True
+
+    def collect(self) -> List[RequestResult]:
+        """Pop every finished request as a RequestResult."""
+        out = []
+        for req in self.sched.finished:
+            out.append(RequestResult(
+                rid=req.rid, prompt=req.prompt, tokens=list(req.generated),
+                latency=req.t_finish - req.arrival,
+                ttft=req.t_first - req.arrival,
+                n_preemptions=req.n_preemptions))
+        self.sched.finished.clear()
+        return out
+
+    def run_offline(self, prompts: Sequence[Sequence[int]],
+                    max_new_tokens=16) -> Tuple[List[RequestResult], Dict]:
+        """Admit every prompt, drive the loop dry, return (results, metrics).
+
+        ``max_new_tokens`` is an int or a per-prompt sequence."""
+        budgets = ([max_new_tokens] * len(prompts)
+                   if isinstance(max_new_tokens, int) else list(max_new_tokens))
+        t0 = time.perf_counter()
+        for p, m in zip(prompts, budgets):
+            self.add_request(p, m)
+        while self.step():
+            pass
+        wall = time.perf_counter() - t0
+        results = sorted(self.collect(), key=lambda r: r.rid)
+        return results, _aggregate(results, wall)
+
+    # -------------------------------------------------------------- prefill
+
+    def _bucket(self, n: int) -> int:
+        for b in self.scfg.buckets:
+            if b >= n:
+                return b
+        raise ValueError(f"prompt len {n} exceeds largest bucket "
+                         f"{self.scfg.buckets[-1]}")
+
+    @staticmethod
+    def _scatter_fn(kv, ck, cv, pages):
+        """Write a prefilled contiguous cache into the pool's pages.
+
+        ck/cv: [L, 1, S, K, D] from prefill; pages: [S // page_size] int32
+        (unneeded trailing entries point at the null page)."""
+        ps = kv["k"].shape[2]
+        L, _, S, K, D = ck.shape
+        ckp = ck.reshape(L, S // ps, ps, K, D).astype(kv["k"].dtype)
+        cvp = cv.reshape(L, S // ps, ps, K, D).astype(kv["v"].dtype)
+        return {"k": kv["k"].at[:, pages].set(ckp),
+                "v": kv["v"].at[:, pages].set(cvp)}
+
+    def _run_prefill(self, slot_idx: int, req: Request) -> None:
+        lenp = len(req.prompt)
+        bucket = self._bucket(lenp)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :lenp] = req.prompt
+        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)},
+                                      jnp.asarray([lenp - 1], jnp.int32))
+        pages = self.pool.alloc(self.pool.pages_needed(lenp))
+        assert pages is not None, "scheduler admitted without page capacity"
+        page_vec = np.full((bucket // self.scfg.page_size,), NULL_PAGE, np.int32)
+        page_vec[:len(pages)] = pages
+        blocks = cache["blocks"]
+        self.pool.kv = self._scatter(self.pool.kv, blocks["k"], blocks["v"],
+                                     jnp.asarray(page_vec))
+        first = int(np.asarray(logits)[0].argmax())
+        now = time.perf_counter()
+        req.t_first = now
+        req.generated.append(first)
+        self.sched.bind(slot_idx, req, pages, pos=lenp)
+        self._maybe_retire(slot_idx, now)
+
+    # --------------------------------------------------------------- decode
+
+    def _run_decode(self, active: List[int]) -> None:
+        B, maxp = self.scfg.max_slots, self.scfg.pages_per_request
+        tokens = np.zeros((B,), np.int32)
+        pos = np.zeros((B,), np.int32)
+        tables = np.full((B, maxp), NULL_PAGE, np.int32)
+        for i in active:
+            slot = self.sched.slots[i]
+            tokens[i] = slot.req.generated[-1]
+            pos[i] = slot.pos
+            tables[i] = slot.table
+        nxt, self.pool.kv = self._decode(
+            self.params, self.pool.kv, jnp.asarray(tables), jnp.asarray(pos),
+            jnp.asarray(tokens))
+        nxt = np.asarray(nxt)
+        now = time.perf_counter()
+        for i in active:
+            slot = self.sched.slots[i]
+            slot.pos += 1
+            slot.req.generated.append(int(nxt[i]))
+            self._maybe_retire(i, now)
+
+    def _maybe_retire(self, slot_idx: int, now: float) -> None:
+        req = self.sched.slots[slot_idx].req
+        done = len(req.generated) >= req.max_new
+        if self.scfg.eos_id >= 0 and req.generated[-1] == self.scfg.eos_id:
+            done = True
+        if done:
+            req.t_finish = now
+            self.sched.retire(slot_idx)
+
+
+# ---------------------------------------------------------- static baseline
+
+@functools.lru_cache(maxsize=None)
+def _static_steps(cfg: ArchConfig, mesh=None):
+    """Jitted (prefill_at, decode) steps, cached per config so repeated
+    generate_static calls (verify replays, benchmarks) reuse compilations.
+    The decode step donates its cache argument; callers never reuse it."""
+    return (jax.jit(make_serve_step(cfg, mesh, "prefill_at")),
+            jax.jit(make_serve_step(cfg, mesh, "decode"), donate_argnums=(1,)))
+
+
+def generate_static(cfg: ArchConfig, params, prompts: Sequence[Sequence[int]],
+                    max_new_tokens=16, scfg: Optional[ServeConfig] = None,
+                    *, batch_size: int = 1, mesh=None,
+                    eos_id: Optional[int] = None,
+                    seed: int = 0) -> Tuple[List[List[int]], Dict]:
+    """Static-batching reference: contiguous KV caches, arrival-order batches
+    padded to a shared bucket, each batch decoded until its slowest request
+    is done.  ``batch_size=1`` is the exact single-request greedy baseline
+    the engine's output is verified against.  ``eos_id`` defaults to
+    ``scfg.eos_id`` so the stop rule matches the Engine's.
+
+    Right-padding is causally invisible to attention families (masked), but
+    recurrent state (ssm/hybrid) absorbs pad tokens: those families are only
+    exact when every prompt in a batch has the same length, so they skip
+    bucketing and pad to the batch max instead.  Enc-dec (audio) and vlm
+    archs get synthetic frontend inputs (random frames / image embeddings
+    derived from ``seed``), matching the pre-paging serve driver."""
+    scfg = scfg or ServeConfig()
+    eos = scfg.eos_id if eos_id is None else eos_id
+    budgets = ([max_new_tokens] * len(prompts)
+               if isinstance(max_new_tokens, int) else list(max_new_tokens))
+    prefill, decode = _static_steps(cfg, mesh)
+    key = jax.random.PRNGKey(seed)
+    n_img = cfg.n_image_tokens
+
+    def bucket_of(n: int) -> int:
+        for b in scfg.buckets:
+            if b >= n:
+                return b
+        raise ValueError(f"prompt len {n} exceeds largest bucket")
+
+    all_tokens: List[Optional[List[int]]] = [None] * len(prompts)
+    latencies: List[float] = [0.0] * len(prompts)
+    t0 = time.perf_counter()
+    for lo in range(0, len(prompts), batch_size):
+        idxs = list(range(lo, min(lo + batch_size, len(prompts))))
+        B = len(idxs)
+        lens = [len(prompts[i]) for i in idxs]
+        budget = [min(budgets[i], scfg.max_len - len(prompts[i])) for i in idxs]
+        bucket = (max(lens) if cfg.family in ("ssm", "hybrid")
+                  else bucket_of(max(lens)))
+        toks = np.zeros((B, bucket), np.int32)
+        for r, i in enumerate(idxs):
+            toks[r, :lens[r]] = prompts[i]
+        batch = {"tokens": jnp.asarray(toks)}
+        if cfg.enc_dec:
+            batch["frames"] = jax.random.normal(
+                key, (B, bucket, cfg.frontend_dim), jnp.bfloat16)
+        elif n_img:
+            batch["image_embeds"] = jax.random.normal(
+                key, (B, n_img, cfg.frontend_dim), jnp.bfloat16)
+        # vlm hidden sequence = image tokens ++ text tokens: offset positions
+        last_idx = jnp.asarray([n_img + l - 1 for l in lens], jnp.int32)
+        logits, cache = prefill(params, batch, last_idx)
+        # grow the contiguous cache to max_len (the pre-paging zero-pad copy)
+        fresh = init_cache(cfg, B, n_img + scfg.max_len)
+        cache = jax.tree.map(
+            lambda f, c: c if f.shape == c.shape else jnp.pad(
+                c, [(0, fs - cs) for fs, cs in zip(f.shape, c.shape)]),
+            fresh, cache)
+        # per-row positions: decode writes resume at each prompt's true length
+        cache["pos"] = jnp.asarray([n_img + l for l in lens], jnp.int32)
+        cur = jnp.asarray(np.asarray(logits).argmax(-1), jnp.int32)
+        gen = [np.asarray(cur).copy()]
+        # the whole batch decodes until its slowest member is done
+        for _ in range(max(budget) - 1):
+            cur, cache = decode(params, cache, cur)
+            gen.append(np.asarray(cur).copy())
+        jax.block_until_ready(cur)
+        t_batch = time.perf_counter() - t0
+        stacked = np.stack(gen, axis=1)               # [B, max(budget)]
+        for r, i in enumerate(idxs):
+            row = stacked[r, :budget[r]].tolist()
+            if eos >= 0 and eos in row:
+                row = row[:row.index(eos) + 1]
+            all_tokens[i] = row
+            latencies[i] = t_batch
+    wall = time.perf_counter() - t0
+    return all_tokens, _metrics(len(prompts), sum(len(t) for t in all_tokens),
+                                latencies, wall)

@@ -1,0 +1,76 @@
+"""Paged KV cache pool: fixed-size pages, free-list allocation, page tables.
+
+The pool replaces the old ``pad_cache_to`` whole-cache zero-pad copy with
+vLLM/MaxText-style paging: KV for *all* live requests lives in one
+``[L, num_pages, page_size, K, D]`` pair of arrays, and each request owns an
+ordered list of physical pages recorded in an int32 page table.  Allocation
+and release are O(1) host-side free-list operations — admitting or retiring a
+request never touches the device arrays.
+
+Physical page 0 is reserved as the *null page*: idle decode slots keep their
+table rows zeroed so their (discarded) writes land there, and page-table
+entries past a request's allocated region point at it harmlessly (attention
+masks positions > pos, so stale bytes are softmax-zero).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from ..configs.base import ArchConfig, ServeConfig
+from ..models.params import init_tree
+from ..models.registry import build_model
+
+NULL_PAGE = 0
+
+
+class PagedKVPool:
+    """Device KV pages + host-side page accounting for the serving engine."""
+
+    def __init__(self, cfg: ArchConfig, scfg: ServeConfig):
+        self.cfg = cfg
+        self.scfg = scfg
+        model = build_model(cfg)
+        defs = model.paged_cache_defs(scfg.total_pages, scfg.page_size)
+        # zeros init: pages hold only finite values from day one, so masked
+        # (zero-weight) reads of stale pages can never produce NaNs
+        self.kv: Dict[str, jax.Array] = init_tree(defs, jax.random.PRNGKey(0))
+        self._free: List[int] = list(range(scfg.total_pages - 1, NULL_PAGE, -1))
+        self._allocated: set = set()
+
+    # ------------------------------------------------------------ accounting
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_allocated(self) -> int:
+        return len(self._allocated)
+
+    def pages_needed(self, n_tokens: int) -> int:
+        ps = self.scfg.page_size
+        return -(-n_tokens // ps)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop ``n`` pages from the free list; None (no partial grab) if short."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._allocated.update(pages)
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            assert p != NULL_PAGE, "tried to free the reserved null page"
+            assert p in self._allocated, f"double free of page {p}"
+            self._allocated.remove(p)
+            self._free.append(p)
+
+    # ------------------------------------------------------------ page tables
+
+    def new_table(self) -> np.ndarray:
+        """An all-null page table row ([pages_per_request] int32)."""
+        return np.full((self.scfg.pages_per_request,), NULL_PAGE, np.int32)

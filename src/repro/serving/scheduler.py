@@ -1,0 +1,167 @@
+"""Continuous-batching request scheduler.
+
+Policy (SGLang/Orca-style, simplified to a synchronous loop):
+
+* **Admission**: whenever a decode slot is free and the page pool can cover
+  the prompt, the oldest queued request is admitted via a single-request
+  bucketed prefill.  Prefill has priority over decode — keeping slots full
+  is what buys continuous batching its throughput.
+* **Decode**: otherwise every live slot advances one token in a single
+  fixed-shape jitted step; idle slots ride along masked (their page-table
+  rows point at the null page).
+* **Growth / preemption**: a slot crossing a page boundary gets a fresh page
+  from the free list; if the pool is exhausted, the youngest slot is
+  preempted — its pages are freed and the request is requeued from scratch
+  (greedy decode is deterministic, so the replay reproduces its prefix).
+* **Eviction**: EOS or max-tokens retires the slot and frees its pages
+  immediately, making room for the next admission.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional, Tuple
+
+import numpy as np
+
+from ..configs.base import ServeConfig
+from .kv_pool import PagedKVPool
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    # --- filled in by the engine ---
+    arrival: float = 0.0
+    t_first: Optional[float] = None      # first-token (prefill done) time
+    t_finish: Optional[float] = None
+    generated: List[int] = dataclasses.field(default_factory=list)
+    n_preemptions: int = 0
+
+    @property
+    def finished(self) -> bool:
+        return self.t_finish is not None
+
+
+@dataclasses.dataclass
+class Slot:
+    """A live request bound to a decode-batch row."""
+    req: Request
+    pos: int                              # next write position (= tokens cached)
+    table: np.ndarray                     # [pages_per_request] int32
+    pages: List[int]                      # allocated physical pages, in order
+    admit_seq: int                        # admission order (preemption victim key)
+
+
+class Scheduler:
+    def __init__(self, scfg: ServeConfig, pool: PagedKVPool):
+        self.scfg = scfg
+        self.pool = pool
+        self.queue: Deque[Request] = deque()
+        self.slots: List[Optional[Slot]] = [None] * scfg.max_slots
+        self.finished: List[Request] = []
+        self._admit_seq = 0
+
+    # ------------------------------------------------------------- inventory
+
+    def add(self, req: Request) -> None:
+        if len(req.prompt) >= self.scfg.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt len {len(req.prompt)} >= "
+                f"max_len {self.scfg.max_len}")
+        self.queue.append(req)
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.slots)
+
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    # ------------------------------------------------------------ scheduling
+
+    def next_action(self) -> Optional[Tuple]:
+        """('prefill', slot_idx, request) | ('decode', [slot_idx, ...]) | None."""
+        if self.queue:
+            idx = self.free_slot()
+            need = self.pool.pages_needed(len(self.queue[0].prompt))
+            if idx is not None and self.pool.num_free >= need:
+                return ("prefill", idx, self.queue.popleft())
+        active = self.active_slots()
+        if active:
+            self._grow_pages()
+            active = self.active_slots()          # growth may have preempted
+            if active:
+                return ("decode", active)
+        if self.queue:
+            # no slot/page capacity and nothing running to free any: stuck
+            raise RuntimeError(
+                f"scheduler deadlock: request {self.queue[0].rid} needs "
+                f"{self.pool.pages_needed(len(self.queue[0].prompt))} pages, "
+                f"pool has {self.pool.num_free} free and no live slots")
+        return None
+
+    # ----------------------------------------------------- slot transitions
+
+    def bind(self, slot_idx: int, req: Request, pages: List[int],
+             pos: int) -> Slot:
+        table = self.pool.new_table()
+        table[:len(pages)] = pages
+        slot = Slot(req=req, pos=pos, table=table, pages=pages,
+                    admit_seq=self._admit_seq)
+        self._admit_seq += 1
+        self.slots[slot_idx] = slot
+        return slot
+
+    def retire(self, slot_idx: int) -> Request:
+        """EOS / max-len eviction: free every page the slot holds."""
+        slot = self.slots[slot_idx]
+        assert slot is not None
+        self.pool.free(slot.pages)
+        self.slots[slot_idx] = None
+        self.finished.append(slot.req)
+        return slot.req
+
+    def preempt(self, slot_idx: int) -> Request:
+        """Free the slot's pages and requeue its request for a clean replay."""
+        slot = self.slots[slot_idx]
+        assert slot is not None
+        self.pool.free(slot.pages)
+        self.slots[slot_idx] = None
+        slot.req.generated.clear()
+        slot.req.t_first = None
+        slot.req.n_preemptions += 1
+        self.queue.appendleft(slot.req)
+        return slot.req
+
+    def _grow_pages(self) -> None:
+        """Before a decode step, every live slot must own the page its next
+        write lands in.  Preempts youngest-first when the pool runs dry."""
+        ps = self.scfg.page_size
+        for i in sorted(self.active_slots(),
+                        key=lambda i: self.slots[i].admit_seq):
+            slot = self.slots[i]
+            if slot is None:
+                continue
+            if slot.pos % ps != 0 or slot.pos // ps < len(slot.pages):
+                continue                       # current page still has room
+            while True:
+                pages = self.pool.alloc(1)
+                if pages is not None:
+                    slot.table[len(slot.pages)] = pages[0]
+                    slot.pages.extend(pages)
+                    break
+                victims = [j for j in self.active_slots() if j != i]
+                if not victims:
+                    raise RuntimeError(
+                        "page pool exhausted with a single live slot; "
+                        "increase ServeConfig.num_pages")
+                victim = max(victims, key=lambda j: self.slots[j].admit_seq)
+                self.preempt(victim)

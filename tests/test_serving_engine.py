@@ -1,0 +1,170 @@
+"""Continuous-batching engine invariants.
+
+* page pool alloc/free bookkeeping (free-list, null page, double-free guard)
+* mixed-length concurrent batches produce exactly the greedy tokens of the
+  one-request-at-a-time static baseline
+* retirement (EOS / max-len) and preemption return every page to the pool
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, ServeConfig, reduced
+from repro.models.registry import init_params
+from repro.serving import Engine, NULL_PAGE, PagedKVPool, generate_static
+
+
+def _cfg(name="qwen2-0.5b"):
+    return dataclasses.replace(reduced(ARCHS[name]), remat="none")
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(1, cfg.vocab, size=n).tolist() for n in lens]
+
+
+# ------------------------------------------------------------------ kv pool
+
+def test_pool_alloc_free_invariants():
+    scfg = ServeConfig(page_size=16, max_slots=2, max_len=64)
+    pool = PagedKVPool(_cfg(), scfg)
+    total = scfg.total_pages - 1            # page 0 reserved
+    assert pool.num_free == total
+
+    a = pool.alloc(3)
+    b = pool.alloc(2)
+    assert len(a) == 3 and len(b) == 2
+    assert NULL_PAGE not in a + b           # null page never handed out
+    assert len(set(a + b)) == 5             # no page handed out twice
+    assert pool.num_free == total - 5
+    assert pool.num_allocated == 5
+
+    assert pool.alloc(pool.num_free + 1) is None   # no partial grabs
+    assert pool.num_free == total - 5              # failed alloc took nothing
+
+    pool.free(b)
+    assert pool.num_free == total - 3
+    with pytest.raises(AssertionError):
+        pool.free(b)                        # double free
+    pool.free(a)
+    assert pool.num_free == total and pool.num_allocated == 0
+
+
+def test_pool_pages_needed_and_geometry():
+    scfg = ServeConfig(page_size=16, max_slots=4, max_len=96)
+    pool = PagedKVPool(_cfg(), scfg)
+    assert pool.pages_needed(1) == 1
+    assert pool.pages_needed(16) == 1
+    assert pool.pages_needed(17) == 2
+    assert scfg.pages_per_request == 6
+    assert pool.kv["k"].shape[1] == scfg.total_pages
+    assert pool.kv["k"].shape[2] == scfg.page_size
+
+
+# ------------------------------------------------- correctness vs baseline
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "dbrx-132b"])
+def test_mixed_batch_matches_single_request_baseline(arch):
+    cfg = _cfg(arch)
+    scfg = ServeConfig(page_size=8, max_slots=4, max_len=48)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    prompts = _prompts(cfg, [3, 30, 11, 7, 22, 15])
+    budgets = [6, 4, 8, 5, 7, 3]
+
+    eng = Engine(cfg, scfg, params)
+    results, metrics = eng.run_offline(prompts, budgets)
+    got = [r.tokens for r in results]
+    ref, _ = generate_static(cfg, params, prompts, budgets, scfg, batch_size=1)
+    assert got == ref
+    assert metrics["n_requests"] == len(prompts)
+    assert metrics["new_tokens"] == sum(budgets)
+    assert all(r.ttft <= r.latency for r in results)
+
+
+def test_incremental_api_and_slot_reuse():
+    """add_request/step/collect with more requests than slots: retired slots
+    must be refilled from the queue and results stay per-request correct."""
+    cfg = _cfg()
+    scfg = ServeConfig(page_size=8, max_slots=2, max_len=32)
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    prompts = _prompts(cfg, [5, 9, 14, 4, 20], seed=3)
+    eng = Engine(cfg, scfg, params)
+    for p in prompts:
+        eng.add_request(p, max_new_tokens=5)
+    steps = 0
+    while eng.step():
+        steps += 1
+        assert steps < 1000
+    results = sorted(eng.collect(), key=lambda r: r.rid)
+    assert [r.rid for r in results] == list(range(5))
+    ref, _ = generate_static(cfg, params, prompts, 5, scfg, batch_size=1)
+    assert [r.tokens for r in results] == ref
+
+
+# ------------------------------------------------------ eviction / preempt
+
+def test_eviction_frees_all_pages():
+    cfg = _cfg()
+    scfg = ServeConfig(page_size=8, max_slots=3, max_len=32)
+    params = init_params(cfg, jax.random.PRNGKey(4))
+    eng = Engine(cfg, scfg, params)
+    prompts = _prompts(cfg, [10, 17, 6, 21, 9, 13], seed=5)
+    eng.run_offline(prompts, [7, 3, 6, 4, 8, 5])
+    assert eng.pool.num_allocated == 0
+    assert eng.pool.num_free == scfg.total_pages - 1
+    assert all(s is None for s in eng.sched.slots)
+
+
+def test_eos_retires_early_and_frees_pages():
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(6))
+    prompts = _prompts(cfg, [12, 8], seed=7)
+    # discover what the model greedily emits, then declare one of those
+    # tokens EOS and re-run: generation must stop at (and include) it
+    free_scfg = ServeConfig(page_size=8, max_slots=2, max_len=64)
+    eng = Engine(cfg, free_scfg, params)
+    results, _ = eng.run_offline(prompts, 12)
+    eos = results[0].tokens[3]
+    scfg = dataclasses.replace(free_scfg, eos_id=eos)
+    eng2 = Engine(cfg, scfg, params)
+    results2, _ = eng2.run_offline(prompts, 12)
+    r0 = results2[0].tokens
+    assert r0[-1] == eos and len(r0) <= 12
+    assert eos not in r0[:-1]
+    assert r0 == results[0].tokens[:len(r0)]
+    assert eng2.pool.num_allocated == 0
+
+
+def test_preemption_under_page_pressure_still_exact():
+    """A pool too small for all admitted requests forces preemption +
+    deterministic replay; final tokens must still match the baseline."""
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(8))
+    # 3 slots x 4 pages/request = 12 pages worst-case; give 6 (+null page)
+    scfg = ServeConfig(page_size=8, max_slots=3, max_len=32, num_pages=7)
+    prompts = _prompts(cfg, [7, 15, 9, 12], seed=9)
+    budgets = [9, 8, 10, 7]
+    eng = Engine(cfg, scfg, params)
+    results, _ = eng.run_offline(prompts, budgets)
+    ref, _ = generate_static(cfg, params, prompts, budgets, scfg, batch_size=1)
+    assert [r.tokens for r in results] == ref
+    assert sum(r.n_preemptions for r in results) > 0   # pressure was real
+    assert eng.pool.num_allocated == 0
+
+
+# ------------------------------------------------------------ engine guards
+
+def test_unsupported_arch_raises():
+    cfg = _cfg("mamba2-780m")
+    with pytest.raises(NotImplementedError):
+        Engine(cfg, ServeConfig())
+
+
+def test_prompt_too_long_rejected():
+    cfg = _cfg()
+    eng = Engine(cfg, ServeConfig(page_size=8, max_slots=2, max_len=16),
+                 init_params(cfg, jax.random.PRNGKey(0)))
+    with pytest.raises(ValueError):
+        eng.add_request(list(range(1, 17)), max_new_tokens=4)

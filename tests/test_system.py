@@ -56,10 +56,12 @@ def test_lm_train_driver_loss_decreases():
 
 def test_lm_serve_driver_generates():
     from repro.launch.serve import main as serve_main
-    gen = serve_main(["--arch", "qwen2-0.5b", "--reduced", "--batch", "2",
-                      "--prompt-len", "16", "--gen", "4"])
-    assert gen.shape == (2, 4)
-    assert gen.dtype == np.int32
+    # continuous engine, verified against the static single-request baseline
+    gen = serve_main(["--arch", "qwen2-0.5b", "--reduced", "--requests", "2",
+                      "--batch", "2", "--prompt-len", "16", "--gen", "4",
+                      "--engine", "continuous", "--verify"])
+    assert np.asarray(gen).shape == (2, 4)
+    assert all(isinstance(t, int) for row in gen for t in row)
 
 
 def test_mapreduce_engine_trains_lm():
