@@ -1,19 +1,27 @@
-"""Static-batch vs continuous-batch serving throughput (BENCH_serve.json).
+"""Serving throughput: static vs continuous vs continuous + prefix cache.
 
-Offered load: N concurrent requests with mixed prompt lengths (8-48) and a
-head-of-line-blocking budget mix — every ``C``-request arrival group is
-short chat-style turns plus one long-form generation — served at a fixed
-concurrency cap C (the decode batch width both schedulers get).  The
-static baseline processes arrival-order batches of C, padding each batch's
-prompts together and decoding until its slowest member finishes, so every
-short request's slot idles for the straggler's full budget; the continuous
-engine retires slots at EOS/budget and backfills from the queue, so a slot
-only spends steps on tokens someone asked for.  Both paths are fully
-warmed (every jit shape compiled) before timing, and the static path's
-greedy tokens are checked to match the engine's.
+Offered load: N concurrent requests drawn from ``families`` distinct prompt
+*families* — every request is a shared family prefix plus a unique suffix
+(mixed lengths), with a head-of-line-blocking budget mix: every ``C``-request
+arrival group is short chat-style turns plus one long-form generation.  The
+shared prefixes are the redundancy the source paper complains about
+("redundant data aggravates the system workload"): without a prefix cache
+every request prefills its family prefix from scratch.
 
-Emits BENCH_serve.json with requests/s, tokens/s, p50/p95 latency for both
-engines and the continuous/static tokens/s speedup.
+Three serving paths are timed at the same concurrency cap C:
+
+* ``static``   — arrival-order batches of C, padded together, each batch
+  gated by its slowest member (the pre-paging baseline);
+* ``continuous`` — paged KV pool + continuous batching, prefix cache off;
+* ``continuous_prefix_cache`` — same engine with the radix prefix cache:
+  matched prefix pages are shared/refcounted and only uncached tails are
+  prefilled.
+
+All paths are fully warmed (every jit shape compiled) before timing and all
+greedy tokens are checked to match; the cache row additionally reports
+cached/prefilled prompt tokens, hit rate, and TTFT — the win to look for is
+``prefill_tokens`` dropping by roughly the duplicated-prefix mass and TTFT
+p50 shrinking with it.  Emits BENCH_serve.json.
 
   PYTHONPATH=src python -m benchmarks.serve_throughput [--requests 16]
 """
@@ -28,58 +36,84 @@ import time
 import numpy as np
 
 
+def make_workload(vocab: int, requests: int, families: int, prefix_len: int,
+                  suffix_lo: int, suffix_hi: int, slots: int, gen_short: int,
+                  gen_long: int, seed: int):
+    rng = np.random.RandomState(seed)
+    fams = [rng.randint(1, vocab, size=prefix_len).tolist()
+            for _ in range(families)]
+    prompts = [fams[i % families] + rng.randint(1, vocab, size=int(
+        rng.randint(suffix_lo, suffix_hi + 1))).tolist()
+        for i in range(requests)]
+    # one long-form generation per arrival group of `slots`: each static
+    # batch stalls on its straggler while continuous retires + backfills
+    budgets = [gen_long if i % slots == slots - 1 else gen_short
+               for i in range(requests)]
+    return prompts, budgets
+
+
 def run(arch: str = "qwen2-0.5b", requests: int = 16, slots: int = 4,
-        prompt_lo: int = 8, prompt_hi: int = 48, gen_short: int = 4,
-        gen_long: int = 128, seed: int = 0, out: str = "BENCH_serve.json"):
-    import jax
+        families: int = 4, prefix_len: int = 24, suffix_lo: int = 4,
+        suffix_hi: int = 24, gen_short: int = 4, gen_long: int = 128,
+        seed: int = 0, out: str = "BENCH_serve.json"):
     from repro.configs import ServeConfig, get_arch, reduced
     from repro.serving import Engine, generate_static
 
     cfg = dataclasses.replace(reduced(get_arch(arch)), remat="none")
     ps = 16
-    max_len = ((prompt_hi + gen_long + ps - 1) // ps) * ps
+    max_len = ((prefix_len + suffix_hi + gen_long + ps - 1) // ps) * ps
     scfg = ServeConfig(page_size=ps, max_slots=slots, max_len=max_len)
+    scfg_cache = dataclasses.replace(scfg, prefix_cache=True)
 
-    rng = np.random.RandomState(seed)
-    prompts = [rng.randint(1, cfg.vocab, size=int(rng.randint(
-        prompt_lo, prompt_hi + 1))).tolist() for _ in range(requests)]
-    # one long-form generation per arrival group of `slots`: each static
-    # batch stalls on its straggler while continuous retires + backfills
-    budgets = [gen_long if i % slots == slots - 1 else gen_short
-               for i in range(requests)]
+    prompts, budgets = make_workload(cfg.vocab, requests, families,
+                                     prefix_len, suffix_lo, suffix_hi, slots,
+                                     gen_short, gen_long, seed)
 
     eng = Engine(cfg, scfg, seed=seed)
     params = eng.params
 
     # warm-up: replay the whole workload with a 2-token budget so every
-    # prefill bucket, scatter shape, and decode step both paths will use is
-    # compiled before the timed runs (prefill shapes depend only on lengths)
+    # prefill bucket and decode step all three paths will use is compiled
+    # before the timed runs (jitted steps are cached per ArchConfig, so the
+    # timed engines below reuse these compilations)
     eng.run_offline(prompts, 2)
-    eng.collect()
+    Engine(cfg, scfg_cache, params).run_offline(prompts, 2)
     generate_static(cfg, params, prompts, 2, scfg, batch_size=slots)
 
     # timed: static
     static_tokens, static_m = generate_static(
         cfg, params, prompts, budgets, scfg, batch_size=slots)
 
-    # timed: continuous (fresh engine state, same params/pool geometry)
-    eng2 = Engine(cfg, scfg, params)
-    eng2._prefill, eng2._decode, eng2._scatter = \
-        eng._prefill, eng._decode, eng._scatter   # reuse compiled steps
-    results, cont_m = eng2.run_offline(prompts, budgets)
+    # timed: continuous, prefix cache off (fresh pool, same params)
+    results, cont_m = Engine(cfg, scfg, params).run_offline(prompts, budgets)
 
-    match = [r.tokens for r in results] == static_tokens
+    # timed: continuous, prefix cache on
+    eng_c = Engine(cfg, scfg_cache, params)
+    results_c, cache_m = eng_c.run_offline(prompts, budgets)
+
+    match = ([r.tokens for r in results] == static_tokens
+             and [r.tokens for r in results_c] == static_tokens)
     speedup = cont_m["tokens_per_s"] / max(static_m["tokens_per_s"], 1e-9)
+    cache_speedup = (cache_m["tokens_per_s"]
+                     / max(cont_m["tokens_per_s"], 1e-9))
     payload = {
         "arch": cfg.name,
         "requests": requests,
         "concurrency": slots,
+        "prefix_families": families,
+        "prefix_len": prefix_len,
         "prompt_lens": [len(p) for p in prompts],
         "token_budgets": budgets,
         "tokens_match_static": match,
         "static": static_m,
         "continuous": cont_m,
+        "continuous_prefix_cache": cache_m,
         "speedup_tokens_per_s": speedup,
+        "prefix_cache_speedup_tokens_per_s": cache_speedup,
+        "prefix_cache_prefill_tokens_saved":
+            cont_m["prefill_tokens"] - cache_m["prefill_tokens"],
+        "prefix_cache_ttft_p50_ratio":
+            cache_m["ttft_p50_s"] / max(cont_m["ttft_p50_s"], 1e-9),
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
     }
     path = os.path.join(os.path.dirname(os.path.dirname(
@@ -87,10 +121,17 @@ def run(arch: str = "qwen2-0.5b", requests: int = 16, slots: int = 4,
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"serve_throughput,arch={cfg.name},requests={requests},"
-          f"concurrency={slots},"
+          f"concurrency={slots},families={families},"
           f"static_tok_s={static_m['tokens_per_s']:.1f},"
           f"cont_tok_s={cont_m['tokens_per_s']:.1f},"
-          f"speedup={speedup:.2f},match={match}")
+          f"cache_tok_s={cache_m['tokens_per_s']:.1f},"
+          f"speedup={speedup:.2f},cache_speedup={cache_speedup:.2f},"
+          f"match={match}")
+    print(f"serve_throughput,prefill_tokens="
+          f"{cont_m['prefill_tokens']}->{cache_m['prefill_tokens']},"
+          f"hit_rate={cache_m['cache_hit_rate']:.2f},"
+          f"ttft_p50_ms={cont_m['ttft_p50_s']*1e3:.1f}"
+          f"->{cache_m['ttft_p50_s']*1e3:.1f}")
     print(f"serve_throughput,wrote={path}")
     return payload
 
@@ -100,10 +141,13 @@ def main():
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--families", type=int, default=4)
+    ap.add_argument("--prefix-len", type=int, default=24)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
     run(arch=args.arch, requests=args.requests, slots=args.slots,
+        families=args.families, prefix_len=args.prefix_len,
         seed=args.seed, out=args.out)
 
 

@@ -4,6 +4,9 @@ recurrent families (``--engine auto`` picks per arch).
   PYTHONPATH=src python examples/serve_lm.py --arch qwen2-0.5b --mixed
   PYTHONPATH=src python examples/serve_lm.py --arch mamba2-780m
   PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-2b --gen 32
+  # shared-prefix traffic served through the radix prefix cache
+  PYTHONPATH=src python examples/serve_lm.py --arch qwen2-0.5b \
+      --requests 8 --shared-prefix 2 --prefix-cache
 """
 import argparse
 
@@ -18,13 +21,20 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--mixed", action="store_true")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="number of shared prompt-prefix families")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share prefix KV pages via the radix cache")
     args = ap.parse_args()
     serve_main(["--arch", args.arch, "--reduced",
                 "--requests", str(args.requests),
                 "--batch", str(args.batch),
                 "--prompt-len", str(args.prompt_len),
                 "--gen", str(args.gen)]
-               + (["--mixed"] if args.mixed else []))
+               + (["--mixed"] if args.mixed else [])
+               + (["--shared-prefix", str(args.shared_prefix)]
+                  if args.shared_prefix else [])
+               + (["--prefix-cache"] if args.prefix_cache else []))
 
 
 if __name__ == "__main__":

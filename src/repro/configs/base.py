@@ -217,11 +217,14 @@ class ServeConfig:
     num_pages: int = 0           # 0 -> auto: max_slots * pages_per_request + 1
     prefill_buckets: Tuple[int, ...] = ()   # () -> pow2 multiples of page_size
     eos_id: int = -1             # -1: no EOS; requests run to max_new tokens
+    prefix_cache: bool = False   # radix-tree prompt-prefix KV sharing
+    cache_eviction: str = "lru"  # lru | none (no eviction under pressure)
 
     def __post_init__(self):
         assert self.page_size > 0 and self.max_slots > 0
         assert self.max_len % self.page_size == 0, \
             "max_len must be a multiple of page_size (page-table geometry)"
+        assert self.cache_eviction in ("lru", "none"), self.cache_eviction
 
     @property
     def pages_per_request(self) -> int:

@@ -8,6 +8,11 @@
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
       --engine static --requests 4 --prompt-len 32 --gen 16
 
+  # radix prefix cache: share KV pages across requests with common prefixes
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
+      --engine continuous --requests 16 --shared-prefix 4 --prefix-cache \
+      --verify
+
 ``--verify`` additionally replays every request through the static
 single-request baseline and checks the greedy tokens agree per request.
 """
@@ -23,8 +28,12 @@ from ..serving import Engine, generate_static
 
 
 def make_prompts(args, vocab: int):
-    """Deterministic synthetic prompts; ``--mixed`` varies length + budget."""
+    """Deterministic synthetic prompts; ``--mixed`` varies length + budget,
+    ``--shared-prefix F`` draws each prompt as one of F family prefixes plus
+    a unique suffix (the workload a prefix cache pays off on)."""
     rng = np.random.RandomState(args.seed)
+    fams = [rng.randint(1, vocab, size=max(args.prompt_len // 2, 1)).tolist()
+            for _ in range(args.shared_prefix)] if args.shared_prefix else []
     prompts, budgets = [], []
     for i in range(args.requests):
         if args.mixed:
@@ -32,7 +41,12 @@ def make_prompts(args, vocab: int):
             g = int(rng.randint(max(1, args.gen // 4), args.gen + 1))
         else:
             n, g = args.prompt_len, args.gen
-        prompts.append(rng.randint(1, vocab, size=n).tolist())
+        if fams:
+            fam = fams[i % len(fams)]
+            tail = max(n - len(fam), 1)
+            prompts.append(fam + rng.randint(1, vocab, size=tail).tolist())
+        else:
+            prompts.append(rng.randint(1, vocab, size=n).tolist())
         budgets.append(g)
     return prompts, budgets
 
@@ -54,8 +68,16 @@ def main(argv=None):
     ap.add_argument("--min-prompt-len", type=int, default=4)
     ap.add_argument("--mixed", action="store_true",
                     help="mixed prompt lengths and token budgets")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="F",
+                    help="draw prompts from F shared prefix families "
+                         "(0: every prompt independent)")
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix-tree prefix cache: share KV pages across "
+                         "requests with common prompt prefixes")
+    ap.add_argument("--cache-eviction", choices=("lru", "none"),
+                    default="lru")
     ap.add_argument("--max-len", type=int, default=0,
                     help="per-request length cap (0 -> fitted to workload)")
     ap.add_argument("--verify", action="store_true",
@@ -71,7 +93,9 @@ def main(argv=None):
     slots = args.batch or min(args.requests, 8)
     ps = args.page_size
     max_len = args.max_len or ((args.prompt_len + args.gen + ps - 1) // ps) * ps
-    scfg = ServeConfig(page_size=ps, max_slots=slots, max_len=max_len)
+    scfg = ServeConfig(page_size=ps, max_slots=slots, max_len=max_len,
+                       prefix_cache=args.prefix_cache,
+                       cache_eviction=args.cache_eviction)
 
     prompts, budgets = make_prompts(args, cfg.vocab)
 
@@ -80,6 +104,9 @@ def main(argv=None):
         from ..models.registry import build_model
         ok, _ = build_model(cfg).supports_paged_decode()
         engine = "continuous" if ok and not cfg.n_image_tokens else "static"
+    if engine == "static" and args.prefix_cache:
+        print("[serve] WARNING: --prefix-cache only applies to the "
+              "continuous engine; the static path serves without it")
     if engine == "continuous":
         eng = Engine(cfg, scfg, seed=args.seed)   # init_params inside
         params = eng.params
@@ -93,6 +120,11 @@ def main(argv=None):
               f"latency p50 {metrics['latency_p50_s']*1e3:.1f} / "
               f"p95 {metrics['latency_p95_s']*1e3:.1f} ms; "
               f"ttft p50 {np.percentile(ttft, 50)*1e3:.1f} ms")
+        if args.prefix_cache:
+            print(f"[serve] prefix cache: {metrics['cached_tokens']}/"
+                  f"{metrics['prompt_tokens']} prompt tokens served from "
+                  f"cache (hit rate {metrics['cache_hit_rate']:.2f}, "
+                  f"prefilled {metrics['prefill_tokens']})")
     else:
         from ..models.registry import init_params
         import jax

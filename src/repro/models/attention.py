@@ -61,7 +61,8 @@ def chunked_attention(
     window: int = 0,
     q_block: int = 512,
     softcap: float = 0.0,
-    q_offset: int = 0,       # absolute position of q[0] relative to k[0]
+    q_offset=0,              # absolute position of q[0] relative to k[0];
+                             # int (static) or [B] int32 (per-row, traced)
     unroll: bool = False,
 ) -> jax.Array:
     B, Sq, H, D = q.shape
@@ -77,20 +78,21 @@ def chunked_attention(
     qb = q.reshape(B, nb, q_block, K, G, D)
     qb = jnp.moveaxis(qb, 1, 0)                      # [nb, B, q_block, K, G, D]
     kpos = jnp.arange(k.shape[1])
+    qoff = jnp.asarray(q_offset, jnp.int32).reshape(-1)[:, None]    # [B or 1, 1]
 
     def block(carry, inp):
         qi, bidx = inp
-        qpos = q_offset + bidx * q_block + jnp.arange(q_block)
+        qpos = qoff + bidx * q_block + jnp.arange(q_block)[None, :]  # [B or 1, q]
         s = jnp.einsum("bqkgd,bskd->bkgqs", qi, k, preferred_element_type=jnp.float32)
         s = s * scale
         if softcap:
             s = softcap * jnp.tanh(s / softcap)
-        mask = jnp.ones((q_block, k.shape[1]), bool)
+        mask = jnp.ones((qoff.shape[0], q_block, k.shape[1]), bool)
         if causal:
-            mask &= kpos[None, :] <= qpos[:, None]
+            mask &= kpos[None, None, :] <= qpos[:, :, None]
         if window:
-            mask &= kpos[None, :] > qpos[:, None] - window
-        s = jnp.where(mask[None, None, None], s, NEG_INF)
+            mask &= kpos[None, None, :] > qpos[:, :, None] - window
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
         a = jax.nn.softmax(s, axis=-1).astype(v.dtype)
         o = jnp.einsum("bkgqs,bskd->bqkgd", a, v)
         return carry, o
@@ -157,6 +159,42 @@ def paged_cache_defs(cfg: ArchConfig, num_pages: int, page_size: int):
         "v": ParamDef((num_pages, page_size, cfg.n_kv_heads, hd),
                       (None, "seq", "kv_heads", "head_dim"), init="zeros"),
     }
+
+
+def paged_prefill_attention_block(cfg: ArchConfig, p, x, cache, tables, start,
+                                  n_live, freqs, *, q_block=512, unroll=False):
+    """Multi-token prefill step against the paged KV pool, at an offset.
+
+    x: [B, T, d] tail activations; cache: {"k","v": [P, ps, K, D]} one layer's
+    pages; tables: [B, maxp] int32 logical->physical page map; start: [B]
+    absolute position of x[:, 0]; n_live: [B] count of real (non-padding)
+    tail tokens.  Row i's K/V lands at page ``tables[b, (start+i) // ps]``
+    offset ``(start+i) % ps``; padding rows (i >= n_live) are routed to the
+    reserved null page (physical page 0, a write sink) so they can never
+    clobber live entries.  Queries attend to the gathered pages with absolute
+    causal masking, so a cached prefix written by an earlier request is read
+    exactly as if this request had prefilled it itself.
+    Returns (out [B, T, d], new_cache)."""
+    B, T, _ = x.shape
+    ps = cache["k"].shape[1]
+    q, k, v = qkv(cfg, p, x)
+    positions = start[:, None] + jnp.arange(T)[None, :]              # [B, T]
+    if freqs is not None:
+        q = apply_rope(q, positions, freqs)
+        k = apply_rope(k, positions, freqs)
+    live = jnp.arange(T)[None, :] < n_live[:, None]                  # [B, T]
+    page = tables[jnp.arange(B)[:, None], positions // ps]
+    page = jnp.where(live, page, 0)                  # padding -> null page
+    off = positions % ps
+    ck = cache["k"].at[page, off].set(k.astype(cache["k"].dtype))
+    cv = cache["v"].at[page, off].set(v.astype(cache["v"].dtype))
+
+    kg = ck[tables].reshape(B, -1, cfg.n_kv_heads, cfg.head_dim_)
+    vg = cv[tables].reshape(B, -1, cfg.n_kv_heads, cfg.head_dim_)
+    o = chunked_attention(q, kg, vg, causal=True, q_block=q_block,
+                          softcap=cfg.attn_logit_softcap, q_offset=start,
+                          unroll=unroll)
+    return jnp.einsum("bshe,hed->bsd", o, p["wo"]), {"k": ck, "v": cv}
 
 
 def paged_decode_attention_block(cfg: ArchConfig, p, x, cache, tables, pos,

@@ -113,7 +113,11 @@ def make_serve_step(cfg: ArchConfig, mesh: Optional[Mesh], kind: str):
          (logits read at per-row position ``last_idx`` — bucketed prompts)
        kind='decode_paged': step(params, kv, tables, pos, tokens)
          -> (next_tokens, new_kv) — slot-indexed continuous-batching decode
-         against the paged KV pool (see repro.serving)."""
+         against the paged KV pool (see repro.serving).
+       kind='prefill_paged': step(params, kv, tables, start, n_tail, tokens)
+         -> (logits, new_kv) — tail prefill at offset ``start`` straight into
+         the paged pool; positions < start are read from already-resident
+         pages (radix prefix cache hits)."""
     model = build_model(cfg)
     if kind == "decode":
         def step(params, cache, tokens):
@@ -126,6 +130,11 @@ def make_serve_step(cfg: ArchConfig, mesh: Optional[Mesh], kind: str):
             logits, kv = model.decode_paged(params, kv, tables, pos, tokens, mesh)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             return nxt, kv
+        return step
+    if kind == "prefill_paged":
+        def step(params, kv, tables, start, n_tail, tokens):
+            return model.prefill_paged(params, kv, tables, start, n_tail,
+                                       tokens, mesh)
         return step
     if kind == "prefill_at":
         def step(params, batch, last_idx):

@@ -18,7 +18,8 @@ from ..configs.base import ArchConfig
 from . import shardings
 from .attention import (attn_defs, cache_defs, decode_attention_block,
                         full_attention_block, paged_cache_defs,
-                        paged_decode_attention_block)
+                        paged_decode_attention_block,
+                        paged_prefill_attention_block)
 from .layers import (apply_mlp, apply_norm, embed_defs, embed_tokens, lm_logits,
                      mlp_defs, norm_defs, rope_freqs)
 from .mla import (mla_cache_defs, mla_decode_block, mla_defs, mla_full_block)
@@ -576,6 +577,85 @@ class DecoderLM:
 
         x = apply_norm(cfg, params["final_norm"], x)
         logits = lm_logits(cfg, params["embed"], x)
+        return logits, new_kv
+
+    def prefill_paged(self, params, kv, tables, start, n_tail, tokens,
+                      mesh=None):
+        """Tail prefill at an offset, straight into the paged KV pool.
+
+        kv: {"k","v": [L, P, ps, K, D]} shared pool; tables: [B, maxp] int32
+        per-request page tables; start: [B] int32 absolute position of
+        ``tokens[:, 0]``; n_tail: [B] int32 count of real tail tokens
+        (``tokens`` is right-padded to a bucket); tokens: [B, T] int32.
+
+        With ``start == 0`` this is a full prompt prefill (the engine's only
+        prefill path); with ``start > 0`` the first ``start`` positions are
+        read from pages already present in the pool — the radix prefix cache's
+        shared pages plus the request's COW fork of a partially-matched page —
+        and only the tail is computed.  Padding rows write to the null page.
+        Returns (last-real-token logits [B, V], new_kv)."""
+        cfg = self.cfg
+        ok, why = self.supports_paged_decode()
+        if not ok:
+            raise NotImplementedError(f"{cfg.name}: {why}")
+        x = embed_tokens(params["embed"], tokens)
+        freqs = self._freqs()
+        B = x.shape[0]
+
+        def dense_step(x, p, c):
+            h = apply_norm(cfg, p["ln1"], x)
+            a, c2 = paged_prefill_attention_block(
+                cfg, p["attn"], h, c, tables, start, n_tail, freqs,
+                q_block=cfg.attn_q_block, unroll=cfg.unroll)
+            x = x + a
+            x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x))
+            return x, c2
+
+        def moe_step(x, p, c):
+            h = apply_norm(cfg, p["ln1"], x)
+            a, c2 = paged_prefill_attention_block(
+                cfg, p["attn"], h, c, tables, start, n_tail, freqs,
+                q_block=cfg.attn_q_block, unroll=cfg.unroll)
+            x = x + a
+            m, _ = moe_apply(cfg, p["moe"], apply_norm(cfg, p["ln2"], x),
+                             mesh=mesh)
+            return x + m, c2
+
+        if cfg.is_moe:
+            k = cfg.first_k_dense
+            if k:
+                head = jax.tree.map(lambda a: a[:k], kv)
+                tail = jax.tree.map(lambda a: a[k:], kv)
+
+                def dbody(x, pc):
+                    p, c = pc
+                    return dense_step(x, p, c)
+                x, nhead = _scan_blocks(dbody, x, params["dense_blocks"], head,
+                                        unroll=cfg.unroll)
+
+                def mbody(x, pc):
+                    p, c = pc
+                    return moe_step(x, p, c)
+                x, ntail = _scan_blocks(mbody, x, params["blocks"], tail,
+                                        unroll=cfg.unroll)
+                new_kv = jax.tree.map(
+                    lambda a, b: jnp.concatenate([a, b]), nhead, ntail)
+            else:
+                def mbody(x, pc):
+                    p, c = pc
+                    return moe_step(x, p, c)
+                x, new_kv = _scan_blocks(mbody, x, params["blocks"], kv,
+                                         unroll=cfg.unroll)
+        else:
+            def dbody(x, pc):
+                p, c = pc
+                return dense_step(x, p, c)
+            x, new_kv = _scan_blocks(dbody, x, params["blocks"], kv,
+                                     unroll=cfg.unroll)
+
+        x = apply_norm(cfg, params["final_norm"], x)
+        last = x[jnp.arange(B), n_tail - 1]
+        logits = lm_logits(cfg, params["embed"], last)
         return logits, new_kv
 
     def _prefill_hybrid(self, params, x, freqs, S):

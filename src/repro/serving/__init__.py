@@ -6,25 +6,36 @@ story, built from the three standard pieces of a modern LLM-serving stack:
 
 ``kv_pool``
     Paged KV cache pool.  KV for every live request lives in one
-    ``[L, num_pages, page_size, K, D]`` array pair; requests own disjoint
-    page sets tracked by an int32 page table, allocation is an O(1)
-    host-side free list, and physical page 0 is a reserved write sink for
-    idle slots.  Replaces the old ``pad_cache_to`` whole-cache zero-pad copy
-    — admitting or retiring a request no longer touches device memory.
+    ``[L, num_pages, page_size, K, D]`` array pair; requests reference page
+    sets tracked by an int32 page table, allocation is an O(1) host-side
+    free list, and physical page 0 is a reserved write sink for idle slots.
+    Ownership is refcounted (``alloc``/``share``/``release``) so the radix
+    prefix cache and any number of slots can co-own a page — it returns to
+    the free list only when the last owner releases it.
+
+``radix_cache``
+    SGLang-style radix-tree prefix cache with page-quantized edges: every
+    node is one full KV page keyed by its token tuple.  Admission matches
+    each prompt against the tree, shares the matched full pages, forks a
+    partially-matched page copy-on-write, and prefills only the uncached
+    tail.  Unlocked leaves are LRU-evicted when the free list runs dry.
 
 ``scheduler``
-    Continuous-batching policy: an admission queue, prefill/decode
-    interleaving (prefill has priority — keeping slots full is the
-    throughput lever), page-granular growth with youngest-first preemption
-    when the pool runs dry, and slot eviction on EOS or max-len.
+    Continuous-batching policy: an admission queue with all-or-nothing,
+    cache-aware admission, prefill/decode interleaving (prefill has
+    priority — keeping slots full is the throughput lever), page-granular
+    growth with LRU cache eviction then youngest-first preemption when the
+    pool runs dry, and slot eviction on EOS or max-len.
 
 ``engine``
     Synchronous driver: ``Engine.add_request() / step() / collect()`` plus
     the ``run_offline(prompts)`` batch front-end with per-request latency
-    (TTFT, total) and aggregate tokens/s / requests/s metrics.  Exactly
-    ``len(buckets) + 1`` programs are compiled — one single-request prefill
-    per prompt-length bucket and one fixed-shape ``[max_slots]`` paged
-    decode step — so the traffic mix never causes recompilation.
+    (TTFT, total), cached-token counts, and aggregate tokens/s / hit-rate
+    metrics.  Exactly ``len(buckets) + 2`` programs are compiled — one
+    single-request tail prefill per length bucket, one fixed-shape
+    ``[max_slots]`` paged decode step, and one COW page-copy — so the
+    traffic mix never causes recompilation (and the steps are cached per
+    ``ArchConfig``, shared by every Engine instance).
     ``generate_static`` is the static-batching baseline (contiguous caches,
     batch padded together, slowest member gates the batch) kept for
     verification and benchmark comparison.
@@ -56,4 +67,5 @@ from __future__ import annotations
 
 from .engine import Engine, RequestResult, generate_static  # noqa: F401
 from .kv_pool import NULL_PAGE, PagedKVPool  # noqa: F401
-from .scheduler import Request, Scheduler  # noqa: F401
+from .radix_cache import MatchResult, RadixCache  # noqa: F401
+from .scheduler import Admission, Request, Scheduler  # noqa: F401

@@ -9,10 +9,15 @@
     results = eng.collect()                # finished RequestResults
 
 plus ``run_offline(prompts)``, the batch driver used by ``launch/serve.py``
-and the throughput benchmark.  The engine compiles exactly
-``len(buckets) + 1`` programs: one single-request prefill per prompt-length
-bucket and one fixed-shape ``[max_slots]`` paged decode step — traffic mix
-never triggers recompilation.
+and the throughput benchmark.  Prefill writes straight into the paged pool
+(``prefill_paged``): the request's pages are bound up front and the prompt —
+or, with the radix prefix cache enabled, only its uncached tail — is computed
+at a bucketed length and scattered token-granularly through the page table.
+The engine compiles exactly ``len(buckets) + 2`` programs: one tail prefill
+per length bucket, one fixed-shape ``[max_slots]`` paged decode step, and one
+page-copy (COW fork) kernel — traffic mix never triggers recompilation, and
+the jitted steps are cached per ``ArchConfig`` so every Engine instance (and
+test) reuses them.
 
 ``generate_static`` is the static-batching baseline kept for comparison and
 verification: contiguous per-request KV caches, the whole batch padded
@@ -33,7 +38,8 @@ from ..configs.base import ArchConfig, ServeConfig
 from ..models.registry import build_model, init_cache, init_params
 from ..models.steps import make_serve_step
 from .kv_pool import NULL_PAGE, PagedKVPool
-from .scheduler import Request, Scheduler
+from .radix_cache import RadixCache
+from .scheduler import Admission, Request, Scheduler
 
 
 @dataclasses.dataclass
@@ -44,6 +50,7 @@ class RequestResult:
     latency: float                    # arrival -> finish (s)
     ttft: float                       # arrival -> first token (s)
     n_preemptions: int = 0
+    cached_tokens: int = 0            # prompt tokens reused from the cache
 
 
 def _percentile(xs: Sequence[float], q: float) -> float:
@@ -67,8 +74,38 @@ def _metrics(n_requests: int, n_tokens: int, latencies: Sequence[float],
 
 
 def _aggregate(results: List[RequestResult], wall: float) -> Dict[str, float]:
-    return _metrics(len(results), sum(len(r.tokens) for r in results),
-                    [r.latency for r in results], wall)
+    m = _metrics(len(results), sum(len(r.tokens) for r in results),
+                 [r.latency for r in results], wall)
+    # engine-only extras: prefill accounting + TTFT (generate_static has
+    # neither a prefix cache nor per-request first-token times)
+    prompt_tokens = sum(len(r.prompt) for r in results)
+    cached = sum(r.cached_tokens for r in results)
+    m.update({
+        "ttft_p50_s": _percentile([r.ttft for r in results], 50),
+        "ttft_p95_s": _percentile([r.ttft for r in results], 95),
+        "prompt_tokens": prompt_tokens,
+        "cached_tokens": cached,
+        "prefill_tokens": prompt_tokens - cached,
+        "cache_hit_rate": cached / max(prompt_tokens, 1),
+    })
+    return m
+
+
+def _copy_page_fn(kv, src, dst):
+    """Fork physical page ``src`` into ``dst`` across every layer (COW)."""
+    return jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), kv)
+
+
+@functools.lru_cache(maxsize=None)
+def _paged_steps(cfg: ArchConfig, mesh=None):
+    """Jitted (prefill_paged, decode_paged, copy_page) steps, cached per
+    config so every Engine instance reuses compilations.  The pool argument
+    is donated in all three; callers always rebind ``pool.kv``."""
+    return (jax.jit(make_serve_step(cfg, mesh, "prefill_paged"),
+                    donate_argnums=(1,)),
+            jax.jit(make_serve_step(cfg, mesh, "decode_paged"),
+                    donate_argnums=(1,)),
+            jax.jit(_copy_page_fn, donate_argnums=(0,)))
 
 
 class Engine:
@@ -88,12 +125,12 @@ class Engine:
         self.params = init_params(cfg, jax.random.PRNGKey(seed)) \
             if params is None else params
         self.pool = PagedKVPool(cfg, self.scfg)
-        self.sched = Scheduler(self.scfg, self.pool)
+        self.radix = RadixCache(self.pool, self.scfg.page_size,
+                                self.scfg.cache_eviction) \
+            if self.scfg.prefix_cache else None
+        self.sched = Scheduler(self.scfg, self.pool, self.radix)
         self._next_rid = 0
-        self._prefill = jax.jit(make_serve_step(cfg, mesh, "prefill_at"))
-        self._decode = jax.jit(make_serve_step(cfg, mesh, "decode_paged"),
-                               donate_argnums=(1,))
-        self._scatter = jax.jit(self._scatter_fn, donate_argnums=(0,))
+        self._prefill, self._decode, self._copy = _paged_steps(cfg, mesh)
 
     # ----------------------------------------------------------- public API
 
@@ -119,8 +156,7 @@ class Engine:
         if action is None:
             return False
         if action[0] == "prefill":
-            _, slot_idx, req = action
-            self._run_prefill(slot_idx, req)
+            self._run_prefill(action[1])
         else:
             self._run_decode(action[1])
         return True
@@ -133,7 +169,8 @@ class Engine:
                 rid=req.rid, prompt=req.prompt, tokens=list(req.generated),
                 latency=req.t_finish - req.arrival,
                 ttft=req.t_first - req.arrival,
-                n_preemptions=req.n_preemptions))
+                n_preemptions=req.n_preemptions,
+                cached_tokens=req.cached_tokens))
         self.sched.finished.clear()
         return out
 
@@ -151,7 +188,11 @@ class Engine:
             pass
         wall = time.perf_counter() - t0
         results = sorted(self.collect(), key=lambda r: r.rid)
-        return results, _aggregate(results, wall)
+        metrics = _aggregate(results, wall)
+        if self.radix is not None:
+            metrics["cache_pages"] = len(self.radix.cached_pages)
+            metrics["cache_evictions"] = self.radix.evictions
+        return results, metrics
 
     # -------------------------------------------------------------- prefill
 
@@ -162,39 +203,35 @@ class Engine:
         raise ValueError(f"prompt len {n} exceeds largest bucket "
                          f"{self.scfg.buckets[-1]}")
 
-    @staticmethod
-    def _scatter_fn(kv, ck, cv, pages):
-        """Write a prefilled contiguous cache into the pool's pages.
-
-        ck/cv: [L, 1, S, K, D] from prefill; pages: [S // page_size] int32
-        (unneeded trailing entries point at the null page)."""
-        ps = kv["k"].shape[2]
-        L, _, S, K, D = ck.shape
-        ckp = ck.reshape(L, S // ps, ps, K, D).astype(kv["k"].dtype)
-        cvp = cv.reshape(L, S // ps, ps, K, D).astype(kv["v"].dtype)
-        return {"k": kv["k"].at[:, pages].set(ckp),
-                "v": kv["v"].at[:, pages].set(cvp)}
-
-    def _run_prefill(self, slot_idx: int, req: Request) -> None:
-        lenp = len(req.prompt)
-        bucket = self._bucket(lenp)
+    def _run_prefill(self, adm: Admission) -> None:
+        """Execute an already-accounted admission: fork the COW page if the
+        cache match ended mid-page, then prefill the uncached tail straight
+        into the slot's pages."""
+        req = adm.req
+        if adm.cow_dst is not None:
+            self.pool.kv = self._copy(self.pool.kv,
+                                      jnp.asarray(adm.cow_src, jnp.int32),
+                                      jnp.asarray(adm.cow_dst, jnp.int32))
+        tail = req.prompt[adm.n_matched:]
+        bucket = self._bucket(len(tail))
         toks = np.zeros((1, bucket), np.int32)
-        toks[0, :lenp] = req.prompt
-        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)},
-                                      jnp.asarray([lenp - 1], jnp.int32))
-        pages = self.pool.alloc(self.pool.pages_needed(lenp))
-        assert pages is not None, "scheduler admitted without page capacity"
-        page_vec = np.full((bucket // self.scfg.page_size,), NULL_PAGE, np.int32)
-        page_vec[:len(pages)] = pages
-        blocks = cache["blocks"]
-        self.pool.kv = self._scatter(self.pool.kv, blocks["k"], blocks["v"],
-                                     jnp.asarray(page_vec))
+        toks[0, :len(tail)] = tail
+        logits, self.pool.kv = self._prefill(
+            self.params, self.pool.kv, jnp.asarray(adm.table[None]),
+            jnp.asarray([adm.n_matched], jnp.int32),
+            jnp.asarray([len(tail)], jnp.int32), jnp.asarray(toks))
         first = int(np.asarray(logits)[0].argmax())
         now = time.perf_counter()
         req.t_first = now
         req.generated.append(first)
-        self.sched.bind(slot_idx, req, pages, pos=lenp)
-        self._maybe_retire(slot_idx, now)
+        if self.radix is not None:
+            # publish the full prompt pages for reuse (they are immutable for
+            # the slot's lifetime: decode writes land strictly past them)
+            full = len(req.prompt) // self.scfg.page_size
+            if full:
+                self.radix.insert(req.prompt[:full * self.scfg.page_size],
+                                  adm.pages[:full])
+        self._maybe_retire(adm.slot_idx, now)
 
     # --------------------------------------------------------------- decode
 

@@ -1,4 +1,4 @@
-"""Paged KV cache pool: fixed-size pages, free-list allocation, page tables.
+"""Paged KV cache pool: fixed-size pages, free-list allocation, refcounts.
 
 The pool replaces the old ``pad_cache_to`` whole-cache zero-pad copy with
 vLLM/MaxText-style paging: KV for *all* live requests lives in one
@@ -7,6 +7,15 @@ ordered list of physical pages recorded in an int32 page table.  Allocation
 and release are O(1) host-side free-list operations — admitting or retiring a
 request never touches the device arrays.
 
+Ownership is *refcounted* so pages can be shared across owners: the radix
+prefix cache (``radix_cache``) holds one reference per cached page, and every
+slot whose prompt prefix matched holds its own reference on the same physical
+pages.  ``alloc`` hands out pages at refcount 1, ``share`` adds an owner,
+``release`` (aliased as ``free``) drops one — the page only returns to the
+free list when its last owner lets go.  A shared page is immutable by
+convention: only full prompt pages are ever shared, and writes always land at
+positions past every sharer's prompt (see ``radix_cache`` / ``scheduler``).
+
 Physical page 0 is reserved as the *null page*: idle decode slots keep their
 table rows zeroed so their (discarded) writes land there, and page-table
 entries past a request's allocated region point at it harmlessly (attention
@@ -14,7 +23,7 @@ masks positions > pos, so stale bytes are softmax-zero).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import numpy as np
@@ -38,7 +47,7 @@ class PagedKVPool:
         # (zero-weight) reads of stale pages can never produce NaNs
         self.kv: Dict[str, jax.Array] = init_tree(defs, jax.random.PRNGKey(0))
         self._free: List[int] = list(range(scfg.total_pages - 1, NULL_PAGE, -1))
-        self._allocated: set = set()
+        self._ref: Dict[int, int] = {}
 
     # ------------------------------------------------------------ accounting
 
@@ -48,26 +57,51 @@ class PagedKVPool:
 
     @property
     def num_allocated(self) -> int:
-        return len(self._allocated)
+        return len(self._ref)
+
+    @property
+    def refcounts(self) -> Dict[int, int]:
+        """Live page -> owner count (copy; empty when the pool is idle)."""
+        return dict(self._ref)
+
+    def ref(self, page: int) -> int:
+        return self._ref.get(page, 0)
 
     def pages_needed(self, n_tokens: int) -> int:
         ps = self.scfg.page_size
         return -(-n_tokens // ps)
 
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Pop ``n`` pages from the free list; None (no partial grab) if short."""
+        """Pop ``n`` pages from the free list; None (no partial grab) if short.
+
+        Each returned page starts at refcount 1 (the caller is the owner)."""
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
-        self._allocated.update(pages)
+        for p in pages:
+            self._ref[p] = 1
         return pages
 
-    def free(self, pages: List[int]) -> None:
+    def share(self, pages: Sequence[int]) -> None:
+        """Add one owner to each (already-allocated) page."""
+        for p in pages:
+            assert p != NULL_PAGE, "tried to share the reserved null page"
+            assert p in self._ref, f"share of unallocated page {p}"
+            self._ref[p] += 1
+
+    def release(self, pages: Sequence[int]) -> None:
+        """Drop one owner per page; pages at refcount 0 return to the free
+        list.  Releasing a page you don't own is a double free."""
         for p in pages:
             assert p != NULL_PAGE, "tried to free the reserved null page"
-            assert p in self._allocated, f"double free of page {p}"
-            self._allocated.remove(p)
-            self._free.append(p)
+            assert p in self._ref, f"double free of page {p}"
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                del self._ref[p]
+                self._free.append(p)
+
+    # exclusive-ownership spelling used by pre-refcount call sites/tests
+    free = release
 
     # ------------------------------------------------------------ page tables
 

@@ -4,17 +4,25 @@ Policy (SGLang/Orca-style, simplified to a synchronous loop):
 
 * **Admission**: whenever a decode slot is free and the page pool can cover
   the prompt, the oldest queued request is admitted via a single-request
-  bucketed prefill.  Prefill has priority over decode — keeping slots full
-  is what buys continuous batching its throughput.
+  bucketed tail prefill.  Prefill has priority over decode — keeping slots
+  full is what buys continuous batching its throughput.  With the radix
+  prefix cache enabled, admission first matches the prompt against the tree:
+  matched full pages are shared (refcount +1), a partially-matched page is
+  forked copy-on-write, and only the uncached tail is prefilled.  Admission
+  is **all-or-nothing**: every accounting step (dequeue, share, alloc, lock,
+  bind) happens only after capacity is proven, so a failed attempt mutates
+  nothing.
 * **Decode**: otherwise every live slot advances one token in a single
   fixed-shape jitted step; idle slots ride along masked (their page-table
   rows point at the null page).
-* **Growth / preemption**: a slot crossing a page boundary gets a fresh page
-  from the free list; if the pool is exhausted, the youngest slot is
-  preempted — its pages are freed and the request is requeued from scratch
-  (greedy decode is deterministic, so the replay reproduces its prefix).
-* **Eviction**: EOS or max-tokens retires the slot and frees its pages
-  immediately, making room for the next admission.
+* **Growth / eviction / preemption**: a slot crossing a page boundary gets a
+  fresh page from the free list; if the pool is exhausted, unlocked radix
+  nodes are LRU-evicted first, then the youngest slot is preempted — its
+  page references are released (shared pages survive via the tree) and the
+  request is requeued from scratch (greedy decode is deterministic, so the
+  replay reproduces its prefix — usually straight from the cache).
+* **Retirement**: EOS or max-tokens retires the slot, releases its page
+  references and radix locks immediately, making room for the next admission.
 """
 from __future__ import annotations
 
@@ -26,6 +34,7 @@ import numpy as np
 
 from ..configs.base import ServeConfig
 from .kv_pool import PagedKVPool
+from .radix_cache import RadixCache, RadixNode
 
 
 @dataclasses.dataclass
@@ -39,6 +48,7 @@ class Request:
     t_finish: Optional[float] = None
     generated: List[int] = dataclasses.field(default_factory=list)
     n_preemptions: int = 0
+    cached_tokens: int = 0               # prompt tokens served from the cache
 
     @property
     def finished(self) -> bool:
@@ -51,14 +61,31 @@ class Slot:
     req: Request
     pos: int                              # next write position (= tokens cached)
     table: np.ndarray                     # [pages_per_request] int32
-    pages: List[int]                      # allocated physical pages, in order
+    pages: List[int]                      # referenced physical pages, in order
     admit_seq: int                        # admission order (preemption victim key)
+    nodes: List[RadixNode] = dataclasses.field(default_factory=list)
+    n_shared: int = 0                     # leading pages shared via the cache
+
+
+@dataclasses.dataclass
+class Admission:
+    """An admission the scheduler has fully accounted; the engine only has to
+    run the device work (COW copy + tail prefill)."""
+    slot_idx: int
+    req: Request
+    n_matched: int                        # cached prompt tokens (incl. COW)
+    cow_src: Optional[int]                # page to fork, or None
+    cow_dst: Optional[int]                # exclusively-owned fork target
+    table: np.ndarray                     # the bound slot's page table
+    pages: List[int]                      # shared + exclusive pages, in order
 
 
 class Scheduler:
-    def __init__(self, scfg: ServeConfig, pool: PagedKVPool):
+    def __init__(self, scfg: ServeConfig, pool: PagedKVPool,
+                 radix: Optional[RadixCache] = None):
         self.scfg = scfg
         self.pool = pool
+        self.radix = radix
         self.queue: Deque[Request] = deque()
         self.slots: List[Optional[Slot]] = [None] * scfg.max_slots
         self.finished: List[Request] = []
@@ -88,12 +115,11 @@ class Scheduler:
     # ------------------------------------------------------------ scheduling
 
     def next_action(self) -> Optional[Tuple]:
-        """('prefill', slot_idx, request) | ('decode', [slot_idx, ...]) | None."""
+        """('prefill', Admission) | ('decode', [slot_idx, ...]) | None."""
         if self.queue:
-            idx = self.free_slot()
-            need = self.pool.pages_needed(len(self.queue[0].prompt))
-            if idx is not None and self.pool.num_free >= need:
-                return ("prefill", idx, self.queue.popleft())
+            adm = self.try_admit()
+            if adm is not None:
+                return ("prefill", adm)
         active = self.active_slots()
         if active:
             self._grow_pages()
@@ -101,49 +127,114 @@ class Scheduler:
             if active:
                 return ("decode", active)
         if self.queue:
-            # no slot/page capacity and nothing running to free any: stuck
+            # no slot/page capacity and nothing running to free any.  If the
+            # prefix cache is what holds the pool (cache_eviction="none", or
+            # only co-owned leaves blocked make_room), serving beats caching:
+            # flush the tree's references and retry once before giving up.
+            if self.radix is not None and self.radix.num_nodes:
+                self.radix.reset()
+                adm = self.try_admit()
+                if adm is not None:
+                    return ("prefill", adm)
             raise RuntimeError(
                 f"scheduler deadlock: request {self.queue[0].rid} needs "
                 f"{self.pool.pages_needed(len(self.queue[0].prompt))} pages, "
                 f"pool has {self.pool.num_free} free and no live slots")
         return None
 
+    def try_admit(self) -> Optional[Admission]:
+        """Admit the oldest queued request if (and only if) every resource it
+        needs is available; on failure nothing — queue, pool, tree — changes.
+        """
+        idx = self.free_slot()
+        if idx is None or not self.queue:
+            return None
+        req = self.queue[0]
+        n = len(req.prompt)
+        nodes: List[RadixNode] = []
+        shared: List[int] = []
+        cow_src, cow_len, n_matched = None, 0, 0
+        if self.radix is not None:
+            m = self.radix.match(req.prompt, n - 1)
+            nodes, shared = m.nodes, m.pages
+            cow_src, cow_len, n_matched = m.cow_src, m.cow_len, m.n_matched
+        # the last prompt token is always computed, so at least one page is
+        # never shared: need >= 1
+        need = self.pool.pages_needed(n) - len(shared)
+        if self.pool.num_free < need:
+            if self.radix is not None:
+                # pin the matched path so making room can't evict it; a
+                # hopeless attempt evicts nothing (all-or-nothing extends to
+                # the cache contents)
+                self.radix.lock(nodes)
+                self.radix.make_room(need)
+                self.radix.unlock(nodes)
+            if self.pool.num_free < need:
+                return None
+        # ---- commit point: capacity proven, take everything atomically ----
+        self.queue.popleft()
+        self.pool.share(shared)
+        fresh = self.pool.alloc(need)
+        assert fresh is not None
+        if self.radix is not None:
+            self.radix.lock(nodes)
+        pages = shared + fresh
+        slot = self.bind(idx, req, pages, pos=n, nodes=nodes,
+                         n_shared=len(shared))
+        req.cached_tokens = n_matched
+        return Admission(slot_idx=idx, req=req, n_matched=n_matched,
+                         cow_src=cow_src,
+                         cow_dst=fresh[0] if cow_len else None,
+                         table=slot.table, pages=pages)
+
     # ----------------------------------------------------- slot transitions
 
-    def bind(self, slot_idx: int, req: Request, pages: List[int],
-             pos: int) -> Slot:
+    def bind(self, slot_idx: int, req: Request, pages: List[int], pos: int,
+             nodes: Optional[List[RadixNode]] = None,
+             n_shared: int = 0) -> Slot:
         table = self.pool.new_table()
         table[:len(pages)] = pages
         slot = Slot(req=req, pos=pos, table=table, pages=pages,
-                    admit_seq=self._admit_seq)
+                    admit_seq=self._admit_seq, nodes=list(nodes or []),
+                    n_shared=n_shared)
         self._admit_seq += 1
         self.slots[slot_idx] = slot
         return slot
 
-    def retire(self, slot_idx: int) -> Request:
-        """EOS / max-len eviction: free every page the slot holds."""
+    def _unbind(self, slot_idx: int) -> Slot:
+        """Release a slot's page references and radix locks (shared pages are
+        freed only when their last owner — usually the tree — lets go)."""
         slot = self.slots[slot_idx]
         assert slot is not None
-        self.pool.free(slot.pages)
+        self.pool.release(slot.pages)
+        if self.radix is not None and slot.nodes:
+            self.radix.unlock(slot.nodes)
         self.slots[slot_idx] = None
+        return slot
+
+    def retire(self, slot_idx: int) -> Request:
+        """EOS / max-len eviction: drop every page reference the slot holds."""
+        slot = self._unbind(slot_idx)
         self.finished.append(slot.req)
         return slot.req
 
     def preempt(self, slot_idx: int) -> Request:
-        """Free the slot's pages and requeue its request for a clean replay."""
-        slot = self.slots[slot_idx]
-        assert slot is not None
-        self.pool.free(slot.pages)
-        self.slots[slot_idx] = None
+        """Release the slot's references and requeue its request for a clean
+        replay.  Only exclusively-owned pages actually return to the free
+        list; pages published to the radix cache stay resident, so the replay
+        typically re-admits as a cache hit."""
+        slot = self._unbind(slot_idx)
         slot.req.generated.clear()
         slot.req.t_first = None
+        slot.req.cached_tokens = 0
         slot.req.n_preemptions += 1
         self.queue.appendleft(slot.req)
         return slot.req
 
     def _grow_pages(self) -> None:
         """Before a decode step, every live slot must own the page its next
-        write lands in.  Preempts youngest-first when the pool runs dry."""
+        write lands in.  When the pool runs dry, LRU-evict unlocked cache
+        nodes first, then preempt youngest-first."""
         ps = self.scfg.page_size
         for i in sorted(self.active_slots(),
                         key=lambda i: self.slots[i].admit_seq):
@@ -158,8 +249,16 @@ class Scheduler:
                     slot.table[len(slot.pages)] = pages[0]
                     slot.pages.extend(pages)
                     break
+                if self.radix is not None and self.radix.make_room(1):
+                    continue                   # eviction freed a page
                 victims = [j for j in self.active_slots() if j != i]
                 if not victims:
+                    # last resort before giving up: the cache may hold pages
+                    # this slot doesn't use (cache_eviction="none" keeps
+                    # make_room from touching them) — flush and retry
+                    if self.radix is not None and self.radix.num_nodes:
+                        self.radix.reset()
+                        continue
                     raise RuntimeError(
                         "page pool exhausted with a single live slot; "
                         "increase ServeConfig.num_pages")

@@ -1,0 +1,251 @@
+"""Radix prefix-cache edge cases + admission atomicity.
+
+* partial-page prefix match forks copy-on-write instead of sharing
+* double-insert of an identical prompt takes no extra page references
+* LRU eviction never frees a page a live owner still references
+* preemption of a cache-hit request returns only exclusively-owned pages
+* admission is all-or-nothing: a failed attempt mutates nothing
+* shared-prefix workloads stay token-exact and leak-free end to end
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, ServeConfig, reduced
+from repro.models.registry import init_params
+from repro.serving import (Engine, PagedKVPool, RadixCache, generate_static)
+
+PS = 8
+
+
+def _cfg(name="qwen2-0.5b"):
+    return dataclasses.replace(reduced(ARCHS[name]), remat="none")
+
+
+def _pool(max_slots=2, max_len=64, num_pages=0):
+    scfg = ServeConfig(page_size=PS, max_slots=max_slots, max_len=max_len,
+                       num_pages=num_pages)
+    return PagedKVPool(_cfg(), scfg)
+
+
+def _toks(n, seed=0):
+    return np.random.RandomState(seed).randint(1, 500, size=n).tolist()
+
+
+# ------------------------------------------------------------- tree mechanics
+
+def test_full_page_match_shares_pages():
+    pool = _pool()
+    cache = RadixCache(pool, PS)
+    toks = _toks(2 * PS)
+    pages = pool.alloc(2)
+    cache.insert(toks, pages)
+    assert [pool.ref(p) for p in pages] == [2, 2]   # owner + tree
+
+    m = cache.match(toks + _toks(5, seed=1), max_match=2 * PS + 4)
+    assert m.pages == pages and m.n_matched == 2 * PS
+    assert m.cow_src is None and m.cow_len == 0
+    # match alone must not take references — the caller commits
+    assert [pool.ref(p) for p in pages] == [2, 2]
+
+
+def test_partial_page_match_cows_not_shares():
+    pool = _pool()
+    cache = RadixCache(pool, PS)
+    toks = _toks(2 * PS)
+    pages = pool.alloc(2)
+    cache.insert(toks, pages)
+
+    # diverges 4 tokens into the second page: first page shareable, second
+    # only reusable by forking its matched slots into an exclusive copy
+    prompt = toks[:PS + 4] + [t + 1 for t in toks[PS + 4:]]
+    m = cache.match(prompt, max_match=len(prompt) - 1)
+    assert m.pages == [pages[0]]
+    assert m.cow_src == pages[1] and m.cow_len == 4
+    assert m.n_matched == PS + 4
+    assert m.cow_src not in m.pages
+
+
+def test_identical_prompt_match_is_clamped_to_cow():
+    """A full re-match must leave >= 1 tail token, so the last page of an
+    identical prompt comes back as a COW fork, not a share."""
+    pool = _pool()
+    cache = RadixCache(pool, PS)
+    toks = _toks(2 * PS)
+    pages = pool.alloc(2)
+    cache.insert(toks, pages)
+    m = cache.match(toks, max_match=len(toks) - 1)
+    assert m.pages == [pages[0]]
+    assert m.cow_src == pages[1] and m.cow_len == PS - 1
+    assert m.n_matched == 2 * PS - 1
+
+
+def test_double_insert_takes_no_extra_refs():
+    pool = _pool()
+    cache = RadixCache(pool, PS)
+    toks = _toks(2 * PS)
+    first = pool.alloc(2)
+    assert cache.insert(toks, first) == 2
+    # a second request with the identical prompt re-inserts its own pages
+    second = pool.alloc(2)
+    assert cache.insert(toks, second) == 0          # nothing new cached
+    assert [pool.ref(p) for p in first] == [2, 2]   # unchanged
+    assert [pool.ref(p) for p in second] == [1, 1]  # tree took nothing
+    assert cache.num_nodes == 2
+
+
+def test_lru_eviction_never_frees_live_pages():
+    pool = _pool()
+    cache = RadixCache(pool, PS)
+    a, b, c = (pool.alloc(1) for _ in range(3))
+    cache.insert(_toks(PS, seed=1), a)
+    cache.insert(_toks(PS, seed=2), b)
+    cache.insert(_toks(PS, seed=3), c)
+    # a "slot" still owns a's page; c's node is pinned by a live match
+    slot_pages = list(a)
+    (n_c,) = cache.match(_toks(PS, seed=3) + [1], max_match=PS).nodes
+    cache.lock([n_c])
+    pool.release(a)          # original owners hand over; tree keeps refs
+    pool.release(b)
+    pool.release(c)
+    pool.share(slot_pages)   # the live slot's reference on a
+
+    free_before = pool.num_free
+    assert cache.evict(3) == 2                  # a, b evicted; c locked
+    assert pool.num_free == free_before + 1     # only b actually freed
+    assert pool.ref(a[0]) == 1                  # live slot still owns it
+    assert pool.ref(c[0]) == 1                  # locked node survived
+    assert cache.num_nodes == 1
+    cache.unlock([n_c])
+    assert cache.evict(1) == 1
+    pool.release(slot_pages)
+    assert pool.num_allocated == 0
+
+
+def test_eviction_is_lru_ordered():
+    pool = _pool()
+    cache = RadixCache(pool, PS)
+    old, new = pool.alloc(1), pool.alloc(1)
+    t_old, t_new = _toks(PS, seed=4), _toks(PS, seed=5)
+    cache.insert(t_old, old)
+    cache.insert(t_new, new)
+    cache.match(t_old + [1], max_match=PS)      # refresh `old`
+    pool.release(old)
+    pool.release(new)
+    cache.evict(1)
+    assert cache.cached_pages == old            # `new` was the LRU victim
+
+
+# -------------------------------------------------- engine-level invariants
+
+def test_preemption_returns_only_exclusive_pages():
+    cfg = _cfg()
+    scfg = ServeConfig(page_size=PS, max_slots=2, max_len=48,
+                       prefix_cache=True)
+    eng = Engine(cfg, scfg, init_params(cfg, jax.random.PRNGKey(3)))
+    prompt = _toks(2 * PS + 3, seed=6)          # 2 shareable pages + partial
+
+    # request A publishes its prompt pages, runs to completion
+    eng.add_request(prompt, max_new_tokens=2)
+    while eng.step():
+        pass
+    eng.collect()
+    tree_pages = set(eng.radix.cached_pages)
+    assert len(tree_pages) == 2
+    free_before = eng.pool.num_free
+
+    # request B is a cache hit on the same prompt: both full pages shared
+    # (A's partial last page was never cached, so B computes the 3-token tail)
+    eng.add_request(prompt, max_new_tokens=8)
+    assert eng.step()                           # the prefill
+    slot = eng.sched.slots[0]
+    assert slot is not None and slot.n_shared == 2
+    assert slot.req.cached_tokens == 2 * PS
+
+    eng.sched.preempt(0)
+    # only B's exclusively-owned pages went back; shared ones stay cached
+    assert eng.pool.num_free == free_before
+    assert set(eng.radix.cached_pages) == tree_pages
+    assert all(eng.pool.ref(p) == 1 for p in tree_pages)
+    eng.sched.queue.clear()
+    eng.radix.reset()
+    assert eng.pool.num_allocated == 0
+
+
+def test_admission_is_all_or_nothing():
+    cfg = _cfg()
+    # pool so tight a second long request cannot be admitted
+    scfg = ServeConfig(page_size=PS, max_slots=2, max_len=32, num_pages=5,
+                       prefix_cache=True)
+    eng = Engine(cfg, scfg, init_params(cfg, jax.random.PRNGKey(4)))
+    eng.add_request(_toks(25, seed=7), max_new_tokens=6)
+    assert eng.step()                           # A admitted: 4 of 4 pages
+    eng.add_request(_toks(26, seed=8), max_new_tokens=4)
+
+    sched, pool = eng.sched, eng.pool
+    before = (len(sched.queue), pool.num_free, pool.refcounts,
+              eng.radix.num_nodes, [n.lock for n in eng.radix._walk()])
+    assert sched.try_admit() is None            # needs 4 pages, 0 free
+    after = (len(sched.queue), pool.num_free, pool.refcounts,
+             eng.radix.num_nodes, [n.lock for n in eng.radix._walk()])
+    # failed attempt took nothing — not even cache contents (the live slot
+    # co-owns every cached page, so eviction could not have freed any)
+    assert before == after
+    # the scheduler falls back to decoding the live slot, not deadlock
+    action = sched.next_action()
+    assert action is not None and action[0] == "decode"
+
+    while eng.step():                           # drains both (A frees pages)
+        pass
+    results = sorted(eng.collect(), key=lambda r: r.rid)
+    ref, _ = generate_static(cfg, eng.params,
+                             [r.prompt for r in results], [6, 4], scfg,
+                             batch_size=1)
+    assert [r.tokens for r in results] == ref
+    eng.radix.reset()
+    assert eng.pool.num_allocated == 0
+
+
+def test_shared_prefix_workload_exact_and_leak_free():
+    """Fixed-case version of the hypothesis suite (runs without hypothesis):
+    shared-prefix mix, cache on vs off, token-exact, pool drained to zero."""
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(5))
+    rng = np.random.RandomState(11)
+    fams = [rng.randint(1, cfg.vocab, size=18).tolist() for _ in range(2)]
+    prompts = [fams[i % 2] + rng.randint(1, cfg.vocab, size=1 + i).tolist()
+               for i in range(6)]
+    budgets = [5, 3, 6, 4, 2, 5]
+    scfg = ServeConfig(page_size=PS, max_slots=3, max_len=48)
+    ref, _ = generate_static(cfg, params, prompts, budgets, scfg,
+                             batch_size=1)
+    for pc in (False, True):
+        scfg_i = dataclasses.replace(scfg, prefix_cache=pc)
+        eng = Engine(cfg, scfg_i, params)
+        results, metrics = eng.run_offline(prompts, budgets)
+        assert [r.tokens for r in results] == ref
+        assert (metrics["cached_tokens"] > 0) == pc
+        if eng.radix is not None:
+            eng.radix.reset()
+        assert eng.pool.num_allocated == 0
+        assert eng.pool.num_free == scfg_i.total_pages - 1
+        assert eng.pool.refcounts == {}
+
+
+def test_pool_share_release_refcounts():
+    pool = _pool()
+    (p,) = pool.alloc(1)
+    pool.share([p])
+    pool.share([p])
+    assert pool.ref(p) == 3
+    pool.release([p])
+    pool.release([p])
+    assert pool.ref(p) == 1 and pool.num_free == pool.scfg.total_pages - 2
+    pool.release([p])
+    assert pool.ref(p) == 0 and pool.num_allocated == 0
+    with pytest.raises(AssertionError):
+        pool.release([p])                       # double free
+    with pytest.raises(AssertionError):
+        pool.share([p])                         # share of unallocated page

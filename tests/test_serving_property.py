@@ -1,0 +1,133 @@
+"""Property-based serving invariants (hypothesis).
+
+Random request mixes — shared-prefix families, mixed prompt/suffix lengths,
+mixed token budgets, varying slot counts and pool sizes (including pools
+tight enough to force preemption), prefix cache on and off — must all:
+
+* produce token-for-token the greedy output of the static single-request
+  baseline (``generate_static(batch_size=1)``),
+* report per-request ``cached_tokens`` consistent with the cache setting,
+* leave the pool leak-free after ``run_offline`` (+ a cache ``reset``):
+  ``num_free`` restored, no allocated pages, every refcount zero.
+
+One fixed ArchConfig keeps the jitted steps (cached per config) shared
+across examples, so hypothesis explores scheduling/caching state spaces, not
+XLA compile times.  A non-hypothesis fixed-case twin of this suite lives in
+``test_radix_cache.py::test_shared_prefix_workload_exact_and_leak_free``.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.configs import ARCHS, ServeConfig, reduced  # noqa: E402
+from repro.models.registry import init_params  # noqa: E402
+from repro.serving import Engine, generate_static  # noqa: E402
+
+settings.register_profile("serving", max_examples=10, deadline=None)
+settings.load_profile("serving")
+
+PS = 8
+MAX_LEN = 48          # 6 pages/request
+CFG = dataclasses.replace(reduced(ARCHS["qwen2-0.5b"]), remat="none")
+_PARAMS = None
+
+
+def _params():
+    global _PARAMS
+    if _PARAMS is None:
+        _PARAMS = init_params(CFG, jax.random.PRNGKey(0))
+    return _PARAMS
+
+
+@st.composite
+def workloads(draw):
+    rng = np.random.RandomState(draw(st.integers(0, 2**31 - 1)))
+    n_requests = draw(st.integers(1, 6))
+    n_families = draw(st.integers(1, 3))
+    prefix_len = draw(st.integers(0, 20))
+    fams = [rng.randint(1, CFG.vocab, size=prefix_len).tolist()
+            for _ in range(n_families)]
+    prompts, budgets = [], []
+    for i in range(n_requests):
+        suffix = int(rng.randint(1, 11))
+        prompts.append(fams[i % n_families]
+                       + rng.randint(1, CFG.vocab, size=suffix).tolist())
+        budgets.append(draw(st.integers(1, 6)))
+    max_slots = draw(st.sampled_from([2, 4]))
+    # 0 = ample pool; 13 = 2 requests' worth (+null page) -> page pressure
+    num_pages = draw(st.sampled_from([0, 13]))
+    prefix_cache = draw(st.booleans())
+    return prompts, budgets, max_slots, num_pages, prefix_cache
+
+
+def run_case(prompts, budgets, max_slots, num_pages, prefix_cache):
+    scfg = ServeConfig(page_size=PS, max_slots=max_slots, max_len=MAX_LEN,
+                       num_pages=num_pages, prefix_cache=prefix_cache)
+    # the baseline clamps budgets the same way Engine.add_request does
+    budgets = [min(b, MAX_LEN - len(p)) for p, b in zip(prompts, budgets)]
+    eng = Engine(CFG, scfg, _params())
+    results, metrics = eng.run_offline(prompts, budgets)
+    got = [r.tokens for r in results]
+    ref, _ = generate_static(CFG, _params(), prompts, budgets, scfg,
+                             batch_size=1)
+    assert got == ref, f"engine tokens diverge from static baseline: {got} != {ref}"
+
+    assert metrics["n_requests"] == len(prompts)
+    for r in results:
+        if prefix_cache:
+            assert 0 <= r.cached_tokens <= len(r.prompt) - 1
+        else:
+            assert r.cached_tokens == 0
+    assert metrics["cached_tokens"] == sum(r.cached_tokens for r in results)
+    assert metrics["prefill_tokens"] + metrics["cached_tokens"] \
+        == sum(len(p) for p in prompts)
+
+    # leak-free: every page reference unwinds once the cache lets go
+    if eng.radix is not None:
+        eng.radix.reset()
+    assert all(s is None for s in eng.sched.slots)
+    assert eng.pool.num_allocated == 0
+    assert eng.pool.refcounts == {}
+    assert eng.pool.num_free == scfg.total_pages - 1
+    return results
+
+
+@given(workloads())
+def test_random_mix_matches_baseline_and_is_leak_free(wl):
+    run_case(*wl)
+
+
+@given(workloads())
+def test_cache_on_off_agree(wl):
+    """The prefix cache must be output-invisible: the same workload served
+    with and without it yields identical greedy tokens."""
+    prompts, budgets, max_slots, num_pages, _ = wl
+    a = run_case(prompts, budgets, max_slots, num_pages, False)
+    b = run_case(prompts, budgets, max_slots, num_pages, True)
+    assert [r.tokens for r in a] == [r.tokens for r in b]
+    # identical prompts admitted later must hit the cache (when cacheable:
+    # at least one full page of prefix and room to have been published)
+    for ra, rb in zip(a, b):
+        assert ra.rid == rb.rid
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 5))
+def test_identical_prompts_hit_the_cache(seed, n_requests):
+    """After the first request publishes its prompt pages, every identical
+    follower reuses all full prompt pages (no pool pressure here)."""
+    rng = np.random.RandomState(seed)
+    prompt = rng.randint(1, CFG.vocab, size=2 * PS + 3).tolist()
+    scfg = ServeConfig(page_size=PS, max_slots=1, max_len=MAX_LEN,
+                       prefix_cache=True)
+    eng = Engine(CFG, scfg, _params())
+    results, metrics = eng.run_offline([prompt] * n_requests, 3)
+    # max_slots=1 serializes admissions, so every follower sees the cache
+    assert [r.cached_tokens for r in results] == [0] + [2 * PS] * (n_requests - 1)
+    assert metrics["cache_hit_rate"] > 0
+    eng.radix.reset()
+    assert eng.pool.num_allocated == 0 and eng.pool.refcounts == {}
