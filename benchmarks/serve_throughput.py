@@ -21,7 +21,14 @@ All paths are fully warmed (every jit shape compiled) before timing and all
 greedy tokens are checked to match; the cache row additionally reports
 cached/prefilled prompt tokens, hit rate, and TTFT — the win to look for is
 ``prefill_tokens`` dropping by roughly the duplicated-prefix mass and TTFT
-p50 shrinking with it.  Emits BENCH_serve.json.
+p50 shrinking with it.
+
+A second section (``cache_families``) serves one reduced arch per cache
+family — paged KV, MLA latent pages, sliding-window page ring, SSM and
+RG-LRU state slots, enc-dec pinned cross cache — through the same
+continuous-vs-static comparison, reporting per-family tokens/s and TTFT
+(exact-match checked against the single-request baseline).  Emits
+BENCH_serve.json.
 
   PYTHONPATH=src python -m benchmarks.serve_throughput [--requests 16]
 """
@@ -52,6 +59,75 @@ def make_workload(vocab: int, requests: int, families: int, prefix_len: int,
     return prompts, budgets
 
 
+# one reduced arch per cache family (see src/repro/models/cache_spec.py)
+FAMILY_MATRIX = (
+    ("paged_kv", "qwen2-0.5b"),
+    ("paged_mla", "deepseek-v2-236b"),
+    ("windowed_kv", "starcoder2-7b"),
+    ("state_slot_ssm", "mamba2-780m"),
+    ("state_slot_hybrid", "recurrentgemma-2b"),
+    ("cross_kv_encdec", "seamless-m4t-large-v2"),
+)
+
+
+def family_matrix(requests: int = 8, slots: int = 4, gen: int = 16,
+                  seed: int = 0):
+    """Continuous-vs-static throughput for one arch per cache family.
+
+    Every family runs the same mixed-length workload; tokens are checked
+    exact against the single-request static baseline (the verify contract
+    the engine upholds for every family), and the timed static path uses
+    the same concurrency cap as the engine."""
+    import dataclasses as _dc
+
+    from repro.configs import ServeConfig, get_arch, reduced
+    from repro.serving import Engine, generate_static
+
+    rng = np.random.RandomState(seed)
+    lens = [int(rng.randint(6, 28)) for _ in range(requests)]
+    # head-of-line mix: one long-form generation per arrival group of
+    # ``slots`` — the static batch stalls on it, continuous backfills
+    budgets = [gen * 4 if i % slots == slots - 1 else max(gen // 4, 2)
+               for i in range(requests)]
+    out = {}
+    for family, arch in FAMILY_MATRIX:
+        cfg = _dc.replace(reduced(get_arch(arch)), remat="none")
+        ps = 8
+        max_len = ((max(lens) + max(budgets) + ps - 1) // ps) * ps
+        scfg = ServeConfig(page_size=ps, max_slots=slots, max_len=max_len)
+        prompts = [rng.randint(1, cfg.vocab, size=n).tolist() for n in lens]
+        eng = Engine(cfg, scfg, seed=seed)
+        params = eng.params
+        # warm every jit shape both paths will use — the exact workload,
+        # since batched prefill admission makes the prefill shapes
+        # (bucket, pow2 batch rows) depend on budgets too
+        eng.run_offline(prompts, budgets)
+        generate_static(cfg, params, prompts, budgets, scfg,
+                        batch_size=slots, seed=seed)
+        results, cont_m = Engine(cfg, scfg, params,
+                                 seed=seed).run_offline(prompts, budgets)
+        _, static_m = generate_static(cfg, params, prompts, budgets, scfg,
+                                      batch_size=slots, seed=seed)
+        ref, _ = generate_static(cfg, params, prompts, budgets, scfg,
+                                 batch_size=1, seed=seed)
+        out[family] = {
+            "arch": cfg.name,
+            "tokens_match_static": [r.tokens for r in results] == ref,
+            "tokens_per_s": cont_m["tokens_per_s"],
+            "static_tokens_per_s": static_m["tokens_per_s"],
+            "speedup_tokens_per_s": (cont_m["tokens_per_s"]
+                                     / max(static_m["tokens_per_s"], 1e-9)),
+            "ttft_p50_s": cont_m["ttft_p50_s"],
+            "multi_admit_prefills": cont_m["multi_admit_prefills"],
+        }
+        print(f"serve_throughput,family={family},arch={cfg.name},"
+              f"cont_tok_s={cont_m['tokens_per_s']:.1f},"
+              f"static_tok_s={static_m['tokens_per_s']:.1f},"
+              f"ttft_p50_ms={cont_m['ttft_p50_s']*1e3:.1f},"
+              f"match={out[family]['tokens_match_static']}")
+    return out
+
+
 def run(arch: str = "qwen2-0.5b", requests: int = 16, slots: int = 4,
         families: int = 4, prefix_len: int = 24, suffix_lo: int = 4,
         suffix_hi: int = 24, gen_short: int = 4, gen_long: int = 128,
@@ -72,13 +148,14 @@ def run(arch: str = "qwen2-0.5b", requests: int = 16, slots: int = 4,
     eng = Engine(cfg, scfg, seed=seed)
     params = eng.params
 
-    # warm-up: replay the whole workload with a 2-token budget so every
-    # prefill bucket and decode step all three paths will use is compiled
-    # before the timed runs (jitted steps are cached per ArchConfig, so the
-    # timed engines below reuse these compilations)
-    eng.run_offline(prompts, 2)
-    Engine(cfg, scfg_cache, params).run_offline(prompts, 2)
-    generate_static(cfg, params, prompts, 2, scfg, batch_size=slots)
+    # warm-up: replay the whole workload so every prefill shape — bucket
+    # AND pow2 admission-batch rows, which depend on the budget mix now that
+    # admission is batched — and decode step all three paths will use is
+    # compiled before the timed runs (jitted steps are cached per
+    # ArchConfig, so the timed engines below reuse these compilations)
+    eng.run_offline(prompts, budgets)
+    Engine(cfg, scfg_cache, params).run_offline(prompts, budgets)
+    generate_static(cfg, params, prompts, budgets, scfg, batch_size=slots)
 
     # timed: static
     static_tokens, static_m = generate_static(
@@ -114,6 +191,7 @@ def run(arch: str = "qwen2-0.5b", requests: int = 16, slots: int = 4,
             cont_m["prefill_tokens"] - cache_m["prefill_tokens"],
         "prefix_cache_ttft_p50_ratio":
             cache_m["ttft_p50_s"] / max(cont_m["ttft_p50_s"], 1e-9),
+        "cache_families": family_matrix(slots=slots, seed=seed),
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
     }
     path = os.path.join(os.path.dirname(os.path.dirname(

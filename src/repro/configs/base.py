@@ -214,11 +214,14 @@ class ServeConfig:
     page_size: int = 16          # tokens per KV page
     max_slots: int = 8           # concurrent decode slots (fixed jit batch dim)
     max_len: int = 96            # per-request prompt + generation cap (tokens)
-    num_pages: int = 0           # 0 -> auto: max_slots * pages_per_request + 1
+    num_pages: int = 0           # 0 -> auto, family-aware: max_slots *
+                                 # table_width + 1 (see PagedKVPool)
     prefill_buckets: Tuple[int, ...] = ()   # () -> pow2 multiples of page_size
     eos_id: int = -1             # -1: no EOS; requests run to max_new tokens
     prefix_cache: bool = False   # radix-tree prompt-prefix KV sharing
     cache_eviction: str = "lru"  # lru | none (no eviction under pressure)
+    enc_len: int = 16            # enc-dec: synthetic encoder frames per request
+                                 # (fixed so results are batch-shape independent)
 
     def __post_init__(self):
         assert self.page_size > 0 and self.max_slots > 0
@@ -232,6 +235,10 @@ class ServeConfig:
 
     @property
     def total_pages(self) -> int:
+        """Pool size for a plain token-addressable KV family (+1 reserved
+        null page).  ``PagedKVPool.total_pages`` is the authoritative,
+        family-aware figure — it caps the per-request table at the sliding-
+        window ring horizon and widens it for the vlm image prefix."""
         # +1 for the reserved null page
         return self.num_pages or self.max_slots * self.pages_per_request + 1
 
@@ -253,6 +260,14 @@ class ServeConfig:
             b *= 2
         out.append(self.max_len)
         return tuple(out)
+
+    def bucket_of(self, n: int) -> int:
+        """Smallest prefill bucket covering ``n`` tokens."""
+        for b in self.buckets:
+            if b >= n:
+                return b
+        raise ValueError(f"prompt len {n} exceeds largest bucket "
+                         f"{self.buckets[-1]}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -290,6 +305,8 @@ def reduced(cfg: ArchConfig, **overrides) -> ArchConfig:
         vocab=512,
         remat="none",
     )
+    if cfg.sliding_window:
+        small.update(sliding_window=32)   # window binds within CPU-size prompts
     if cfg.is_moe:
         small.update(n_experts=4, top_k=2, d_ff_expert=64,
                      n_shared_experts=min(cfg.n_shared_experts, 1),

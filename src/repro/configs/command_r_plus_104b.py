@@ -14,6 +14,7 @@ CONFIG = ArchConfig(
     act="silu",
     qkv_bias=False,
     rope_theta=75e6,
+    sliding_window=4096,      # interleaved local attention (modeled uniformly)
     norm="layernorm",
     tie_embeddings=True,      # cohere ties input/output embeddings
     source="hf:CohereForAI/c4ai-command-r-plus; unverified",

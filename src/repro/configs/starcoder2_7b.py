@@ -14,6 +14,7 @@ CONFIG = ArchConfig(
     act="gelu",
     qkv_bias=True,            # starcoder2 uses bias on attention + mlp
     rope_theta=1e5,
+    sliding_window=4096,      # starcoder2 attends within a 4k sliding window
     norm="layernorm",
     source="arXiv:2402.19173; hf:bigcode/starcoder2-7b",
 )

@@ -24,6 +24,7 @@ import dataclasses
 import numpy as np
 
 from ..configs import ServeConfig, get_arch, reduced as make_reduced
+from ..models.registry import build_model
 from ..serving import Engine, generate_static
 
 
@@ -101,9 +102,10 @@ def main(argv=None):
 
     engine = args.engine
     if engine == "auto":
-        from ..models.registry import build_model
+        # every registered cache family pages now (see models.cache_spec);
+        # auto is continuous across the board
         ok, _ = build_model(cfg).supports_paged_decode()
-        engine = "continuous" if ok and not cfg.n_image_tokens else "static"
+        engine = "continuous" if ok else "static"
     if engine == "static" and args.prefix_cache:
         print("[serve] WARNING: --prefix-cache only applies to the "
               "continuous engine; the static path serves without it")
@@ -139,19 +141,16 @@ def main(argv=None):
 
     if args.verify:
         lens = {len(p) for p in prompts}
-        recurrent = cfg.family in ("ssm", "hybrid")
-        if cfg.enc_dec or cfg.n_image_tokens:
-            # synthetic frames / image embeddings are drawn per batch shape,
-            # so a differently-batched replay sees different frontend inputs
-            print("[serve] verify skipped: synthetic frontend inputs are "
-                  "batch-shape dependent for enc-dec/vlm archs")
-            return tokens
-        if engine == "static" and recurrent and len(lens) > 1 and slots > 1:
-            # recurrent state absorbs pad tokens, so batched static output is
-            # approximate for mixed lengths — exact comparison would be unfair
+        length_bound = cfg.family in ("ssm", "hybrid") or cfg.sliding_window
+        if engine == "static" and length_bound and len(lens) > 1 and slots > 1:
+            # recurrent state absorbs pad tokens and the sliding-window ring
+            # is filled from the padded sequence end, so batched static
+            # output is approximate for mixed lengths — exact comparison
+            # would be unfair
             print("[serve] verify skipped: batched static serving of mixed-"
-                  "length prompts is approximate for recurrent families "
-                  "(state absorbs padding); rerun with --batch 1")
+                  "length prompts is approximate for recurrent/sliding-"
+                  "window families (padding enters the state/ring); rerun "
+                  "with --batch 1")
             return tokens
         ref, _ = generate_static(cfg, params, prompts, budgets, scfg,
                                  batch_size=1, seed=args.seed)

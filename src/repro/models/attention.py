@@ -197,6 +197,96 @@ def paged_prefill_attention_block(cfg: ArchConfig, p, x, cache, tables, start,
     return jnp.einsum("bshe,hed->bsd", o, p["wo"]), {"k": ck, "v": cv}
 
 
+def paged_windowed_prefill_attention_block(cfg: ArchConfig, p, x, cache,
+                                           tables, start, n_live, freqs, *,
+                                           q_block=512, unroll=False):
+    """Prefill for a sliding-window layer against the page *ring*.
+
+    Attention itself is computed from the fresh K/V (the whole prompt is in
+    ``x`` — windowed families are not prefix-cacheable, so ``start`` is
+    always 0 in practice and nothing needs to be read back from the pool);
+    only the cache writes go through the ring: position ``i`` lands at table
+    slot ``(i // ps) % horizon``, and positions that would later be
+    overwritten inside this same prefill (more than ``ring`` tokens before
+    the prompt end) are routed to the null page so the scatter never writes
+    one (page, offset) twice."""
+    from .cache_spec import window_pages
+    B, T, _ = x.shape
+    ps = cache["k"].shape[1]
+    ring = min(window_pages(cfg.sliding_window, ps), tables.shape[1]) * ps
+    q, k, v = qkv(cfg, p, x)
+    positions = start[:, None] + jnp.arange(T)[None, :]              # [B, T]
+    if freqs is not None:
+        q = apply_rope(q, positions, freqs)
+        k = apply_rope(k, positions, freqs)
+    n_total = start + n_live                                         # [B]
+    live = (jnp.arange(T)[None, :] < n_live[:, None]) \
+        & (positions >= n_total[:, None] - ring)
+    ring_slot = (positions // ps) % (ring // ps)
+    page = tables[jnp.arange(B)[:, None], ring_slot]
+    page = jnp.where(live, page, 0)                  # masked -> null page
+    off = positions % ps
+    ck = cache["k"].at[page, off].set(k.astype(cache["k"].dtype))
+    cv = cache["v"].at[page, off].set(v.astype(cache["v"].dtype))
+    o = chunked_attention(q, k, v, causal=True, window=cfg.sliding_window,
+                          q_block=q_block, softcap=cfg.attn_logit_softcap,
+                          q_offset=start, unroll=unroll)
+    return jnp.einsum("bshe,hed->bsd", o, p["wo"]), {"k": ck, "v": cv}
+
+
+def paged_windowed_decode_attention_block(cfg: ArchConfig, p, x, cache,
+                                          tables, pos, freqs):
+    """One-token decode for a sliding-window layer against the page ring.
+
+    The new K/V lands at ring slot ``(pos // ps) % horizon`` (recycling the
+    page that just aged out of the window); attention gathers the ring and
+    masks by *absolute* position recovered from the ring layout — exactly
+    the contiguous ring-buffer rule of ``decode_attention_block``, routed
+    through the page table."""
+    from .cache_spec import window_pages
+    B = x.shape[0]
+    ps = cache["k"].shape[1]
+    R = min(window_pages(cfg.sliding_window, ps), tables.shape[1])
+    ring = R * ps
+    x1 = x[:, None, :]
+    q = jnp.einsum("bsd,dhe->bshe", x1, p["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", x1, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", x1, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if freqs is not None:
+        q = apply_rope(q, pos[:, None], freqs)
+        k = apply_rope(k, pos[:, None], freqs)
+    b = jnp.arange(B)
+    page = tables[b, (pos // ps) % R]
+    off = pos % ps
+    ck = cache["k"].at[page, off].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[page, off].set(v[:, 0].astype(cache["v"].dtype))
+
+    kg = ck[tables[:, :R]].reshape(B, -1, cfg.n_kv_heads, cfg.head_dim_)
+    vg = cv[tables[:, :R]].reshape(B, -1, cfg.n_kv_heads, cfg.head_dim_)
+
+    scale = 1.0 / math.sqrt(cfg.head_dim_)
+    K = cfg.n_kv_heads
+    G = cfg.n_heads_padded // K
+    qg = q[:, 0].reshape(B, K, G, cfg.head_dim_)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, kg,
+                   preferred_element_type=jnp.float32) * scale
+    if cfg.attn_logit_softcap:
+        s = cfg.attn_logit_softcap * jnp.tanh(s / cfg.attn_logit_softcap)
+    idx = jnp.arange(ring)
+    slot = pos % ring
+    k_abs = pos[:, None] - ((slot[:, None] - idx[None, :]) % ring)
+    valid = (k_abs >= 0) & (k_abs <= pos[:, None]) \
+        & (k_abs > pos[:, None] - cfg.sliding_window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1).astype(vg.dtype)
+    o = jnp.einsum("bkgs,bskd->bkgd", a, vg).reshape(
+        B, cfg.n_heads_padded, cfg.head_dim_)
+    out = jnp.einsum("bhe,hed->bd", o, p["wo"])
+    return out, {"k": ck, "v": cv}
+
+
 def paged_decode_attention_block(cfg: ArchConfig, p, x, cache, tables, pos,
                                  freqs):
     """One-token decode step against the paged KV pool.

@@ -14,7 +14,10 @@ import jax.numpy as jnp
 from ..configs.base import ArchConfig
 from . import shardings
 from .attention import (attn_defs, cache_defs, cross_attention_block,
-                        decode_attention_block, full_attention_block, qkv)
+                        decode_attention_block, full_attention_block,
+                        paged_cache_defs, paged_decode_attention_block,
+                        paged_prefill_attention_block, qkv)
+from .cache_spec import CacheFamilySpec, CacheSpec
 from .layers import (apply_mlp, apply_norm, apply_rope, embed_defs, embed_tokens,
                      lm_logits, mlp_defs, norm_defs, rope_freqs)
 from .params import ParamDef, stack_tree
@@ -27,8 +30,16 @@ class EncDecLM:
     def __init__(self, cfg: ArchConfig):
         self.cfg = cfg
 
+    def cache_spec(self) -> CacheFamilySpec:
+        """Paged decoder self-attention KV + a pinned per-request cross cache
+        (computed once from the encoder output, read-only during decode).
+        Prompts are frame-conditioned, so token prefixes are not shareable."""
+        return CacheFamilySpec(
+            kinds=(CacheSpec("paged_kv"), CacheSpec("cross_kv")),
+            paged=True, state_slots=True)
+
     def supports_paged_decode(self):
-        return False, "enc-dec cross-attention cache is not paged yet"
+        return True, self.cache_spec().describe()
 
     # ------------------------------------------------------------ param defs
 
@@ -152,7 +163,6 @@ class EncDecLM:
         pos = cache["pos"]
         freqs = rope_freqs(cfg, cfg.head_dim_)
         x = embed_tokens(params["embed"], tokens)
-        import math as _m
 
         def body(x, pc):
             p, (cself, ccross) = pc
@@ -161,19 +171,7 @@ class EncDecLM:
             x = x + a
             # cross attention against the cached encoder K/V
             hx = apply_norm(cfg, p["ln_x"], x)
-            q = jnp.einsum("bd,dhe->bhe", hx, p["cross_attn"]["wq"])
-            if "bq" in p["cross_attn"]:
-                q = q + p["cross_attn"]["bq"]
-            K = cfg.n_kv_heads
-            G = cfg.n_heads // K
-            qg = q.reshape(q.shape[0], K, G, cfg.head_dim_)
-            s = jnp.einsum("bkgd,bskd->bkgs", qg, ccross["k"],
-                           preferred_element_type=jnp.float32)
-            s = s / _m.sqrt(cfg.head_dim_)
-            att = jax.nn.softmax(s, axis=-1).astype(ccross["v"].dtype)
-            o = jnp.einsum("bkgs,bskd->bkgd", att, ccross["v"])
-            o = o.reshape(o.shape[0], cfg.n_heads, cfg.head_dim_)
-            x = x + jnp.einsum("bhe,hed->bd", o, p["cross_attn"]["wo"])
+            x = x + self._cross_decode(p, hx, ccross["k"], ccross["v"])
             x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x))
             return x, (c2, ccross)
 
@@ -217,3 +215,114 @@ class EncDecLM:
         cache = {"self": cself, "cross": ccross,
                  "pos": jnp.full((B,), S, jnp.int32)}
         return logits, cache
+
+    # ------------------------------------------------------- paged serving
+
+    def paged_cache_defs(self, num_pages: int, page_size: int):
+        """Decoder *self*-attention KV pages, stacked over decoder layers."""
+        per = paged_cache_defs(self.cfg, num_pages, page_size)
+        return stack_tree(per, self.cfg.n_dec_layers)
+
+    def state_slot_defs(self, n_slots: int, max_len: int, enc_len: int):
+        """Per-request pinned cross-attention cache: one K/V block of
+        ``enc_len`` encoder positions per decoder layer, slot axis 1."""
+        cfg = self.cfg
+        hd = cfg.head_dim_
+        cross = {
+            "k": ParamDef((n_slots, enc_len, cfg.n_kv_heads, hd),
+                          ("batch", "seq", "kv_heads", "head_dim"),
+                          init="zeros"),
+            "v": ParamDef((n_slots, enc_len, cfg.n_kv_heads, hd),
+                          ("batch", "seq", "kv_heads", "head_dim"),
+                          init="zeros"),
+        }
+        return {"cross": stack_tree(cross, cfg.n_dec_layers)}
+
+    def _cross_decode(self, p, hx, ck, cv):
+        """One-token cross-attention against a pinned cross cache row."""
+        cfg = self.cfg
+        import math as _m
+        q = jnp.einsum("bd,dhe->bhe", hx, p["cross_attn"]["wq"])
+        if "bq" in p["cross_attn"]:
+            q = q + p["cross_attn"]["bq"]
+        K = cfg.n_kv_heads
+        G = cfg.n_heads // K
+        qg = q.reshape(q.shape[0], K, G, cfg.head_dim_)
+        s = jnp.einsum("bkgd,bskd->bkgs", qg, ck,
+                       preferred_element_type=jnp.float32)
+        s = s / _m.sqrt(cfg.head_dim_)
+        att = jax.nn.softmax(s, axis=-1).astype(cv.dtype)
+        o = jnp.einsum("bkgs,bskd->bkgd", att, cv)
+        o = o.reshape(o.shape[0], cfg.n_heads, cfg.head_dim_)
+        return jnp.einsum("bhe,hed->bd", o, p["cross_attn"]["wo"])
+
+    def decode_paged(self, params, kv, state, tables, pos, tokens, mesh=None):
+        """One-token continuous-batching decode: paged self-attention + the
+        slot-pinned cross cache.  Returns (logits, new_kv, state) — the cross
+        cache is read-only here (written once at prefill)."""
+        cfg = self.cfg
+        freqs = rope_freqs(cfg, cfg.head_dim_)
+        x = embed_tokens(params["embed"], tokens)
+
+        def body(x, pc):
+            p, (cself, ccross) = pc
+            h = apply_norm(cfg, p["ln1"], x)
+            a, c2 = paged_decode_attention_block(cfg, p["self_attn"], h, cself,
+                                                 tables, pos, freqs)
+            x = x + a
+            hx = apply_norm(cfg, p["ln_x"], x)
+            x = x + self._cross_decode(p, hx, ccross["k"], ccross["v"])
+            x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x))
+            return x, (c2, ccross)
+
+        x, (nself, ncross) = _scan_blocks(
+            body, x, params["dec_blocks"], (kv, state["cross"]),
+            unroll=cfg.unroll)
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = lm_logits(cfg, params["embed"], x)
+        return logits, nself, {"cross": ncross}
+
+    def prefill_paged(self, params, kv, state, tables, slots, start, n_tail,
+                      tokens, extras=None, mesh=None):
+        """Full-prompt prefill: encode each request's frames, write the
+        decoder prompt's self-attention KV through the page tables, and pin
+        the cross K/V into the state slots at rows ``slots`` (out-of-range
+        rows — batch padding — scatter nothing).  ``start`` is always 0
+        (frame-conditioned prompts are not prefix-cacheable)."""
+        cfg = self.cfg
+        enc_out = self.encode(params, extras["frames"], mesh)
+        freqs = rope_freqs(cfg, cfg.head_dim_)
+        B = tokens.shape[0]
+        x = embed_tokens(params["embed"], tokens)
+
+        def body(x, pc):
+            p, cself = pc
+            h = apply_norm(cfg, p["ln1"], x)
+            a, c2 = paged_prefill_attention_block(
+                cfg, p["self_attn"], h, cself, tables, start, n_tail, freqs,
+                q_block=cfg.attn_q_block, unroll=cfg.unroll)
+            x = x + a
+            hx = apply_norm(cfg, p["ln_x"], x)
+            x = x + cross_attention_block(cfg, p["cross_attn"], hx, enc_out,
+                                          q_block=cfg.attn_q_block,
+                                          unroll=cfg.unroll)
+            ck = jnp.einsum("bsd,dhe->bshe", enc_out, p["cross_attn"]["wk"])
+            cv = jnp.einsum("bsd,dhe->bshe", enc_out, p["cross_attn"]["wv"])
+            if "bk" in p["cross_attn"]:
+                ck, cv = ck + p["cross_attn"]["bk"], cv + p["cross_attn"]["bv"]
+            x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x))
+            return x, (c2, {"k": ck, "v": cv})
+
+        def f(carry, pc):
+            x = carry
+            x, out = body(x, pc)
+            return x, out
+        x, (nself, ncross) = jax.lax.scan(f, x, (params["dec_blocks"], kv),
+                                          unroll=cfg.unroll)
+        new_state = jax.tree.map(
+            lambda a, nw: a.at[:, slots].set(nw.astype(a.dtype), mode="drop"),
+            state, {"cross": ncross})
+        x = apply_norm(cfg, params["final_norm"], x)
+        last = x[jnp.arange(B), n_tail - 1]
+        logits = lm_logits(cfg, params["embed"], last)
+        return logits, nself, new_state

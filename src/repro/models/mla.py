@@ -78,6 +78,102 @@ def mla_cache_defs(cfg: ArchConfig, batch: int, max_len: int):
     }
 
 
+def mla_paged_cache_defs(cfg: ArchConfig, num_pages: int, page_size: int):
+    """One layer's share of the paged latent pool: the absorbed cache payload
+    (rank-``kv_lora`` latent + roped rope-head key) per token slot."""
+    return {
+        "ckv": ParamDef((num_pages, page_size, cfg.kv_lora_rank),
+                        (None, "seq", "lora"), init="zeros"),
+        "krope": ParamDef((num_pages, page_size, cfg.rope_head_dim),
+                          (None, "seq", None), init="zeros"),
+    }
+
+
+def mla_paged_prefill_block(cfg: ArchConfig, p, x, cache, tables, start,
+                            n_live, freqs, *, q_block=512, unroll=False):
+    """Multi-token MLA prefill at an offset, straight into the latent pages.
+
+    Mirrors ``paged_prefill_attention_block``: the tail's latent is written
+    token-granularly through the page table (padding rows to the null page),
+    then the *whole* logical sequence — cached prefix pages plus the fresh
+    tail — is gathered and per-head K/V are materialized from it with
+    ``wkv_b`` exactly as ``mla_full_block`` does, so a cached prefix is read
+    as if this request had prefilled it itself."""
+    B, T, _ = x.shape
+    ps = cache["ckv"].shape[1]
+    nope, rope_d = cfg.nope_head_dim, cfg.rope_head_dim
+    positions = start[:, None] + jnp.arange(T)[None, :]              # [B, T]
+    q = _queries(cfg, p, x)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, freqs)
+
+    ckv_full = x @ p["wkv_a"]
+    ckv = rmsnorm(ckv_full[..., :cfg.kv_lora_rank], p["kv_norm"])
+    krope = apply_rope(ckv_full[..., cfg.kv_lora_rank:][:, :, None, :],
+                       positions, freqs)[:, :, 0, :]
+
+    live = jnp.arange(T)[None, :] < n_live[:, None]                  # [B, T]
+    page = tables[jnp.arange(B)[:, None], positions // ps]
+    page = jnp.where(live, page, 0)                  # padding -> null page
+    off = positions % ps
+    cc = cache["ckv"].at[page, off].set(ckv.astype(cache["ckv"].dtype))
+    cr = cache["krope"].at[page, off].set(krope.astype(cache["krope"].dtype))
+
+    ccg = cc[tables].reshape(B, -1, cfg.kv_lora_rank)
+    crg = cr[tables].reshape(B, -1, rope_d)
+    kv = jnp.einsum("bsl,lhe->bshe", ccg, p["wkv_b"])
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(crg[:, :, None, :],
+                                  k_nope.shape[:-1] + (rope_d,))], -1)
+    qq = jnp.concatenate([q_nope, q_rope], -1)
+    o = chunked_attention(qq, k, v, causal=True, q_block=q_block,
+                          q_offset=start, unroll=unroll)
+    return jnp.einsum("bshe,hed->bsd", o, p["wo"]), {"ckv": cc, "krope": cr}
+
+
+def mla_paged_decode_block(cfg: ArchConfig, p, x, cache, tables, pos, freqs):
+    """Absorbed one-token decode against the latent pages (the paged twin of
+    ``mla_decode_block``)."""
+    B = x.shape[0]
+    ps = cache["ckv"].shape[1]
+    nope, rope_d = cfg.nope_head_dim, cfg.rope_head_dim
+    scale = 1.0 / math.sqrt(nope + rope_d)
+
+    q = _queries(cfg, p, x[:, None, :])[:, 0]                      # [B,H,·]
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope[:, None], pos[:, None], freqs)[:, 0]
+
+    ckv_full = x @ p["wkv_a"]
+    ckv_new = rmsnorm(ckv_full[..., :cfg.kv_lora_rank], p["kv_norm"])
+    kr_new = apply_rope(ckv_full[..., None, cfg.kv_lora_rank:][:, None],
+                        pos[:, None], freqs)[:, 0, 0]
+
+    b = jnp.arange(B)
+    page = tables[b, pos // ps]
+    off = pos % ps
+    cc = cache["ckv"].at[page, off].set(ckv_new.astype(cache["ckv"].dtype))
+    cr = cache["krope"].at[page, off].set(kr_new.astype(cache["krope"].dtype))
+
+    ccg = cc[tables].reshape(B, -1, cfg.kv_lora_rank)
+    crg = cr[tables].reshape(B, -1, rope_d)
+    w_uk = p["wkv_b"][..., :nope]                                  # [L,H,nope]
+    q_eff = jnp.einsum("bhn,lhn->bhl", q_nope, w_uk)
+    s = jnp.einsum("bhl,bsl->bhs", q_eff, ccg,
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bhr,bsr->bhs", q_rope, crg,
+                       preferred_element_type=jnp.float32)
+    s = s * scale
+    valid = jnp.arange(ccg.shape[1])[None, :] <= pos[:, None]
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1).astype(ccg.dtype)
+    ctx = jnp.einsum("bhs,bsl->bhl", a, ccg)
+    w_uv = p["wkv_b"][..., nope:]                                  # [L, H, v]
+    o = jnp.einsum("bhl,lhv->bhv", ctx, w_uv)
+    out = jnp.einsum("bhv,hvd->bd", o, p["wo"])
+    return out, {"ckv": cc, "krope": cr}
+
+
 def mla_decode_block(cfg: ArchConfig, p, x, cache, pos, freqs):
     """Absorbed one-token decode.  x: [B, d]."""
     B = x.shape[0]

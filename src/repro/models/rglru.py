@@ -50,11 +50,21 @@ def _conv(u, w):
     return out
 
 
-def rglru_block(cfg: ArchConfig, p, x, *, init_state=None) -> Tuple[jax.Array, jax.Array]:
-    """Full-sequence recurrent block. x: [B,S,d] -> ([B,S,d], final_state [B,dr])."""
+def rglru_block(cfg: ArchConfig, p, x, *, init_state=None,
+                length_mask=None) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence recurrent block. x: [B,S,d] -> ([B,S,d], final_state [B,dr]).
+
+    ``length_mask`` ([B, S] bool, optional) marks real positions; masked
+    (padding) steps become identities (``a = 1, b = 0``) so the recurrence —
+    and therefore ``final_state`` — stops at the last real position.  Serving
+    uses this for bucketed right-padded prefill."""
     u = _conv(x @ p["w_in"], p["conv"])
     gate = jax.nn.gelu(x @ p["w_gate"])
     a, b = _gates(p, u)                                            # [B,S,dr] fp32
+    if length_mask is not None:
+        m = length_mask[..., None]
+        a = jnp.where(m, a, 1.0)
+        b = jnp.where(m, b, 0.0)
     if init_state is not None:
         # fold the initial state into the first step: h_1 = a_1 h_0 + b_1
         b = b.at[:, 0].add(a[:, 0] * init_state.astype(jnp.float32))

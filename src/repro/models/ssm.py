@@ -117,8 +117,16 @@ def ssd_chunked(xd, dtA, B, C, chunk: int, init_state=None):
     return y[:, :s_out], final
 
 
-def ssm_block(cfg: ArchConfig, p, x, *, init_state=None) -> Tuple[jax.Array, jax.Array]:
-    """Full-sequence SSD block. x: [B, S, d_model] -> ([B,S,d_model], final_state)."""
+def ssm_block(cfg: ArchConfig, p, x, *, init_state=None,
+              length_mask=None) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence SSD block. x: [B, S, d_model] -> ([B,S,d_model], final_state).
+
+    ``length_mask`` ([B, S] bool, optional) marks real positions; masked
+    (padding) positions get ``dt = 0`` so they neither decay nor feed the
+    state — the returned ``final_state`` is then exactly the state after the
+    last *real* position, which is what serving's bucketed (right-padded)
+    prefill needs.  Outputs at masked positions are garbage; real positions
+    are bit-identical to the unmasked path."""
     h, pd, n = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state
     z = x @ p["wz"]
     xs = _causal_depthwise_conv(x @ p["wx"], p["conv_x"])
@@ -126,6 +134,8 @@ def ssm_block(cfg: ArchConfig, p, x, *, init_state=None) -> Tuple[jax.Array, jax
     B = jax.nn.silu(_causal_depthwise_conv(x @ p["wB"], p["conv_B"]))
     C = jax.nn.silu(_causal_depthwise_conv(x @ p["wC"], p["conv_C"]))
     dt = jax.nn.softplus((x @ p["wdt"]).astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    if length_mask is not None:
+        dt = dt * length_mask[..., None]        # pads: decay 1, input 0
     A = -jnp.exp(p["A_log"])                                       # [h], negative
     xh = xs.reshape(*xs.shape[:2], h, pd)
     xd = xh * dt[..., None].astype(xh.dtype)

@@ -111,13 +111,16 @@ def make_serve_step(cfg: ArchConfig, mesh: Optional[Mesh], kind: str):
        kind='prefill': step(params, batch) -> (logits, cache)
        kind='prefill_at': step(params, batch, last_idx) -> (logits, cache)
          (logits read at per-row position ``last_idx`` — bucketed prompts)
-       kind='decode_paged': step(params, kv, tables, pos, tokens)
-         -> (next_tokens, new_kv) — slot-indexed continuous-batching decode
-         against the paged KV pool (see repro.serving).
-       kind='prefill_paged': step(params, kv, tables, start, n_tail, tokens)
-         -> (logits, new_kv) — tail prefill at offset ``start`` straight into
-         the paged pool; positions < start are read from already-resident
-         pages (radix prefix cache hits)."""
+       kind='decode_paged': step(params, kv, state, tables, pos, tokens)
+         -> (next_tokens, new_kv, new_state) — slot-indexed continuous-
+         batching decode against the paged pool and/or state-slot pool
+         (see repro.serving; {} stands in for an absent pool).
+       kind='prefill_paged': step(params, kv, state, tables, slots, start,
+         n_tail, tokens, extras) -> (logits, new_kv, new_state) — batched
+         tail prefill at offset ``start`` straight into the pools; positions
+         < start are read from already-resident pages (radix prefix cache
+         hits), recurrent/cross state is scattered into rows ``slots``, and
+         ``extras`` carries frontend inputs (frames / image_embeds)."""
     model = build_model(cfg)
     if kind == "decode":
         def step(params, cache, tokens):
@@ -126,15 +129,17 @@ def make_serve_step(cfg: ArchConfig, mesh: Optional[Mesh], kind: str):
             return nxt, cache
         return step
     if kind == "decode_paged":
-        def step(params, kv, tables, pos, tokens):
-            logits, kv = model.decode_paged(params, kv, tables, pos, tokens, mesh)
+        def step(params, kv, state, tables, pos, tokens):
+            logits, kv, state = model.decode_paged(params, kv, state, tables,
+                                                   pos, tokens, mesh)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            return nxt, kv
+            return nxt, kv, state
         return step
     if kind == "prefill_paged":
-        def step(params, kv, tables, start, n_tail, tokens):
-            return model.prefill_paged(params, kv, tables, start, n_tail,
-                                       tokens, mesh)
+        def step(params, kv, state, tables, slots, start, n_tail, tokens,
+                 extras):
+            return model.prefill_paged(params, kv, state, tables, slots,
+                                       start, n_tail, tokens, extras, mesh)
         return step
     if kind == "prefill_at":
         def step(params, batch, last_idx):

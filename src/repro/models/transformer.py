@@ -19,10 +19,15 @@ from . import shardings
 from .attention import (attn_defs, cache_defs, decode_attention_block,
                         full_attention_block, paged_cache_defs,
                         paged_decode_attention_block,
-                        paged_prefill_attention_block)
+                        paged_prefill_attention_block,
+                        paged_windowed_decode_attention_block,
+                        paged_windowed_prefill_attention_block)
+from .cache_spec import CacheFamilySpec, CacheSpec
 from .layers import (apply_mlp, apply_norm, embed_defs, embed_tokens, lm_logits,
                      mlp_defs, norm_defs, rope_freqs)
-from .mla import (mla_cache_defs, mla_decode_block, mla_defs, mla_full_block)
+from .mla import (mla_cache_defs, mla_decode_block, mla_defs, mla_full_block,
+                  mla_paged_cache_defs, mla_paged_decode_block,
+                  mla_paged_prefill_block)
 from .moe import moe_apply, moe_decode_apply, moe_defs
 from .params import ParamDef, stack_tree
 from .rglru import (rglru_block, rglru_cache_defs, rglru_decode_block, rglru_defs)
@@ -468,7 +473,20 @@ class DecoderLM:
                                              window=cfg.sliding_window,
                                              q_block=cfg.attn_q_block,
                                              unroll=cfg.unroll)
-                    c = {"k": k, "v": v}
+                    if cfg.sliding_window:
+                        # ring-buffer the last W keys at slots (t % W), the
+                        # layout decode's windowed cache reads (cache_defs
+                        # allocates min(window, max_len) ring entries)
+                        W = min(cfg.sliding_window, S)
+                        t = jnp.arange(S - W, S)
+                        slots = t % W
+                        kw = jnp.zeros((k.shape[0], W) + k.shape[2:],
+                                       k.dtype).at[:, slots].set(k[:, S - W:])
+                        vw = jnp.zeros((v.shape[0], W) + v.shape[2:],
+                                       v.dtype).at[:, slots].set(v[:, S - W:])
+                        c = {"k": kw, "v": vw}
+                    else:
+                        c = {"k": k, "v": v}
                 x = x + a
                 if "moe" in p:
                     m, _ = moe_apply(cfg, p["moe"], apply_norm(cfg, p["ln2"], x), mesh=mesh)
@@ -492,52 +510,116 @@ class DecoderLM:
         logits = lm_logits(cfg, params["embed"], last)
         return logits, cache
 
-    def supports_paged_decode(self) -> Tuple[bool, str]:
-        """Whether ``decode_paged`` covers this arch; else a reason string."""
+    def cache_spec(self) -> CacheFamilySpec:
+        """The decode-cache taxonomy the serving stack schedules against."""
         cfg = self.cfg
-        if cfg.enc_dec or cfg.family in ("ssm", "hybrid"):
-            return False, f"family {cfg.family!r} keeps non-KV decode state"
+        if cfg.family == "ssm":
+            return CacheFamilySpec(kinds=(CacheSpec("state_slot"),),
+                                   paged=False, state_slots=True,
+                                   checkpointable=True)
+        if cfg.family == "hybrid":
+            # the bounded local-attention ring lives inside the state slot
+            return CacheFamilySpec(
+                kinds=(CacheSpec("state_slot"),
+                       CacheSpec("state_slot", window=cfg.attn_window)),
+                paged=False, state_slots=True, checkpointable=True)
         if cfg.use_mla:
-            return False, "MLA absorbed decode cache is not paged yet"
+            return CacheFamilySpec(kinds=(CacheSpec("paged_mla"),),
+                                   paged=True, prefix_cacheable=True)
         if cfg.sliding_window:
-            return False, "sliding-window ring buffer is not paged yet"
-        return True, ""
+            return CacheFamilySpec(
+                kinds=(CacheSpec("windowed_kv", window=cfg.sliding_window),),
+                paged=True, window=cfg.sliding_window)
+        # vlm prompts are image-conditioned: identical token prefixes do not
+        # imply identical KV, so the radix cache must not share them
+        return CacheFamilySpec(kinds=(CacheSpec("paged_kv"),), paged=True,
+                               prefix_cacheable=not cfg.n_image_tokens,
+                               prefix_tokens=cfg.n_image_tokens)
+
+    def supports_paged_decode(self) -> Tuple[bool, str]:
+        """Capability report: every decoder-LM family pages now.  Returns
+        (True, <cache-family description>) — kept as a tuple for callers that
+        still branch on the old gate."""
+        return True, self.cache_spec().describe()
 
     def paged_cache_defs(self, num_pages: int, page_size: int):
-        """Abstract defs for the layer-stacked paged KV pool."""
-        ok, why = self.supports_paged_decode()
-        if not ok:
-            raise NotImplementedError(f"{self.cfg.name}: {why}")
-        per = paged_cache_defs(self.cfg, num_pages, page_size)
-        return stack_tree(per, self.cfg.n_layers)
-
-    def decode_paged(self, params, kv, tables, pos, tokens, mesh=None):
-        """One-token continuous-batching decode step over the paged KV pool.
-
-        kv: {"k","v": [L, P, ps, K, D]} shared pool; tables: [B, maxp] int32
-        per-slot page tables; pos: [B] int32 absolute positions; tokens: [B]
-        int32.  Returns (logits [B, V], new_kv).  Slots the scheduler considers
-        idle should have their table rows pointed at the reserved null page —
-        their writes land there and their outputs are discarded by the host."""
+        """Abstract defs for the layer-stacked paged pool ({} when the whole
+        cache is per-request state slots)."""
         cfg = self.cfg
-        ok, why = self.supports_paged_decode()
-        if not ok:
-            raise NotImplementedError(f"{cfg.name}: {why}")
+        if not self.cache_spec().paged:
+            return {}
+        per = (mla_paged_cache_defs(cfg, num_pages, page_size) if cfg.use_mla
+               else paged_cache_defs(cfg, num_pages, page_size))
+        return stack_tree(per, cfg.n_layers)
+
+    def state_slot_defs(self, n_slots: int, max_len: int, enc_len: int = 0):
+        """Abstract defs for the per-request state-slot pool ({} for pure
+        paged families).  Slot axis is axis 1 of every (layer-stacked) leaf;
+        layout matches ``cache_defs(n_slots, max_len)`` minus ``pos`` so the
+        contiguous decode path can be reused verbatim."""
+        if self.cfg.family not in ("ssm", "hybrid"):
+            return {}
+        defs = self.cache_defs(n_slots, max_len)
+        defs.pop("pos")
+        return defs
+
+    # ----- paged attention-block dispatch (one line per cache family) -----
+
+    def _paged_attn_decode(self, p, h, c, tables, pos, freqs):
+        cfg = self.cfg
+        if cfg.use_mla:
+            return mla_paged_decode_block(cfg, p["attn"], h, c, tables, pos,
+                                          freqs)
+        if cfg.sliding_window:
+            return paged_windowed_decode_attention_block(
+                cfg, p["attn"], h, c, tables, pos, freqs)
+        return paged_decode_attention_block(cfg, p["attn"], h, c, tables, pos,
+                                            freqs)
+
+    def _paged_attn_prefill(self, p, h, c, tables, start, n_live, freqs):
+        cfg = self.cfg
+        if cfg.use_mla:
+            return mla_paged_prefill_block(
+                cfg, p["attn"], h, c, tables, start, n_live, freqs,
+                q_block=cfg.attn_q_block, unroll=cfg.unroll)
+        if cfg.sliding_window:
+            return paged_windowed_prefill_attention_block(
+                cfg, p["attn"], h, c, tables, start, n_live, freqs,
+                q_block=cfg.attn_q_block, unroll=cfg.unroll)
+        return paged_prefill_attention_block(
+            cfg, p["attn"], h, c, tables, start, n_live, freqs,
+            q_block=cfg.attn_q_block, unroll=cfg.unroll)
+
+    def decode_paged(self, params, kv, state, tables, pos, tokens, mesh=None):
+        """One-token continuous-batching decode step.
+
+        kv: layer-stacked paged pool ({} for state-slot families); state:
+        layer-stacked per-slot recurrent state ({} for paged families),
+        slot i == batch row i; tables: [B, maxp] int32 per-slot page tables;
+        pos: [B] int32 absolute positions; tokens: [B] int32.  Returns
+        (logits [B, V], new_kv, new_state).  Idle rows ride along masked:
+        their table rows point at the reserved null page and their state rows
+        are overwritten at the next admission's prefill."""
+        cfg = self.cfg
+        if cfg.family in ("ssm", "hybrid"):
+            cache = dict(state)
+            cache["pos"] = pos
+            logits, new_cache = self.decode(params, cache, tokens, mesh)
+            new_cache.pop("pos")
+            return logits, kv, new_cache
         x = embed_tokens(params["embed"], tokens)
         freqs = self._freqs()
 
         def dense_step(x, p, c):
             h = apply_norm(cfg, p["ln1"], x)
-            a, c2 = paged_decode_attention_block(cfg, p["attn"], h, c, tables,
-                                                 pos, freqs)
+            a, c2 = self._paged_attn_decode(p, h, c, tables, pos, freqs)
             x = x + a
             x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x))
             return x, c2
 
         def moe_step(x, p, c):
             h = apply_norm(cfg, p["ln1"], x)
-            a, c2 = paged_decode_attention_block(cfg, p["attn"], h, c, tables,
-                                                 pos, freqs)
+            a, c2 = self._paged_attn_decode(p, h, c, tables, pos, freqs)
             x = x + a
             x = x + moe_decode_apply(cfg, p["moe"], apply_norm(cfg, p["ln2"], x),
                                      mesh=mesh)
@@ -577,45 +659,55 @@ class DecoderLM:
 
         x = apply_norm(cfg, params["final_norm"], x)
         logits = lm_logits(cfg, params["embed"], x)
-        return logits, new_kv
+        return logits, new_kv, state
 
-    def prefill_paged(self, params, kv, tables, start, n_tail, tokens,
-                      mesh=None):
-        """Tail prefill at an offset, straight into the paged KV pool.
+    def prefill_paged(self, params, kv, state, tables, slots, start, n_tail,
+                      tokens, extras=None, mesh=None):
+        """Tail prefill at an offset, straight into the paged pool and/or the
+        state-slot pool.
 
-        kv: {"k","v": [L, P, ps, K, D]} shared pool; tables: [B, maxp] int32
-        per-request page tables; start: [B] int32 absolute position of
-        ``tokens[:, 0]``; n_tail: [B] int32 count of real tail tokens
-        (``tokens`` is right-padded to a bucket); tokens: [B, T] int32.
+        kv: layer-stacked paged pool ({} for state-slot families); state:
+        layer-stacked per-slot state ({} for paged families); tables: [B,
+        maxp] int32 per-request page tables; slots: [B] int32 decode-row /
+        state-slot indices (out-of-range rows — batch padding — scatter
+        nothing); start: [B] int32 absolute position of ``tokens[:, 0]``;
+        n_tail: [B] int32 count of real tail tokens (``tokens`` is
+        right-padded to a bucket); tokens: [B, T] int32; extras: optional
+        frontend inputs ({"image_embeds": [B, n_img, D]} for vlm).
 
-        With ``start == 0`` this is a full prompt prefill (the engine's only
-        prefill path); with ``start > 0`` the first ``start`` positions are
-        read from pages already present in the pool — the radix prefix cache's
-        shared pages plus the request's COW fork of a partially-matched page —
-        and only the tail is computed.  Padding rows write to the null page.
-        Returns (last-real-token logits [B, V], new_kv)."""
+        With ``start == 0`` this is a full prompt prefill; with ``start > 0``
+        (prefix-cacheable families only) the first ``start`` positions are
+        read from pages already resident in the pool and only the tail is
+        computed.  Padding rows/positions write to the null page.  Returns
+        (last-real-token logits [B, V], new_kv, new_state)."""
         cfg = self.cfg
-        ok, why = self.supports_paged_decode()
-        if not ok:
-            raise NotImplementedError(f"{cfg.name}: {why}")
+        if cfg.family in ("ssm", "hybrid"):
+            return self._prefill_state_slots(params, kv, state, slots, n_tail,
+                                             tokens, mesh)
         x = embed_tokens(params["embed"], tokens)
+        n_live = n_tail
+        if cfg.n_image_tokens:
+            # vlm: the hidden sequence is image tokens ++ text tokens; the
+            # image prefix is always live and always at positions [0, n_img)
+            img = (extras["image_embeds"].astype(x.dtype)
+                   @ params["vision_proj"])
+            x = jnp.concatenate([img, x], axis=1)
+            n_live = n_tail + cfg.n_image_tokens
         freqs = self._freqs()
         B = x.shape[0]
 
         def dense_step(x, p, c):
             h = apply_norm(cfg, p["ln1"], x)
-            a, c2 = paged_prefill_attention_block(
-                cfg, p["attn"], h, c, tables, start, n_tail, freqs,
-                q_block=cfg.attn_q_block, unroll=cfg.unroll)
+            a, c2 = self._paged_attn_prefill(p, h, c, tables, start, n_live,
+                                             freqs)
             x = x + a
             x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x))
             return x, c2
 
         def moe_step(x, p, c):
             h = apply_norm(cfg, p["ln1"], x)
-            a, c2 = paged_prefill_attention_block(
-                cfg, p["attn"], h, c, tables, start, n_tail, freqs,
-                q_block=cfg.attn_q_block, unroll=cfg.unroll)
+            a, c2 = self._paged_attn_prefill(p, h, c, tables, start, n_live,
+                                             freqs)
             x = x + a
             m, _ = moe_apply(cfg, p["moe"], apply_norm(cfg, p["ln2"], x),
                              mesh=mesh)
@@ -654,14 +746,73 @@ class DecoderLM:
                                      unroll=cfg.unroll)
 
         x = apply_norm(cfg, params["final_norm"], x)
+        last = x[jnp.arange(B), n_live - 1]
+        logits = lm_logits(cfg, params["embed"], last)
+        return logits, new_kv, state
+
+    # ----------------------------------------------- state-slot prefill path
+
+    def _prefill_state_slots(self, params, kv, state, slots, n_tail, tokens,
+                             mesh=None):
+        """Full-prompt prefill for recurrent families: run the masked full-
+        sequence forward (right-padding is a recurrence no-op under
+        ``length_mask``), extract each layer's final state + conv taps at the
+        *true* prompt length, and scatter them into the state pool at rows
+        ``slots`` (out-of-range rows are dropped)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = embed_tokens(params["embed"], tokens)
+        if cfg.family == "hybrid":
+            x = x * math.sqrt(cfg.d_model)
+        mask = jnp.arange(S)[None, :] < n_tail[:, None]              # [B, S]
+
+        def conv_tail(u, width):
+            """Last ``width - 1`` rows of ``u`` before each row's true length
+            (zeros where the prompt is shorter than the conv receptive
+            field, matching the zero-initialized decode conv cache)."""
+            idx = n_tail[:, None] - (width - 1) + jnp.arange(width - 1)[None, :]
+            valid = idx >= 0
+            g = jnp.take_along_axis(u, jnp.maximum(idx, 0)[..., None], axis=1)
+            return jnp.where(valid[..., None], g, 0).astype(u.dtype)
+
+        if cfg.family == "ssm":
+            def body(x, p):
+                h = apply_norm(cfg, p["ln1"], x)
+                z_in = h @ p["ssm"]["wx"]
+                cB_in = h @ p["ssm"]["wB"]
+                cC_in = h @ p["ssm"]["wC"]
+                s, final = ssm_block(cfg, p["ssm"], h, length_mask=mask)
+                w = cfg.conv_width
+                c = {"conv_x": conv_tail(z_in, w), "conv_B": conv_tail(cB_in, w),
+                     "conv_C": conv_tail(cC_in, w), "state": final}
+                return x + s, c
+            x, blocks = _scan_blocks_emit(body, x, params["blocks"],
+                                          unroll=cfg.unroll)
+            new = {"blocks": blocks}
+        else:
+            # ring length is whatever the state pool allocated
+            x, new = self._hybrid_prefill_body(
+                params, x, mask, conv_tail, n_tail,
+                L_ring=state["attn_blocks"]["k"].shape[2])
+        new_state = jax.tree.map(
+            lambda a, nw: a.at[:, slots].set(nw.astype(a.dtype), mode="drop"),
+            state, new)
+        x = apply_norm(cfg, params["final_norm"], x)
         last = x[jnp.arange(B), n_tail - 1]
         logits = lm_logits(cfg, params["embed"], last)
-        return logits, new_kv
+        return logits, kv, new_state
 
-    def _prefill_hybrid(self, params, x, freqs, S):
+    def _hybrid_prefill_body(self, params, x, mask, conv_tail, n_tail,
+                             L_ring):
+        """The one hybrid (RG-LRU + windowed-attention) prefill forward,
+        shared by the static path (`_prefill_hybrid`: unmasked, ring length
+        ``min(window, S)``) and the state-slot path (`_prefill_state_slots`:
+        length-masked, ring length from the state pool).  Emits per-layer
+        {conv taps, recurrent state, K/V ring} at each row's true length."""
         cfg = self.cfg
+        S = x.shape[1]
+        freqs = self._freqs()
         n_groups, tail, _ = self._hybrid_counts()
-        W = min(cfg.attn_window, S)
         positions = jnp.arange(S)[None, :]
         rec2 = jax.tree.map(lambda a: a.reshape((n_groups, 2) + a.shape[1:]),
                             params["rec_blocks"])
@@ -669,10 +820,10 @@ class DecoderLM:
         def rec_fwd(x, p):
             h = apply_norm(cfg, p["ln1"], x)
             u_raw = h @ p["rec"]["w_in"]
-            r, final = rglru_block(cfg, p["rec"], h)
+            r, final = rglru_block(cfg, p["rec"], h, length_mask=mask)
             x = x + r
             x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x))
-            c = {"conv": u_raw[:, S - cfg.conv_width + 1:], "state": final}
+            c = {"conv": conv_tail(u_raw, cfg.conv_width), "state": final}
             return x, c
 
         def gbody(x, ps):
@@ -684,31 +835,60 @@ class DecoderLM:
             from .layers import apply_rope as _ar
             q, k, v = _qkv(cfg, ap["attn"], h)
             k = _ar(k, positions, freqs)
-            a = full_attention_block(cfg, ap["attn"], h, freqs, window=cfg.attn_window, q_block=cfg.attn_q_block, unroll=cfg.unroll)
+            a = full_attention_block(cfg, ap["attn"], h, freqs,
+                                     window=cfg.attn_window,
+                                     q_block=cfg.attn_q_block,
+                                     unroll=cfg.unroll)
             x = x + a
             x = x + apply_mlp(cfg, ap["mlp"], apply_norm(cfg, ap["ln2"], x))
-            # ring-buffer the last W keys at slots (t % W)
-            t = jnp.arange(S - W, S)
-            slots = t % W
-            kw = jnp.zeros((k.shape[0], W) + k.shape[2:], k.dtype).at[:, slots].set(
-                k[:, S - W:])
-            vw = jnp.zeros((v.shape[0], W) + v.shape[2:], v.dtype).at[:, slots].set(
-                v[:, S - W:])
+            # ring-buffer the last L_ring *true* keys at slots (t % L_ring),
+            # per row: positions past each row's prompt never enter the ring
+            b = x.shape[0]
+            t = n_tail[:, None] - L_ring + jnp.arange(L_ring)[None, :]  # [B,R]
+            ring = t % L_ring
+            valid = t >= 0
+            rows = jnp.arange(b)[:, None]
+            kg = jnp.take_along_axis(
+                k, jnp.maximum(t, 0)[..., None, None], axis=1)
+            vg = jnp.take_along_axis(
+                v, jnp.maximum(t, 0)[..., None, None], axis=1)
+            kg = jnp.where(valid[..., None, None], kg, 0)
+            vg = jnp.where(valid[..., None, None], vg, 0)
+            kw = jnp.zeros((b, L_ring) + k.shape[2:], k.dtype
+                           ).at[rows, ring].set(kg.astype(k.dtype))
+            vw = jnp.zeros((b, L_ring) + v.shape[2:], v.dtype
+                           ).at[rows, ring].set(vg.astype(v.dtype))
             ca = {"k": kw, "v": vw}
-            rc = jax.tree.map(lambda a, b: jnp.stack([a, b]), c0, c1)
+            rc = jax.tree.map(lambda a, bb: jnp.stack([a, bb]), c0, c1)
             return x, (rc, ca)
 
-        x, (nrec, nattn) = _scan_blocks_emit(gbody, x, (rec2, params["attn_blocks"]), unroll=cfg.unroll)
-        cache = {
+        x, (nrec, nattn) = _scan_blocks_emit(
+            gbody, x, (rec2, params["attn_blocks"]), unroll=cfg.unroll)
+        new = {
             "rec_blocks": jax.tree.map(
                 lambda a: a.reshape((2 * n_groups,) + a.shape[2:]), nrec),
             "attn_blocks": nattn,
-            "pos": jnp.full((x.shape[0],), S, jnp.int32),
         }
         if tail:
-            x, ctail = _scan_blocks_emit(rec_fwd, x, params["tail_blocks"], unroll=cfg.unroll)
-            cache["tail_blocks"] = ctail
-        return x, cache
+            x, ctail = _scan_blocks_emit(rec_fwd, x, params["tail_blocks"],
+                                         unroll=cfg.unroll)
+            new["tail_blocks"] = ctail
+        return x, new
+
+    def _prefill_hybrid(self, params, x, freqs, S):
+        """Static-path hybrid prefill: the shared body, unmasked, with every
+        row at full length and the ring sized ``min(window, S)``."""
+        cfg = self.cfg
+        B = x.shape[0]
+        n_tail = jnp.full((B,), S, jnp.int32)
+
+        def conv_tail(u, width):
+            return u[:, S - width + 1:]
+
+        x, new = self._hybrid_prefill_body(params, x, mask=None,
+                                           conv_tail=conv_tail, n_tail=n_tail,
+                                           L_ring=min(cfg.attn_window, S))
+        return x, {**new, "pos": jnp.full((B,), S, jnp.int32)}
 
 
 def _scan_blocks(body, x, stacked_params, stacked_cache, unroll=False):

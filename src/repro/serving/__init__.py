@@ -59,13 +59,18 @@ or from the CLI::
     python -m repro.launch.serve --arch qwen2-0.5b --reduced \
         --engine continuous --requests 16 --mixed --verify
 
-Covered: dense / GQA / MQA and MoE decoder LMs.  Not yet paged: MLA's
-absorbed cache, sliding-window ring buffers, SSM/RG-LRU state, enc-dec
-cross-attention (the engine raises NotImplementedError for those).
+Covered: every registered non-DBN arch, through the cache-family taxonomy
+of ``models.cache_spec`` — token-addressable KV pages (dense / GQA / MQA /
+MoE), MLA absorbed-latent pages, sliding-window page rings (O(window) pages
+per request, recycled in place), SSM / RG-LRU state slots (one per request,
+checkpoint-on-preempt), and the enc-dec pinned cross cache.  The radix
+prefix cache is scoped to prefix-cacheable families (immutable
+token-addressable prompt pages: plain KV and MLA); elsewhere
+``prefix_cache=True`` logs a warning and serves uncached.
 """
 from __future__ import annotations
 
 from .engine import Engine, RequestResult, generate_static  # noqa: F401
-from .kv_pool import NULL_PAGE, PagedKVPool  # noqa: F401
+from .kv_pool import NULL_PAGE, PagedKVPool, StateSlotPool  # noqa: F401
 from .radix_cache import MatchResult, RadixCache  # noqa: F401
 from .scheduler import Admission, Request, Scheduler  # noqa: F401

@@ -9,15 +9,27 @@
     results = eng.collect()                # finished RequestResults
 
 plus ``run_offline(prompts)``, the batch driver used by ``launch/serve.py``
-and the throughput benchmark.  Prefill writes straight into the paged pool
-(``prefill_paged``): the request's pages are bound up front and the prompt —
-or, with the radix prefix cache enabled, only its uncached tail — is computed
-at a bucketed length and scattered token-granularly through the page table.
-The engine compiles exactly ``len(buckets) + 2`` programs: one tail prefill
-per length bucket, one fixed-shape ``[max_slots]`` paged decode step, and one
-page-copy (COW fork) kernel — traffic mix never triggers recompilation, and
-the jitted steps are cached per ``ArchConfig`` so every Engine instance (and
-test) reuses them.
+and the throughput benchmark.  The engine serves *every* registered cache
+family (see ``models.cache_spec``): token-addressable KV and MLA latent
+pages, sliding-window page rings, SSM/RG-LRU state slots, and the enc-dec
+pinned cross cache.  Prefill writes straight into the pools
+(``prefill_paged``): each admitted request's pages/slot are bound up front
+and the prompt — or, with the radix prefix cache enabled, only its uncached
+tail — is computed at a bucketed length; several same-bucket queued requests
+are admitted in one batched prefill call.  The engine compiles a bounded
+program set: one tail prefill per (length bucket, pow2 admission batch), one
+fixed-shape ``[max_slots]`` paged decode step, and one page-copy (COW fork)
+kernel — traffic mix never triggers recompilation, and the jitted steps are
+cached per ``ArchConfig`` so every Engine instance (and test) reuses them.
+
+Frontend inputs for enc-dec (audio frames) and vlm (image embeddings) archs
+are synthesized *per request id* (``fold_in(seed key, rid)``, fixed shapes),
+so the same request sees identical inputs no matter how it is batched — this
+is what makes ``--verify`` meaningful for those families.  The static
+baseline keys the same draw on *request index*, so an engine-vs-static
+comparison for those archs assumes a fresh Engine (rids 0..N-1, as every
+current caller uses); a reused engine's later runs continue the rid
+sequence and draw different frontend inputs.
 
 ``generate_static`` is the static-batching baseline kept for comparison and
 verification: contiguous per-request KV caches, the whole batch padded
@@ -28,16 +40,17 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig, ServeConfig
+from ..models.params import init_tree
 from ..models.registry import build_model, init_cache, init_params
 from ..models.steps import make_serve_step
-from .kv_pool import NULL_PAGE, PagedKVPool
+from .kv_pool import NULL_PAGE, PagedKVPool, StateSlotPool
 from .radix_cache import RadixCache
 from .scheduler import Admission, Request, Scheduler
 
@@ -99,38 +112,67 @@ def _copy_page_fn(kv, src, dst):
 @functools.lru_cache(maxsize=None)
 def _paged_steps(cfg: ArchConfig, mesh=None):
     """Jitted (prefill_paged, decode_paged, copy_page) steps, cached per
-    config so every Engine instance reuses compilations.  The pool argument
-    is donated in all three; callers always rebind ``pool.kv``."""
+    config so every Engine instance reuses compilations.  The kv and state
+    pool arguments are donated; callers always rebind them."""
     return (jax.jit(make_serve_step(cfg, mesh, "prefill_paged"),
-                    donate_argnums=(1,)),
+                    donate_argnums=(1, 2)),
             jax.jit(make_serve_step(cfg, mesh, "decode_paged"),
-                    donate_argnums=(1,)),
+                    donate_argnums=(1, 2)),
             jax.jit(_copy_page_fn, donate_argnums=(0,)))
 
 
+def _synthetic_frontend(cfg: ArchConfig, scfg: ServeConfig, seed: int,
+                        rid: int) -> Optional[np.ndarray]:
+    """Deterministic per-request frontend input (enc-dec frames / vlm image
+    embeddings) — a fixed shape drawn from ``fold_in(PRNGKey(seed), rid)`` so
+    every serving path (any batch shape, any engine) sees the same values."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), rid)
+    if cfg.enc_dec:
+        return np.asarray(jax.random.normal(
+            key, (scfg.enc_len, cfg.frontend_dim), jnp.bfloat16))
+    if cfg.n_image_tokens:
+        return np.asarray(jax.random.normal(
+            key, (cfg.n_image_tokens, cfg.frontend_dim), jnp.bfloat16))
+    return None
+
+
+def _pow2_pad(n: int, cap: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, cap)
+
+
 class Engine:
-    """Continuous-batching engine over a paged KV pool (attention families)."""
+    """Continuous-batching engine over paged + state-slot cache pools."""
 
     def __init__(self, cfg: ArchConfig, scfg: Optional[ServeConfig] = None,
                  params=None, *, mesh=None, seed: int = 0):
         self.cfg = cfg
         self.scfg = scfg or ServeConfig()
         self.model = build_model(cfg)
-        ok, why = self.model.supports_paged_decode()
-        if not ok:
-            raise NotImplementedError(f"Engine({cfg.name}): {why}")
-        if cfg.n_image_tokens:
-            raise NotImplementedError(
-                f"Engine({cfg.name}): image-conditioned prefill not wired up")
+        self.spec = self.model.cache_spec()
+        self.seed = seed
         self.params = init_params(cfg, jax.random.PRNGKey(seed)) \
             if params is None else params
         self.pool = PagedKVPool(cfg, self.scfg)
-        self.radix = RadixCache(self.pool, self.scfg.page_size,
-                                self.scfg.cache_eviction) \
-            if self.scfg.prefix_cache else None
-        self.sched = Scheduler(self.scfg, self.pool, self.radix)
+        self.states = StateSlotPool(cfg, self.scfg) \
+            if self.spec.state_slots else None
+        if self.scfg.prefix_cache and not self.spec.prefix_cacheable:
+            print(f"[engine] WARNING: prefix cache disabled for {cfg.name}: "
+                  f"cache family {self.spec.describe()} is not "
+                  f"token-addressable/immutable; serving uncached")
+            self.radix = None
+        else:
+            self.radix = RadixCache(self.pool, self.scfg.page_size,
+                                    self.scfg.cache_eviction) \
+                if self.scfg.prefix_cache else None
+        self.sched = Scheduler(self.scfg, self.pool, self.radix, self.states)
         self._next_rid = 0
         self._prefill, self._decode, self._copy = _paged_steps(cfg, mesh)
+        self._prefill_steps = 0
+        self._multi_admit_steps = 0
+        self._restores = 0
 
     # ----------------------------------------------------------- public API
 
@@ -151,12 +193,15 @@ class Engine:
         return rid
 
     def step(self) -> bool:
-        """Run one scheduler action (a prefill or a decode). False when idle."""
+        """Run one scheduler action (a prefill, restore, or decode). False
+        when idle."""
         action = self.sched.next_action()
         if action is None:
             return False
         if action[0] == "prefill":
             self._run_prefill(action[1])
+        elif action[0] == "restore":
+            self._run_restore(action[1])
         else:
             self._run_decode(action[1])
         return True
@@ -189,6 +234,9 @@ class Engine:
         wall = time.perf_counter() - t0
         results = sorted(self.collect(), key=lambda r: r.rid)
         metrics = _aggregate(results, wall)
+        metrics["prefill_steps"] = self._prefill_steps
+        metrics["multi_admit_prefills"] = self._multi_admit_steps
+        metrics["state_restores"] = self._restores
         if self.radix is not None:
             metrics["cache_pages"] = len(self.radix.cached_pages)
             metrics["cache_evictions"] = self.radix.evictions
@@ -196,47 +244,85 @@ class Engine:
 
     # -------------------------------------------------------------- prefill
 
-    def _bucket(self, n: int) -> int:
-        for b in self.scfg.buckets:
-            if b >= n:
-                return b
-        raise ValueError(f"prompt len {n} exceeds largest bucket "
-                         f"{self.scfg.buckets[-1]}")
+    def _extras(self, rids: List[int], B: int) -> Dict[str, Any]:
+        """Frontend inputs for a padded prefill batch ({} for text-only)."""
+        cfg = self.cfg
+        if not (cfg.enc_dec or cfg.n_image_tokens):
+            return {}
+        rows = [_synthetic_frontend(cfg, self.scfg, self.seed, r)
+                for r in rids]
+        n = (self.scfg.enc_len if cfg.enc_dec else cfg.n_image_tokens)
+        out = np.zeros((B, n, cfg.frontend_dim), rows[0].dtype)
+        for i, r in enumerate(rows):
+            out[i] = r
+        key = "frames" if cfg.enc_dec else "image_embeds"
+        return {key: jnp.asarray(out)}
 
-    def _run_prefill(self, adm: Admission) -> None:
-        """Execute an already-accounted admission: fork the COW page if the
-        cache match ended mid-page, then prefill the uncached tail straight
-        into the slot's pages."""
-        req = adm.req
-        if adm.cow_dst is not None:
-            self.pool.kv = self._copy(self.pool.kv,
-                                      jnp.asarray(adm.cow_src, jnp.int32),
-                                      jnp.asarray(adm.cow_dst, jnp.int32))
-        tail = req.prompt[adm.n_matched:]
-        bucket = self._bucket(len(tail))
-        toks = np.zeros((1, bucket), np.int32)
-        toks[0, :len(tail)] = tail
-        logits, self.pool.kv = self._prefill(
-            self.params, self.pool.kv, jnp.asarray(adm.table[None]),
-            jnp.asarray([adm.n_matched], jnp.int32),
-            jnp.asarray([len(tail)], jnp.int32), jnp.asarray(toks))
-        first = int(np.asarray(logits)[0].argmax())
+    def _run_prefill(self, adms: List[Admission]) -> None:
+        """Execute a batch of already-accounted admissions: fork COW pages if
+        a cache match ended mid-page, then prefill every uncached tail
+        straight into the bound pages / state slots in one call (the batch is
+        padded to a pow2 row count so the program set stays bounded)."""
+        for adm in adms:
+            if adm.cow_dst is not None:
+                self.pool.kv = self._copy(self.pool.kv,
+                                          jnp.asarray(adm.cow_src, jnp.int32),
+                                          jnp.asarray(adm.cow_dst, jnp.int32))
+        tails = [adm.req.prompt[adm.n_matched:] for adm in adms]
+        bucket = self.scfg.bucket_of(max(len(t) for t in tails))
+        B = _pow2_pad(len(adms), self.scfg.max_slots)
+        toks = np.zeros((B, bucket), np.int32)
+        start = np.zeros((B,), np.int32)
+        n_tail = np.zeros((B,), np.int32)
+        tables = np.full((B, max(self.pool.table_width, 1)), NULL_PAGE,
+                         np.int32)
+        slots = np.full((B,), self.scfg.max_slots, np.int32)  # pad rows: drop
+        for i, (adm, tail) in enumerate(zip(adms, tails)):
+            toks[i, :len(tail)] = tail
+            start[i] = adm.n_matched
+            n_tail[i] = len(tail)
+            tables[i] = adm.table
+            slots[i] = adm.slot_idx
+        state = self.states.state if self.states is not None else {}
+        extras = self._extras([adm.req.rid for adm in adms], B)
+        logits, self.pool.kv, state = self._prefill(
+            self.params, self.pool.kv, state, jnp.asarray(tables),
+            jnp.asarray(slots), jnp.asarray(start), jnp.asarray(n_tail),
+            jnp.asarray(toks), extras)
+        if self.states is not None:
+            self.states.state = state
+        logits = np.asarray(logits)
         now = time.perf_counter()
-        req.t_first = now
-        req.generated.append(first)
-        if self.radix is not None:
-            # publish the full prompt pages for reuse (they are immutable for
-            # the slot's lifetime: decode writes land strictly past them)
-            full = len(req.prompt) // self.scfg.page_size
-            if full:
-                self.radix.insert(req.prompt[:full * self.scfg.page_size],
-                                  adm.pages[:full])
-        self._maybe_retire(adm.slot_idx, now)
+        self._prefill_steps += 1
+        if len(adms) > 1:
+            self._multi_admit_steps += 1
+        for i, adm in enumerate(adms):
+            req = adm.req
+            req.t_first = now
+            req.generated.append(int(logits[i].argmax()))
+            if self.radix is not None:
+                # publish the full prompt pages for reuse (they are immutable
+                # for the slot's lifetime: decode writes land strictly past)
+                full = len(req.prompt) // self.scfg.page_size
+                if full:
+                    self.radix.insert(req.prompt[:full * self.scfg.page_size],
+                                      adm.pages[:full])
+            self._maybe_retire(adm.slot_idx, now)
+
+    def _run_restore(self, adm: Admission) -> None:
+        """Re-admit a checkpointed (preempted) request: write its state
+        snapshot back into the claimed slot and resume decoding where it
+        left off — no prompt replay (the scheduler already bound the slot at
+        the checkpointed position)."""
+        _, saved = adm.restore
+        self.states.restore(adm.slot_idx, saved)
+        self._restores += 1
 
     # --------------------------------------------------------------- decode
 
     def _run_decode(self, active: List[int]) -> None:
-        B, maxp = self.scfg.max_slots, self.scfg.pages_per_request
+        B = self.scfg.max_slots
+        maxp = max(self.pool.table_width, 1)
         tokens = np.zeros((B,), np.int32)
         pos = np.zeros((B,), np.int32)
         tables = np.full((B, maxp), NULL_PAGE, np.int32)
@@ -245,9 +331,12 @@ class Engine:
             tokens[i] = slot.req.generated[-1]
             pos[i] = slot.pos
             tables[i] = slot.table
-        nxt, self.pool.kv = self._decode(
-            self.params, self.pool.kv, jnp.asarray(tables), jnp.asarray(pos),
-            jnp.asarray(tokens))
+        state = self.states.state if self.states is not None else {}
+        nxt, self.pool.kv, state = self._decode(
+            self.params, self.pool.kv, state, jnp.asarray(tables),
+            jnp.asarray(pos), jnp.asarray(tokens))
+        if self.states is not None:
+            self.states.state = state
         nxt = np.asarray(nxt)
         now = time.perf_counter()
         for i in active:
@@ -292,21 +381,16 @@ def generate_static(cfg: ArchConfig, params, prompts: Sequence[Sequence[int]],
     recurrent state (ssm/hybrid) absorbs pad tokens: those families are only
     exact when every prompt in a batch has the same length, so they skip
     bucketing and pad to the batch max instead.  Enc-dec (audio) and vlm
-    archs get synthetic frontend inputs (random frames / image embeddings
-    derived from ``seed``), matching the pre-paging serve driver."""
+    archs get synthetic frontend inputs drawn per *request index*
+    (``fold_in(seed, i)``, fixed shapes) — the same inputs the continuous
+    engine synthesizes per rid, so the two paths are comparable."""
     scfg = scfg or ServeConfig()
     eos = scfg.eos_id if eos_id is None else eos_id
     budgets = ([max_new_tokens] * len(prompts)
                if isinstance(max_new_tokens, int) else list(max_new_tokens))
     prefill, decode = _static_steps(cfg, mesh)
-    key = jax.random.PRNGKey(seed)
+    model = build_model(cfg)
     n_img = cfg.n_image_tokens
-
-    def bucket_of(n: int) -> int:
-        for b in scfg.buckets:
-            if b >= n:
-                return b
-        raise ValueError(f"prompt len {n} exceeds largest bucket")
 
     all_tokens: List[Optional[List[int]]] = [None] * len(prompts)
     latencies: List[float] = [0.0] * len(prompts)
@@ -316,23 +400,31 @@ def generate_static(cfg: ArchConfig, params, prompts: Sequence[Sequence[int]],
         B = len(idxs)
         lens = [len(prompts[i]) for i in idxs]
         budget = [min(budgets[i], scfg.max_len - len(prompts[i])) for i in idxs]
-        bucket = (max(lens) if cfg.family in ("ssm", "hybrid")
-                  else bucket_of(max(lens)))
+        # recurrent state absorbs pad tokens and the sliding-window ring is
+        # filled from the final prompt positions: both need the prompt end to
+        # be the sequence end, so those families pad to the batch max instead
+        # of a bucket (exact at batch_size=1 / equal lengths)
+        bucket = (max(lens)
+                  if cfg.family in ("ssm", "hybrid") or cfg.sliding_window
+                  else scfg.bucket_of(max(lens)))
         toks = np.zeros((B, bucket), np.int32)
         for r, i in enumerate(idxs):
             toks[r, :lens[r]] = prompts[i]
         batch = {"tokens": jnp.asarray(toks)}
-        if cfg.enc_dec:
-            batch["frames"] = jax.random.normal(
-                key, (B, bucket, cfg.frontend_dim), jnp.bfloat16)
-        elif n_img:
-            batch["image_embeds"] = jax.random.normal(
-                key, (B, n_img, cfg.frontend_dim), jnp.bfloat16)
+        if cfg.enc_dec or n_img:
+            rows = [_synthetic_frontend(cfg, scfg, seed, i) for i in idxs]
+            key = "frames" if cfg.enc_dec else "image_embeds"
+            batch[key] = jnp.asarray(np.stack(rows))
         # vlm hidden sequence = image tokens ++ text tokens: offset positions
         last_idx = jnp.asarray([n_img + l - 1 for l in lens], jnp.int32)
         logits, cache = prefill(params, batch, last_idx)
         # grow the contiguous cache to max_len (the pre-paging zero-pad copy)
-        fresh = init_cache(cfg, B, n_img + scfg.max_len)
+        if cfg.enc_dec:
+            fresh = init_tree(
+                model.cache_defs(B, scfg.max_len, enc_len=scfg.enc_len),
+                jax.random.PRNGKey(0))
+        else:
+            fresh = init_cache(cfg, B, n_img + scfg.max_len)
         cache = jax.tree.map(
             lambda f, c: c if f.shape == c.shape else jnp.pad(
                 c, [(0, fs - cs) for fs, cs in zip(f.shape, c.shape)]),

@@ -1,11 +1,25 @@
-"""Paged KV cache pool: fixed-size pages, free-list allocation, refcounts.
+"""Paged cache pool + state-slot pool: the two allocators behind the engine.
+
+``PagedKVPool`` — fixed-size pages, free-list allocation, refcounts.
 
 The pool replaces the old ``pad_cache_to`` whole-cache zero-pad copy with
-vLLM/MaxText-style paging: KV for *all* live requests lives in one
-``[L, num_pages, page_size, K, D]`` pair of arrays, and each request owns an
-ordered list of physical pages recorded in an int32 page table.  Allocation
-and release are O(1) host-side free-list operations — admitting or retiring a
-request never touches the device arrays.
+vLLM/MaxText-style paging: the token-addressable cache for *all* live
+requests lives in one layer-stacked array set (K/V pages for attention
+families, latent pages for MLA), and each request owns an ordered list of
+physical pages recorded in an int32 page table.  Allocation and release are
+O(1) host-side free-list operations — admitting or retiring a request never
+touches the device arrays.
+
+The pool is *family-aware* via the model's ``cache_spec()``:
+
+* plain / MLA paged families: ``pages_for(n)`` is ``ceil(n / page_size)``;
+* sliding-window families: the table is a ring of ``horizon_pages`` entries
+  and ``pages_for`` caps there — a request holds O(window) pages no matter
+  how long it generates (aged-out pages are recycled in place);
+* vlm: every request carries ``prefix_tokens`` image positions before its
+  text, accounted into ``pages_for``;
+* pure state-slot families (SSM / RG-LRU hybrids): ``paged_defs`` is empty,
+  ``pages_for`` is 0, and all capacity lives in the ``StateSlotPool``.
 
 Ownership is *refcounted* so pages can be shared across owners: the radix
 prefix cache (``radix_cache``) holds one reference per cached page, and every
@@ -20,15 +34,28 @@ Physical page 0 is reserved as the *null page*: idle decode slots keep their
 table rows zeroed so their (discarded) writes land there, and page-table
 entries past a request's allocated region point at it harmlessly (attention
 masks positions > pos, so stale bytes are softmax-zero).
+
+``StateSlotPool`` — per-request fixed-size state, slot index == decode row.
+
+Recurrent families (SSM conv taps + SSD state, RG-LRU conv + hidden state,
+the hybrid local-attention ring) and the enc-dec pinned cross cache don't
+grow with generated length; they get exactly one *state slot* per live
+request, claimed at admission and released at retirement.  The slot lifetime
+contract is alloc -> checkpoint-on-preempt -> restore -> free: preempting a
+request snapshots its slot to host memory (``checkpoint``) so re-admission
+can ``restore`` it and resume decoding mid-stream instead of replaying the
+prompt.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Set
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig, ServeConfig
+from ..models.cache_spec import CacheFamilySpec, window_pages
 from ..models.params import init_tree
 from ..models.registry import build_model
 
@@ -36,17 +63,29 @@ NULL_PAGE = 0
 
 
 class PagedKVPool:
-    """Device KV pages + host-side page accounting for the serving engine."""
+    """Device cache pages + host-side page accounting for the serving engine."""
 
     def __init__(self, cfg: ArchConfig, scfg: ServeConfig):
         self.cfg = cfg
         self.scfg = scfg
         model = build_model(cfg)
-        defs = model.paged_cache_defs(scfg.total_pages, scfg.page_size)
+        self.spec: CacheFamilySpec = model.cache_spec()
+        ps = scfg.page_size
+        self.horizon_pages: Optional[int] = (
+            window_pages(self.spec.window, ps) if self.spec.window else None)
+        # widest table any request can need: full prompt+generation (plus the
+        # vlm image prefix), capped at the ring horizon for windowed families
+        raw = -(-(self.spec.prefix_tokens + scfg.max_len) // ps)
+        self.table_width: int = (
+            0 if not self.spec.paged
+            else min(raw, self.horizon_pages) if self.horizon_pages else raw)
+        self.total_pages: int = (
+            scfg.num_pages or scfg.max_slots * max(self.table_width, 1) + 1)
+        defs = model.paged_cache_defs(self.total_pages, ps)
         # zeros init: pages hold only finite values from day one, so masked
         # (zero-weight) reads of stale pages can never produce NaNs
         self.kv: Dict[str, jax.Array] = init_tree(defs, jax.random.PRNGKey(0))
-        self._free: List[int] = list(range(scfg.total_pages - 1, NULL_PAGE, -1))
+        self._free: List[int] = list(range(self.total_pages - 1, NULL_PAGE, -1))
         self._ref: Dict[int, int] = {}
 
     # ------------------------------------------------------------ accounting
@@ -68,8 +107,18 @@ class PagedKVPool:
         return self._ref.get(page, 0)
 
     def pages_needed(self, n_tokens: int) -> int:
+        """Raw page count for ``n_tokens`` contiguous positions."""
         ps = self.scfg.page_size
         return -(-n_tokens // ps)
+
+    def pages_for(self, n_prompt_tokens: int) -> int:
+        """Family-aware page budget for admitting a prompt: adds the vlm
+        image prefix, caps at the ring horizon for windowed families, and is
+        0 when the whole cache lives in state slots."""
+        if not self.spec.paged:
+            return 0
+        n = self.pages_needed(self.spec.prefix_tokens + n_prompt_tokens)
+        return min(n, self.horizon_pages) if self.horizon_pages else n
 
     def alloc(self, n: int) -> Optional[List[int]]:
         """Pop ``n`` pages from the free list; None (no partial grab) if short.
@@ -106,5 +155,59 @@ class PagedKVPool:
     # ------------------------------------------------------------ page tables
 
     def new_table(self) -> np.ndarray:
-        """An all-null page table row ([pages_per_request] int32)."""
-        return np.full((self.scfg.pages_per_request,), NULL_PAGE, np.int32)
+        """An all-null page table row ([table_width] int32)."""
+        return np.full((max(self.table_width, 1),), NULL_PAGE, np.int32)
+
+
+class StateSlotPool:
+    """Per-request fixed-size state slots, one per decode row.
+
+    The device state is one layer-stacked pytree whose slot axis is axis 1
+    and whose slot index equals the engine's decode-batch row, so the decode
+    step reads/writes it with no gather.  ``claim``/``release`` book-keep
+    which rows are live; ``checkpoint``/``restore`` implement the
+    preemption half of the slot lifetime contract (see module docstring)."""
+
+    def __init__(self, cfg: ArchConfig, scfg: ServeConfig):
+        self.cfg = cfg
+        self.scfg = scfg
+        model = build_model(cfg)
+        defs = model.state_slot_defs(scfg.max_slots, scfg.max_len,
+                                     enc_len=scfg.enc_len)
+        self.state: Any = init_tree(defs, jax.random.PRNGKey(0))
+        self.n_slots = scfg.max_slots
+        self._claimed: Set[int] = set()
+
+    # ------------------------------------------------------------ accounting
+
+    @property
+    def num_claimed(self) -> int:
+        return len(self._claimed)
+
+    @property
+    def claimed(self) -> Set[int]:
+        return set(self._claimed)
+
+    def claim(self, slot: int) -> None:
+        assert 0 <= slot < self.n_slots, slot
+        assert slot not in self._claimed, f"double claim of state slot {slot}"
+        self._claimed.add(slot)
+
+    def release(self, slot: int) -> None:
+        assert slot in self._claimed, f"release of unclaimed state slot {slot}"
+        self._claimed.remove(slot)
+
+    # ------------------------------------------------- checkpoint / restore
+
+    def checkpoint(self, slot: int) -> Any:
+        """Snapshot one slot's state to host memory (preemption)."""
+        assert slot in self._claimed, f"checkpoint of unclaimed slot {slot}"
+        return jax.tree.map(lambda a: np.asarray(a[:, slot]), self.state)
+
+    def restore(self, slot: int, saved: Any) -> None:
+        """Write a checkpointed snapshot back into (a possibly different)
+        claimed slot."""
+        assert slot in self._claimed, f"restore into unclaimed slot {slot}"
+        self.state = jax.tree.map(
+            lambda a, s: a.at[:, slot].set(jnp.asarray(s, a.dtype)),
+            self.state, saved)

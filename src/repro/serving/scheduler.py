@@ -2,38 +2,51 @@
 
 Policy (SGLang/Orca-style, simplified to a synchronous loop):
 
-* **Admission**: whenever a decode slot is free and the page pool can cover
-  the prompt, the oldest queued request is admitted via a single-request
-  bucketed tail prefill.  Prefill has priority over decode — keeping slots
-  full is what buys continuous batching its throughput.  With the radix
-  prefix cache enabled, admission first matches the prompt against the tree:
-  matched full pages are shared (refcount +1), a partially-matched page is
-  forked copy-on-write, and only the uncached tail is prefilled.  Admission
-  is **all-or-nothing**: every accounting step (dequeue, share, alloc, lock,
-  bind) happens only after capacity is proven, so a failed attempt mutates
-  nothing.
+* **Admission**: whenever a decode slot is free and the pools can cover the
+  prompt, queued requests are admitted via a bucketed tail prefill — and the
+  head of the queue is drained *in batch*: every consecutive queued request
+  whose tail lands in the same prefill bucket is admitted into the same
+  prefill call, up to the free slots (``try_admit_batch``).  Prefill has
+  priority over decode — keeping slots full is what buys continuous batching
+  its throughput.  With the radix prefix cache enabled, admission first
+  matches the prompt against the tree: matched full pages are shared
+  (refcount +1), a partially-matched page is forked copy-on-write, and only
+  the uncached tail is prefilled.  Admission is **all-or-nothing** per
+  request: every accounting step (dequeue, share, alloc, claim, lock, bind)
+  happens only after capacity is proven, so a failed attempt mutates nothing.
+* **Families**: the page budget is family-aware (``pool.pages_for``): plain
+  ceil for token-addressable KV/MLA pages, capped at the ring horizon for
+  sliding-window families (pages recycle in place once positions age out of
+  the window), zero for pure state-slot families.  State-slot families
+  (SSM / RG-LRU hybrids, the enc-dec cross cache) additionally claim one
+  ``StateSlotPool`` slot, whose index is the decode row.
 * **Decode**: otherwise every live slot advances one token in a single
   fixed-shape jitted step; idle slots ride along masked (their page-table
   rows point at the null page).
 * **Growth / eviction / preemption**: a slot crossing a page boundary gets a
-  fresh page from the free list; if the pool is exhausted, unlocked radix
-  nodes are LRU-evicted first, then the youngest slot is preempted — its
-  page references are released (shared pages survive via the tree) and the
-  request is requeued from scratch (greedy decode is deterministic, so the
-  replay reproduces its prefix — usually straight from the cache).
+  fresh page from the free list — unless it has reached the ring horizon, in
+  which case the table entry it is about to write already points at the page
+  that just aged out (recycling, no host work at all).  If the pool is
+  exhausted, unlocked radix nodes are LRU-evicted first, then the youngest
+  slot is preempted.  For checkpointable (pure state-slot) families
+  preemption snapshots the slot state to host memory and re-admission
+  *restores* it, resuming mid-generation; for paged families the request is
+  requeued from scratch (greedy decode is deterministic, so the replay
+  reproduces its prefix — usually straight from the cache).
 * **Retirement**: EOS or max-tokens retires the slot, releases its page
-  references and radix locks immediately, making room for the next admission.
+  references, state slot, and radix locks immediately, making room for the
+  next admission.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Optional, Tuple
+from typing import Any, Deque, List, Optional, Tuple
 
 import numpy as np
 
 from ..configs.base import ServeConfig
-from .kv_pool import PagedKVPool
+from .kv_pool import PagedKVPool, StateSlotPool
 from .radix_cache import RadixCache, RadixNode
 
 
@@ -49,6 +62,8 @@ class Request:
     generated: List[int] = dataclasses.field(default_factory=list)
     n_preemptions: int = 0
     cached_tokens: int = 0               # prompt tokens served from the cache
+    # checkpoint-on-preempt snapshot: (pos, host state pytree), or None
+    checkpoint: Optional[Tuple[int, Any]] = None
 
     @property
     def finished(self) -> bool:
@@ -60,7 +75,7 @@ class Slot:
     """A live request bound to a decode-batch row."""
     req: Request
     pos: int                              # next write position (= tokens cached)
-    table: np.ndarray                     # [pages_per_request] int32
+    table: np.ndarray                     # [table_width] int32
     pages: List[int]                      # referenced physical pages, in order
     admit_seq: int                        # admission order (preemption victim key)
     nodes: List[RadixNode] = dataclasses.field(default_factory=list)
@@ -70,7 +85,7 @@ class Slot:
 @dataclasses.dataclass
 class Admission:
     """An admission the scheduler has fully accounted; the engine only has to
-    run the device work (COW copy + tail prefill)."""
+    run the device work (COW copy + tail prefill, or a state restore)."""
     slot_idx: int
     req: Request
     n_matched: int                        # cached prompt tokens (incl. COW)
@@ -78,14 +93,17 @@ class Admission:
     cow_dst: Optional[int]                # exclusively-owned fork target
     table: np.ndarray                     # the bound slot's page table
     pages: List[int]                      # shared + exclusive pages, in order
+    restore: Optional[Tuple[int, Any]] = None   # checkpointed (pos, state)
 
 
 class Scheduler:
     def __init__(self, scfg: ServeConfig, pool: PagedKVPool,
-                 radix: Optional[RadixCache] = None):
+                 radix: Optional[RadixCache] = None,
+                 states: Optional[StateSlotPool] = None):
         self.scfg = scfg
         self.pool = pool
         self.radix = radix
+        self.states = states
         self.queue: Deque[Request] = deque()
         self.slots: List[Optional[Slot]] = [None] * scfg.max_slots
         self.finished: List[Request] = []
@@ -115,11 +133,14 @@ class Scheduler:
     # ------------------------------------------------------------ scheduling
 
     def next_action(self) -> Optional[Tuple]:
-        """('prefill', Admission) | ('decode', [slot_idx, ...]) | None."""
+        """('prefill', [Admission, ...]) | ('restore', Admission)
+        | ('decode', [slot_idx, ...]) | None."""
         if self.queue:
-            adm = self.try_admit()
-            if adm is not None:
-                return ("prefill", adm)
+            adms = self.try_admit_batch()
+            if adms:
+                if adms[0].restore is not None:
+                    return ("restore", adms[0])
+                return ("prefill", adms)
         active = self.active_slots()
         if active:
             self._grow_pages()
@@ -133,34 +154,91 @@ class Scheduler:
             # flush the tree's references and retry once before giving up.
             if self.radix is not None and self.radix.num_nodes:
                 self.radix.reset()
-                adm = self.try_admit()
-                if adm is not None:
-                    return ("prefill", adm)
+                adms = self.try_admit_batch()
+                if adms:
+                    return ("prefill", adms)
             raise RuntimeError(
                 f"scheduler deadlock: request {self.queue[0].rid} needs "
-                f"{self.pool.pages_needed(len(self.queue[0].prompt))} pages, "
+                f"{self.pool.pages_for(len(self.queue[0].prompt))} pages, "
                 f"pool has {self.pool.num_free} free and no live slots")
         return None
 
-    def try_admit(self) -> Optional[Admission]:
+    def try_admit_batch(self) -> List[Admission]:
+        """Drain the queue head into one prefill: consecutive requests whose
+        tails share a bucket are admitted together (each one individually
+        all-or-nothing).  A checkpointed request is admitted alone — its
+        action is a state restore, not a prefill.  With the prefix cache on,
+        a request whose prompt pages an *earlier admission in this batch* is
+        about to publish waits a step instead, so it re-matches as a cache
+        hit rather than prefilling the shared prefix redundantly."""
+        adms: List[Admission] = []
+        bucket: Optional[int] = None
+        ps = self.scfg.page_size
+        pending_keys: set = set()
+        while self.queue:
+            head = self.queue[0]
+            if head.checkpoint is not None:
+                if not adms:
+                    adm = self.try_admit()
+                    if adm is not None:
+                        adms.append(adm)
+                break
+            n_tail = len(head.prompt)
+            match = None
+            keys = set()
+            if self.radix is not None:
+                # one probe (clock-touches only) finds the tail bucket and is
+                # reused by try_admit below — nothing mutates in between
+                match = self.radix.match(head.prompt, len(head.prompt) - 1)
+                n_tail -= match.n_matched
+                # a radix node is its token *prefix*: key the pages this
+                # prompt would publish by their cumulative prefixes
+                keys = {tuple(head.prompt[:(j + 1) * ps])
+                        for j in range(len(head.prompt) // ps)}
+                if keys & pending_keys:
+                    break
+            b = self.scfg.bucket_of(n_tail)
+            if bucket is not None and b != bucket:
+                break
+            adm = self.try_admit(match)
+            if adm is None:
+                break
+            adms.append(adm)
+            bucket = b
+            pending_keys |= keys
+        return adms
+
+    def try_admit(self, match=None) -> Optional[Admission]:
         """Admit the oldest queued request if (and only if) every resource it
         needs is available; on failure nothing — queue, pool, tree — changes.
-        """
+        ``match`` is an optional precomputed ``radix.match`` result for the
+        head request (the batch loop's probe), reused to avoid a second
+        tree walk."""
         idx = self.free_slot()
         if idx is None or not self.queue:
             return None
         req = self.queue[0]
+        if req.checkpoint is not None:
+            # checkpointable families are page-free: a slot is all it needs
+            self.queue.popleft()
+            pos, _ = req.checkpoint
+            slot = self.bind(idx, req, [], pos=pos)
+            adm = Admission(slot_idx=idx, req=req, n_matched=0, cow_src=None,
+                            cow_dst=None, table=slot.table, pages=[],
+                            restore=req.checkpoint)
+            req.checkpoint = None
+            return adm
         n = len(req.prompt)
         nodes: List[RadixNode] = []
         shared: List[int] = []
         cow_src, cow_len, n_matched = None, 0, 0
         if self.radix is not None:
-            m = self.radix.match(req.prompt, n - 1)
+            m = match or self.radix.match(req.prompt, n - 1)
             nodes, shared = m.nodes, m.pages
             cow_src, cow_len, n_matched = m.cow_src, m.cow_len, m.n_matched
         # the last prompt token is always computed, so at least one page is
-        # never shared: need >= 1
-        need = self.pool.pages_needed(n) - len(shared)
+        # never shared: need >= 1 for paged families (0 for state-slot-only)
+        need = self.pool.pages_for(n) - len(shared)
         if self.pool.num_free < need:
             if self.radix is not None:
                 # pin the matched path so making room can't evict it; a
@@ -179,7 +257,8 @@ class Scheduler:
         if self.radix is not None:
             self.radix.lock(nodes)
         pages = shared + fresh
-        slot = self.bind(idx, req, pages, pos=n, nodes=nodes,
+        slot = self.bind(idx, req, pages,
+                         pos=self.pool.spec.prefix_tokens + n, nodes=nodes,
                          n_shared=len(shared))
         req.cached_tokens = n_matched
         return Admission(slot_idx=idx, req=req, n_matched=n_matched,
@@ -199,14 +278,19 @@ class Scheduler:
                     n_shared=n_shared)
         self._admit_seq += 1
         self.slots[slot_idx] = slot
+        if self.states is not None:
+            self.states.claim(slot_idx)
         return slot
 
     def _unbind(self, slot_idx: int) -> Slot:
-        """Release a slot's page references and radix locks (shared pages are
-        freed only when their last owner — usually the tree — lets go)."""
+        """Release a slot's page references, state slot, and radix locks
+        (shared pages are freed only when their last owner — usually the
+        tree — lets go)."""
         slot = self.slots[slot_idx]
         assert slot is not None
         self.pool.release(slot.pages)
+        if self.states is not None:
+            self.states.release(slot_idx)
         if self.radix is not None and slot.nodes:
             self.radix.unlock(slot.nodes)
         self.slots[slot_idx] = None
@@ -219,30 +303,49 @@ class Scheduler:
         return slot.req
 
     def preempt(self, slot_idx: int) -> Request:
-        """Release the slot's references and requeue its request for a clean
-        replay.  Only exclusively-owned pages actually return to the free
-        list; pages published to the radix cache stay resident, so the replay
-        typically re-admits as a cache hit."""
+        """Evict a live slot and requeue its request.
+
+        Checkpointable (pure state-slot) families snapshot the slot's state
+        to host memory first — re-admission restores it and decoding resumes
+        mid-generation, tokens intact.  Paged families release their page
+        references for a clean replay (only exclusively-owned pages actually
+        return to the free list; pages published to the radix cache stay
+        resident, so the replay typically re-admits as a cache hit)."""
+        checkpointable = (self.states is not None
+                          and self.pool.spec.checkpointable)
+        if checkpointable:
+            slot = self.slots[slot_idx]
+            assert slot is not None
+            slot.req.checkpoint = (slot.pos,
+                                   self.states.checkpoint(slot_idx))
         slot = self._unbind(slot_idx)
-        slot.req.generated.clear()
-        slot.req.t_first = None
-        slot.req.cached_tokens = 0
+        if not checkpointable:
+            slot.req.generated.clear()
+            slot.req.t_first = None
+            slot.req.cached_tokens = 0
         slot.req.n_preemptions += 1
         self.queue.appendleft(slot.req)
         return slot.req
 
     def _grow_pages(self) -> None:
         """Before a decode step, every live slot must own the page its next
-        write lands in.  When the pool runs dry, LRU-evict unlocked cache
-        nodes first, then preempt youngest-first."""
+        write lands in.  Ring-horizon slots recycle in place (their next
+        table entry already points at the page that aged out of the window).
+        When the pool runs dry, LRU-evict unlocked cache nodes first, then
+        preempt youngest-first."""
+        if not self.pool.spec.paged:
+            return                         # state-slot families never grow
         ps = self.scfg.page_size
+        cap = self.pool.table_width
         for i in sorted(self.active_slots(),
                         key=lambda i: self.slots[i].admit_seq):
             slot = self.slots[i]
             if slot is None:
                 continue
+            if len(slot.pages) >= cap:
+                continue                   # ring horizon: recycle in place
             if slot.pos % ps != 0 or slot.pos // ps < len(slot.pages):
-                continue                       # current page still has room
+                continue                   # current page still has room
             while True:
                 pages = self.pool.alloc(1)
                 if pages is not None:
