@@ -71,7 +71,7 @@ FAMILY_MATRIX = (
 
 
 def family_matrix(requests: int = 8, slots: int = 4, gen: int = 16,
-                  seed: int = 0):
+                  seed: int = 0, attn_backend: str = "auto"):
     """Continuous-vs-static throughput for one arch per cache family.
 
     Every family runs the same mixed-length workload; tokens are checked
@@ -94,7 +94,8 @@ def family_matrix(requests: int = 8, slots: int = 4, gen: int = 16,
         cfg = _dc.replace(reduced(get_arch(arch)), remat="none")
         ps = 8
         max_len = ((max(lens) + max(budgets) + ps - 1) // ps) * ps
-        scfg = ServeConfig(page_size=ps, max_slots=slots, max_len=max_len)
+        scfg = ServeConfig(page_size=ps, max_slots=slots, max_len=max_len,
+                           attn_backend=attn_backend)
         prompts = [rng.randint(1, cfg.vocab, size=n).tolist() for n in lens]
         eng = Engine(cfg, scfg, seed=seed)
         params = eng.params
@@ -119,6 +120,9 @@ def family_matrix(requests: int = 8, slots: int = 4, gen: int = 16,
                                      / max(static_m["tokens_per_s"], 1e-9)),
             "ttft_p50_s": cont_m["ttft_p50_s"],
             "multi_admit_prefills": cont_m["multi_admit_prefills"],
+            "attn_backend": cont_m["attn_backend"],
+            "decode_step_ms_p50": cont_m["decode_step_ms_p50"],
+            "decode_step_ms_p95": cont_m["decode_step_ms_p95"],
         }
         print(f"serve_throughput,family={family},arch={cfg.name},"
               f"cont_tok_s={cont_m['tokens_per_s']:.1f},"
@@ -131,14 +135,16 @@ def family_matrix(requests: int = 8, slots: int = 4, gen: int = 16,
 def run(arch: str = "qwen2-0.5b", requests: int = 16, slots: int = 4,
         families: int = 4, prefix_len: int = 24, suffix_lo: int = 4,
         suffix_hi: int = 24, gen_short: int = 4, gen_long: int = 128,
-        seed: int = 0, out: str = "BENCH_serve.json"):
+        seed: int = 0, out: str = "BENCH_serve.json",
+        attn_backend: str = "auto"):
     from repro.configs import ServeConfig, get_arch, reduced
     from repro.serving import Engine, generate_static
 
     cfg = dataclasses.replace(reduced(get_arch(arch)), remat="none")
     ps = 16
     max_len = ((prefix_len + suffix_hi + gen_long + ps - 1) // ps) * ps
-    scfg = ServeConfig(page_size=ps, max_slots=slots, max_len=max_len)
+    scfg = ServeConfig(page_size=ps, max_slots=slots, max_len=max_len,
+                       attn_backend=attn_backend)
     scfg_cache = dataclasses.replace(scfg, prefix_cache=True)
 
     prompts, budgets = make_workload(cfg.vocab, requests, families,
@@ -177,6 +183,11 @@ def run(arch: str = "qwen2-0.5b", requests: int = 16, slots: int = 4,
         "arch": cfg.name,
         "requests": requests,
         "concurrency": slots,
+        # resolved backend + decode-step percentiles also sit inside each
+        # engine metrics dict; top-level copy for easy trajectory diffing
+        "attn_backend": cont_m["attn_backend"],
+        "decode_step_ms_p50": cont_m["decode_step_ms_p50"],
+        "decode_step_ms_p95": cont_m["decode_step_ms_p95"],
         "prefix_families": families,
         "prefix_len": prefix_len,
         "prompt_lens": [len(p) for p in prompts],
@@ -191,7 +202,8 @@ def run(arch: str = "qwen2-0.5b", requests: int = 16, slots: int = 4,
             cont_m["prefill_tokens"] - cache_m["prefill_tokens"],
         "prefix_cache_ttft_p50_ratio":
             cache_m["ttft_p50_s"] / max(cont_m["ttft_p50_s"], 1e-9),
-        "cache_families": family_matrix(slots=slots, seed=seed),
+        "cache_families": family_matrix(slots=slots, seed=seed,
+                                        attn_backend=attn_backend),
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
     }
     path = os.path.join(os.path.dirname(os.path.dirname(
@@ -223,10 +235,14 @@ def main():
     ap.add_argument("--prefix-len", type=int, default=24)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--attn-backend",
+                    choices=("auto", "reference", "pallas"), default="auto",
+                    help="paged-attention backend for the continuous paths "
+                         "(recorded in BENCH_serve.json)")
     args = ap.parse_args()
     run(arch=args.arch, requests=args.requests, slots=args.slots,
         families=args.families, prefix_len=args.prefix_len,
-        seed=args.seed, out=args.out)
+        seed=args.seed, out=args.out, attn_backend=args.attn_backend)
 
 
 if __name__ == "__main__":

@@ -222,12 +222,17 @@ class ServeConfig:
     cache_eviction: str = "lru"  # lru | none (no eviction under pressure)
     enc_len: int = 16            # enc-dec: synthetic encoder frames per request
                                  # (fixed so results are batch-shape independent)
+    attn_backend: str = "auto"   # paged-attention backend (models.attn_backend
+                                 # registry): auto -> fused pallas kernel on
+                                 # TPU, XLA reference gather+attend elsewhere
 
     def __post_init__(self):
         assert self.page_size > 0 and self.max_slots > 0
         assert self.max_len % self.page_size == 0, \
             "max_len must be a multiple of page_size (page-table geometry)"
         assert self.cache_eviction in ("lru", "none"), self.cache_eviction
+        assert self.attn_backend in ("auto", "reference", "pallas"), \
+            self.attn_backend
 
     @property
     def pages_per_request(self) -> int:

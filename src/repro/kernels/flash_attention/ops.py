@@ -11,19 +11,15 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from .. import default_interpret
 from .kernel import flash_attention_fwd
-
-
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
 
 
 @partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
                     block_k: int = 128, interpret: bool = None):
     """q: [B, S, H, D]; k, v: [B, S, K, D] -> [B, S, H, D]."""
-    if interpret is None:
-        interpret = _on_cpu()
+    interpret = default_interpret(interpret)
     qt = jnp.swapaxes(q, 1, 2)
     kt = jnp.swapaxes(k, 1, 2)
     vt = jnp.swapaxes(v, 1, 2)

@@ -1,0 +1,9 @@
+"""Fused paged-attention decode kernels (Pallas TPU, interpret on CPU).
+
+The parity oracle is the ``reference`` attention backend
+(``repro.models.attn_backend``) — today's gather+attend XLA code — which the
+``pallas`` backend must match token-for-token under greedy decode.
+"""
+from .ops import mla_paged_attention_decode, paged_attention_decode
+
+__all__ = ["paged_attention_decode", "mla_paged_attention_decode"]

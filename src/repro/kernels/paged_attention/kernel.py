@@ -1,0 +1,231 @@
+"""Fused paged-attention decode — Pallas TPU kernels.
+
+One decode step reads every live token of a request's KV straight out of the
+paged pool: the per-request page table rides in as a *scalar-prefetch*
+operand, so the K/V BlockSpec index maps resolve ``tables[b, i]`` before the
+body runs and the pipeline DMAs exactly the physical pages the request owns —
+the ``pool[tables]`` gather that the XLA reference path materializes in HBM
+never exists here.  This is the TPU-native shape of vLLM/SGLang
+PagedAttention: walk the page table, attend in place.
+
+Two kernel bodies cover every paged decode family in ``models.cache_spec``:
+
+* ``_paged_decode_kernel`` — vanilla GQA (mask ``idx <= pos``) and
+  sliding-window page *rings* (``window > 0``: absolute positions are
+  recovered from the ring layout and masked to the window, exactly the
+  reference ring rule).  Grid ``(B, K, n_pages)``; the innermost dimension
+  sweeps the request's pages with online-softmax state (running max ``m``,
+  normalizer ``l``, accumulator ``acc``) in fp32 VMEM scratch.  GQA never
+  replicates KV: the q block is the ``G = H // K`` head group of one KV head.
+* ``_mla_paged_decode_kernel`` — DeepSeek-style absorbed-latent decode.
+  Scores are ``q_eff·ckv + q_rope·krope`` against the rank-``L`` latent pages
+  (one shared "KV head"); the context accumulator stays in latent space
+  (``acc += p·ckv``) so the kernel's output is the ``[H, L]`` context that the
+  caller up-projects with ``w_uv`` — per-head K/V are never materialized.
+
+Pages whose first token already lies past ``pos`` are skipped via ``pl.when``
+(a null-page read would be masked anyway, but skipping saves the DMA wait);
+fully-masked pages are absorbed by the -inf-guarded online-softmax update.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .. import tpu_compiler_params
+
+NEG_INF = float("-inf")
+
+
+def _online_softmax_update(s, v, m_scr, l_scr, acc_scr):
+    """Fold one masked score block ``s`` ([rows, ps]) and its values ``v``
+    ([ps, d]) into the running (m, l, acc) scratch state."""
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    # guard fully-masked rows (m_new == -inf)
+    safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - safe_m[:, None])
+    p = jnp.where(jnp.isfinite(m_new)[:, None], p, 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - safe_m), 0.0)
+    l_scr[...] = l_prev * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+
+def _finish(o_ref, m_scr, l_scr, acc_scr):
+    o_ref[0, 0] = (acc_scr[...]
+                   / jnp.maximum(l_scr[...], 1e-20)[:, None]).astype(o_ref.dtype)
+
+
+def _init(m_scr, l_scr, acc_scr):
+    m_scr[...] = jnp.full(m_scr.shape, NEG_INF, jnp.float32)
+    l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+    acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+
+def _page_mask(s, page_idx, pos, *, page_size, window, ring):
+    """Validity of the ``page_size`` token slots of page ``page_idx`` against
+    absolute position ``pos`` — the decode masking contract (see
+    kernels/README.md): causal ``idx <= pos`` when ``window == 0``, else the
+    ring rule recovering each slot's absolute position from the ring layout."""
+    idx = page_idx * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    if window == 0:
+        return idx <= pos
+    slot = pos % ring
+    k_abs = pos - ((slot - idx) % ring)
+    return (k_abs >= 0) & (k_abs <= pos) & (k_abs > pos - window)
+
+
+def _paged_decode_kernel(tables_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *, page_size: int,
+                         scale: float, softcap: float, window: int, ring: int):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _():
+        _init(m_scr, l_scr, acc_scr)
+
+    pos = pos_ref[b]
+    # vanilla: pages strictly past pos hold no valid token yet; ring: every
+    # resident page can hold in-window tokens, sweep them all
+    live = (i * page_size <= pos) if window == 0 else (i * page_size < ring)
+
+    @pl.when(live)
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32)                  # [G, D]
+        k = k_ref[0, :, 0].astype(jnp.float32)               # [ps, D]
+        v = v_ref[0, :, 0].astype(jnp.float32)               # [ps, D]
+        # scale after the dot, the reference ordering, so the two backends'
+        # fp32 scores round identically
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        valid = _page_mask(s, i, pos, page_size=page_size, window=window,
+                           ring=ring)
+        _online_softmax_update(jnp.where(valid, s, NEG_INF), v,
+                               m_scr, l_scr, acc_scr)
+
+    @pl.when(i == pl.num_programs(2) - 1)
+    def _():
+        _finish(o_ref, m_scr, l_scr, acc_scr)
+
+
+def paged_decode_fwd(q, k_pages, v_pages, tables, pos, *, scale: float,
+                     softcap: float = 0.0, window: int = 0,
+                     interpret: bool = False):
+    """q: [B, K, G, D]; k_pages/v_pages: [P, ps, K, D]; tables: [B, n_pages]
+    int32 physical page ids; pos: [B] int32 absolute positions.  Returns
+    [B, K, G, D].  ``window > 0`` treats the table as a page ring of
+    ``n_pages * ps`` token slots."""
+    B, K, G, D = q.shape
+    ps = k_pages.shape[1]
+    n_pages = tables.shape[1]
+    kernel = functools.partial(
+        _paged_decode_kernel, page_size=ps, scale=scale, softcap=softcap,
+        window=window, ring=n_pages * ps)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, K, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, kh, i, tr, pr: (b, kh, 0, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, kh, i, tr, pr: (tr[b, i], 0, kh, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, kh, i, tr, pr: (tr[b, i], 0, kh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, kh, i, tr, pr: (b, kh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(tables, pos, q, k_pages, v_pages)
+
+
+def _mla_paged_decode_kernel(tables_ref, pos_ref, q_eff_ref, q_rope_ref,
+                             ckv_ref, krope_ref, ctx_ref, m_scr, l_scr,
+                             acc_scr, *, page_size: int, scale: float):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _():
+        _init(m_scr, l_scr, acc_scr)
+
+    pos = pos_ref[b]
+
+    @pl.when(i * page_size <= pos)
+    def _():
+        qe = q_eff_ref[0].astype(jnp.float32)                # [H, L]
+        qr = q_rope_ref[0].astype(jnp.float32)               # [H, R]
+        ckv = ckv_ref[0].astype(jnp.float32)                 # [ps, L]
+        kr = krope_ref[0].astype(jnp.float32)                # [ps, R]
+        s = jax.lax.dot_general(qe, ckv, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s + jax.lax.dot_general(qr, kr, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        s = s * scale                                        # [H, ps]
+        valid = _page_mask(s, i, pos, page_size=page_size, window=0, ring=0)
+        # context accumulates in latent space: acc += p @ ckv  -> [H, L]
+        _online_softmax_update(jnp.where(valid, s, NEG_INF), ckv,
+                               m_scr, l_scr, acc_scr)
+
+    @pl.when(i == pl.num_programs(1) - 1)
+    def _():
+        ctx_ref[0] = (acc_scr[...]
+                      / jnp.maximum(l_scr[...], 1e-20)[:, None]).astype(
+                          ctx_ref.dtype)
+
+
+def mla_paged_decode_fwd(q_eff, q_rope, ckv_pages, krope_pages, tables, pos,
+                         *, scale: float, interpret: bool = False):
+    """q_eff: [B, H, L] (w_uk-absorbed queries); q_rope: [B, H, R];
+    ckv_pages: [P, ps, L]; krope_pages: [P, ps, R]; tables: [B, n_pages];
+    pos: [B].  Returns the latent context [B, H, L]."""
+    B, H, L = q_eff.shape
+    R = q_rope.shape[-1]
+    ps = ckv_pages.shape[1]
+    n_pages = tables.shape[1]
+    kernel = functools.partial(_mla_paged_decode_kernel, page_size=ps,
+                               scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, H, L), lambda b, i, tr, pr: (b, 0, 0)),
+            pl.BlockSpec((1, H, R), lambda b, i, tr, pr: (b, 0, 0)),
+            pl.BlockSpec((1, ps, L), lambda b, i, tr, pr: (tr[b, i], 0, 0)),
+            pl.BlockSpec((1, ps, R), lambda b, i, tr, pr: (tr[b, i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, L), lambda b, i, tr, pr: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H, L), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, L), q_eff.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(tables, pos, q_eff, q_rope, ckv_pages, krope_pages)

@@ -1,0 +1,56 @@
+"""Jit'd public wrappers for the fused paged-attention decode kernels.
+
+On CPU (this container, CI) the kernel bodies execute in interpret mode; on
+TPU the same ``pallas_call`` lowers to Mosaic.  The wrappers accept the
+model-layout tensors (``q: [B, H, D]``, pools ``[P, ps, K, D]`` /
+``[P, ps, L]``) and handle the kernel's grouped-query ``[B, K, G, D]``
+layout; see ``src/repro/kernels/README.md`` for the full backend contract
+(page-table layout, masking rules, null-page semantics).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .. import default_interpret
+from .kernel import mla_paged_decode_fwd, paged_decode_fwd
+
+
+@partial(jax.jit, static_argnames=("scale", "softcap", "window", "interpret"))
+def paged_attention_decode(q, k_pages, v_pages, tables, pos, *, scale: float,
+                           softcap: float = 0.0, window: int = 0,
+                           interpret: bool = None):
+    """One-token GQA decode against the paged KV pool.
+
+    q: [B, H, D] (the step's roped queries, new token already written to its
+    page); k_pages/v_pages: [P, ps, K, D] with H % K == 0; tables: [B,
+    n_pages] int32 physical page ids (a ring of ``n_pages`` pages when
+    ``window > 0``); pos: [B] int32 absolute positions.  Returns [B, H, D].
+    """
+    B, H, D = q.shape
+    K = k_pages.shape[2]
+    assert H % K == 0, (H, K)
+    qg = q.reshape(B, K, H // K, D)
+    o = paged_decode_fwd(qg, k_pages, v_pages,
+                         jnp.asarray(tables, jnp.int32),
+                         jnp.asarray(pos, jnp.int32), scale=scale,
+                         softcap=softcap, window=window,
+                         interpret=default_interpret(interpret))
+    return o.reshape(B, H, D)
+
+
+@partial(jax.jit, static_argnames=("scale", "interpret"))
+def mla_paged_attention_decode(q_eff, q_rope, ckv_pages, krope_pages, tables,
+                               pos, *, scale: float, interpret: bool = None):
+    """One-token absorbed-latent MLA decode against the latent pages.
+
+    q_eff: [B, H, L] (``w_uk``-absorbed queries); q_rope: [B, H, R] (roped);
+    ckv_pages: [P, ps, L]; krope_pages: [P, ps, R]; tables: [B, n_pages];
+    pos: [B].  Returns the latent context [B, H, L] — the caller up-projects
+    it with ``w_uv``."""
+    return mla_paged_decode_fwd(q_eff, q_rope, ckv_pages, krope_pages,
+                                jnp.asarray(tables, jnp.int32),
+                                jnp.asarray(pos, jnp.int32), scale=scale,
+                                interpret=default_interpret(interpret))

@@ -5,17 +5,13 @@ from functools import partial
 
 import jax
 
+from .. import default_interpret
 from .kernel import gemm_sigmoid_fwd
-
-
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
 
 
 @partial(jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret"))
 def gemm_sigmoid(x, w, b, *, block_m: int = 128, block_n: int = 128,
                  block_k: int = 128, interpret: bool = None):
-    if interpret is None:
-        interpret = _on_cpu()
     return gemm_sigmoid_fwd(x, w, b, block_m=block_m, block_n=block_n,
-                            block_k=block_k, interpret=interpret)
+                            block_k=block_k,
+                            interpret=default_interpret(interpret))

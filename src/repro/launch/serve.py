@@ -79,6 +79,12 @@ def main(argv=None):
                          "requests with common prompt prefixes")
     ap.add_argument("--cache-eviction", choices=("lru", "none"),
                     default="lru")
+    ap.add_argument("--attn-backend", choices=("auto", "reference", "pallas"),
+                    default="auto",
+                    help="paged-attention backend for the continuous engine: "
+                         "reference = XLA gather+attend, pallas = fused "
+                         "paged-attention decode kernel (interpret mode on "
+                         "CPU); auto picks pallas exactly on TPU")
     ap.add_argument("--max-len", type=int, default=0,
                     help="per-request length cap (0 -> fitted to workload)")
     ap.add_argument("--verify", action="store_true",
@@ -96,7 +102,8 @@ def main(argv=None):
     max_len = args.max_len or ((args.prompt_len + args.gen + ps - 1) // ps) * ps
     scfg = ServeConfig(page_size=ps, max_slots=slots, max_len=max_len,
                        prefix_cache=args.prefix_cache,
-                       cache_eviction=args.cache_eviction)
+                       cache_eviction=args.cache_eviction,
+                       attn_backend=args.attn_backend)
 
     prompts, budgets = make_prompts(args, cfg.vocab)
 
@@ -109,12 +116,17 @@ def main(argv=None):
     if engine == "static" and args.prefix_cache:
         print("[serve] WARNING: --prefix-cache only applies to the "
               "continuous engine; the static path serves without it")
+    if engine == "static" and args.attn_backend != "auto":
+        print("[serve] WARNING: --attn-backend only applies to the "
+              "continuous engine; the static path uses contiguous caches")
     if engine == "continuous":
         eng = Engine(cfg, scfg, seed=args.seed)   # init_params inside
         params = eng.params
         results, metrics = eng.run_offline(prompts, budgets)
         tokens = [r.tokens for r in results]
         ttft = [r.ttft for r in results]
+        print(f"[serve] attention backend: {metrics['attn_backend']} "
+              f"(decode step p50 {metrics['decode_step_ms_p50']:.1f} ms)")
         print(f"[serve] {cfg.name} continuous: {metrics['n_requests']} reqs, "
               f"{metrics['new_tokens']} toks in {metrics['wall_s']*1e3:.1f} ms "
               f"({metrics['tokens_per_s']:.1f} tok/s, "

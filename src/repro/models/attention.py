@@ -161,20 +161,116 @@ def paged_cache_defs(cfg: ArchConfig, num_pages: int, page_size: int):
     }
 
 
+# --------------------------------------------- shared paged-cache helpers
+#
+# One copy of the page-gather / write-targeting / masking arithmetic that the
+# vanilla, sliding-window, and MLA paged blocks used to hand-roll separately.
+# The reference attention backend (models.attn_backend) is built from these.
+
+def gather_pages(pages: jax.Array, tables: jax.Array) -> jax.Array:
+    """Materialize the logical per-request view of a paged pool.
+
+    pages: [P, ps, ...]; tables: [B, n] int32 physical page ids.  Returns
+    [B, n * ps, ...] — request b's pages concatenated in table order."""
+    B, n = tables.shape
+    return pages[tables].reshape((B, n * pages.shape[1]) + pages.shape[2:])
+
+
+def decode_valid_mask(pos: jax.Array, n: int, *, window: int = 0) -> jax.Array:
+    """[B, n] validity of a gathered view at one-token decode.
+
+    ``window == 0``: plain absolute-causal ``idx <= pos``.  ``window > 0``:
+    ``n`` is the ring length — each slot's absolute position is recovered
+    from the ring layout and masked to the window, the same rule as the
+    contiguous ring buffer of ``decode_attention_block``."""
+    idx = jnp.arange(n)
+    if not window:
+        return idx[None, :] <= pos[:, None]
+    k_abs = pos[:, None] - (((pos % n)[:, None] - idx[None, :]) % n)
+    return (k_abs >= 0) & (k_abs <= pos[:, None]) \
+        & (k_abs > pos[:, None] - window)
+
+
+def page_write_targets(tables, positions, live, page_size: int, *,
+                       ring_pages: int = 0):
+    """Physical (page, offset) write targets for [B, T] absolute positions
+    through the page table; positions with ``live == False`` are routed to
+    the reserved null page (physical page 0, a write sink) so they can never
+    clobber live entries.  ``ring_pages > 0`` wraps the table column into the
+    sliding-window page ring."""
+    B = tables.shape[0]
+    col = positions // page_size
+    if ring_pages:
+        col = col % ring_pages
+    page = tables[jnp.arange(B)[:, None], col]
+    return jnp.where(live, page, 0), positions % page_size
+
+
+def decode_qkv(cfg: ArchConfig, p, x, pos, freqs):
+    """Project + rope one decode token.  x: [B, d]; pos: [B].  Returns
+    (q [B, H, D], k [B, K, D], v [B, K, D])."""
+    x1 = x[:, None, :]
+    q = jnp.einsum("bsd,dhe->bshe", x1, p["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", x1, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", x1, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if freqs is not None:
+        q = apply_rope(q, pos[:, None], freqs)
+        k = apply_rope(k, pos[:, None], freqs)
+    return q[:, 0], k[:, 0], v[:, 0]
+
+
+def masked_token_attend(q, kg, vg, valid, *, scale: float,
+                        softcap: float = 0.0):
+    """The one-token GQA attend every reference decode path shares.
+
+    q: [B, H, D]; kg, vg: [B, S, K, D] (contiguous logical view); valid:
+    [B, S] bool.  fp32 scores, masked softmax, and an fp32
+    probability-weighted sum — the one rounding point is the cast back to
+    cache dtype at the block output, which is exactly where the fused Pallas
+    decode kernel rounds its fp32 accumulator, so the two backends agree to
+    an output ulp.  Returns [B, H, D]."""
+    B, H, D = q.shape
+    K = kg.shape[2]
+    qg = q.reshape(B, K, H // K, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, kg,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", a, vg,
+                   preferred_element_type=jnp.float32)
+    return o.astype(vg.dtype).reshape(B, H, D)
+
+
+# --------------------------------------------------- paged attention blocks
+#
+# Family framing shared by every backend: QKV + RoPE, page-table scatter,
+# output projection.  The attend itself is delegated to ``backend`` (see
+# models.attn_backend) — reference gather+attend or the fused Pallas kernel.
+
 def paged_prefill_attention_block(cfg: ArchConfig, p, x, cache, tables, start,
-                                  n_live, freqs, *, q_block=512, unroll=False):
+                                  n_live, freqs, backend, *, q_block=512,
+                                  unroll=False):
     """Multi-token prefill step against the paged KV pool, at an offset.
 
     x: [B, T, d] tail activations; cache: {"k","v": [P, ps, K, D]} one layer's
     pages; tables: [B, maxp] int32 logical->physical page map; start: [B]
     absolute position of x[:, 0]; n_live: [B] count of real (non-padding)
     tail tokens.  Row i's K/V lands at page ``tables[b, (start+i) // ps]``
-    offset ``(start+i) % ps``; padding rows (i >= n_live) are routed to the
-    reserved null page (physical page 0, a write sink) so they can never
-    clobber live entries.  Queries attend to the gathered pages with absolute
-    causal masking, so a cached prefix written by an earlier request is read
-    exactly as if this request had prefilled it itself.
-    Returns (out [B, T, d], new_cache)."""
+    offset ``(start+i) % ps``; padding rows are routed to the null page.
+
+    Vanilla layers attend to the gathered pages with absolute causal masking,
+    so a cached prefix written by an earlier request is read exactly as if
+    this request had prefilled it itself.  Sliding-window layers
+    (``cfg.sliding_window > 0``) write through the page *ring* instead —
+    position ``i`` lands at table slot ``(i // ps) % horizon``, positions
+    that would be overwritten inside this same prefill go to the null page so
+    the scatter never writes one (page, offset) twice — and attend to the
+    fresh K/V (windowed families are not prefix-cacheable, the whole prompt
+    is in ``x``).  Returns (out [B, T, d], new_cache)."""
     B, T, _ = x.shape
     ps = cache["k"].shape[1]
     q, k, v = qkv(cfg, p, x)
@@ -183,155 +279,56 @@ def paged_prefill_attention_block(cfg: ArchConfig, p, x, cache, tables, start,
         q = apply_rope(q, positions, freqs)
         k = apply_rope(k, positions, freqs)
     live = jnp.arange(T)[None, :] < n_live[:, None]                  # [B, T]
-    page = tables[jnp.arange(B)[:, None], positions // ps]
-    page = jnp.where(live, page, 0)                  # padding -> null page
-    off = positions % ps
+    window = cfg.sliding_window
+    if window:
+        from .cache_spec import window_pages
+        R = min(window_pages(window, ps), tables.shape[1])
+        live = live & (positions >= (start + n_live)[:, None] - R * ps)
+        page, off = page_write_targets(tables, positions, live, ps,
+                                       ring_pages=R)
+    else:
+        page, off = page_write_targets(tables, positions, live, ps)
     ck = cache["k"].at[page, off].set(k.astype(cache["k"].dtype))
     cv = cache["v"].at[page, off].set(v.astype(cache["v"].dtype))
-
-    kg = ck[tables].reshape(B, -1, cfg.n_kv_heads, cfg.head_dim_)
-    vg = cv[tables].reshape(B, -1, cfg.n_kv_heads, cfg.head_dim_)
-    o = chunked_attention(q, kg, vg, causal=True, q_block=q_block,
-                          softcap=cfg.attn_logit_softcap, q_offset=start,
-                          unroll=unroll)
+    if window:
+        kg, vg = k, v
+    else:
+        kg, vg = gather_pages(ck, tables), gather_pages(cv, tables)
+    o = backend.prefill_attend(q, kg, vg, causal=True, window=window,
+                               q_block=q_block,
+                               softcap=cfg.attn_logit_softcap,
+                               q_offset=start, unroll=unroll)
     return jnp.einsum("bshe,hed->bsd", o, p["wo"]), {"k": ck, "v": cv}
 
 
-def paged_windowed_prefill_attention_block(cfg: ArchConfig, p, x, cache,
-                                           tables, start, n_live, freqs, *,
-                                           q_block=512, unroll=False):
-    """Prefill for a sliding-window layer against the page *ring*.
-
-    Attention itself is computed from the fresh K/V (the whole prompt is in
-    ``x`` — windowed families are not prefix-cacheable, so ``start`` is
-    always 0 in practice and nothing needs to be read back from the pool);
-    only the cache writes go through the ring: position ``i`` lands at table
-    slot ``(i // ps) % horizon``, and positions that would later be
-    overwritten inside this same prefill (more than ``ring`` tokens before
-    the prompt end) are routed to the null page so the scatter never writes
-    one (page, offset) twice."""
-    from .cache_spec import window_pages
-    B, T, _ = x.shape
-    ps = cache["k"].shape[1]
-    ring = min(window_pages(cfg.sliding_window, ps), tables.shape[1]) * ps
-    q, k, v = qkv(cfg, p, x)
-    positions = start[:, None] + jnp.arange(T)[None, :]              # [B, T]
-    if freqs is not None:
-        q = apply_rope(q, positions, freqs)
-        k = apply_rope(k, positions, freqs)
-    n_total = start + n_live                                         # [B]
-    live = (jnp.arange(T)[None, :] < n_live[:, None]) \
-        & (positions >= n_total[:, None] - ring)
-    ring_slot = (positions // ps) % (ring // ps)
-    page = tables[jnp.arange(B)[:, None], ring_slot]
-    page = jnp.where(live, page, 0)                  # masked -> null page
-    off = positions % ps
-    ck = cache["k"].at[page, off].set(k.astype(cache["k"].dtype))
-    cv = cache["v"].at[page, off].set(v.astype(cache["v"].dtype))
-    o = chunked_attention(q, k, v, causal=True, window=cfg.sliding_window,
-                          q_block=q_block, softcap=cfg.attn_logit_softcap,
-                          q_offset=start, unroll=unroll)
-    return jnp.einsum("bshe,hed->bsd", o, p["wo"]), {"k": ck, "v": cv}
-
-
-def paged_windowed_decode_attention_block(cfg: ArchConfig, p, x, cache,
-                                          tables, pos, freqs):
-    """One-token decode for a sliding-window layer against the page ring.
-
-    The new K/V lands at ring slot ``(pos // ps) % horizon`` (recycling the
-    page that just aged out of the window); attention gathers the ring and
-    masks by *absolute* position recovered from the ring layout — exactly
-    the contiguous ring-buffer rule of ``decode_attention_block``, routed
-    through the page table."""
-    from .cache_spec import window_pages
-    B = x.shape[0]
-    ps = cache["k"].shape[1]
-    R = min(window_pages(cfg.sliding_window, ps), tables.shape[1])
-    ring = R * ps
-    x1 = x[:, None, :]
-    q = jnp.einsum("bsd,dhe->bshe", x1, p["wq"])
-    k = jnp.einsum("bsd,dhe->bshe", x1, p["wk"])
-    v = jnp.einsum("bsd,dhe->bshe", x1, p["wv"])
-    if "bq" in p:
-        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
-    if freqs is not None:
-        q = apply_rope(q, pos[:, None], freqs)
-        k = apply_rope(k, pos[:, None], freqs)
-    b = jnp.arange(B)
-    page = tables[b, (pos // ps) % R]
-    off = pos % ps
-    ck = cache["k"].at[page, off].set(k[:, 0].astype(cache["k"].dtype))
-    cv = cache["v"].at[page, off].set(v[:, 0].astype(cache["v"].dtype))
-
-    kg = ck[tables[:, :R]].reshape(B, -1, cfg.n_kv_heads, cfg.head_dim_)
-    vg = cv[tables[:, :R]].reshape(B, -1, cfg.n_kv_heads, cfg.head_dim_)
-
-    scale = 1.0 / math.sqrt(cfg.head_dim_)
-    K = cfg.n_kv_heads
-    G = cfg.n_heads_padded // K
-    qg = q[:, 0].reshape(B, K, G, cfg.head_dim_)
-    s = jnp.einsum("bkgd,bskd->bkgs", qg, kg,
-                   preferred_element_type=jnp.float32) * scale
-    if cfg.attn_logit_softcap:
-        s = cfg.attn_logit_softcap * jnp.tanh(s / cfg.attn_logit_softcap)
-    idx = jnp.arange(ring)
-    slot = pos % ring
-    k_abs = pos[:, None] - ((slot[:, None] - idx[None, :]) % ring)
-    valid = (k_abs >= 0) & (k_abs <= pos[:, None]) \
-        & (k_abs > pos[:, None] - cfg.sliding_window)
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
-    a = jax.nn.softmax(s, axis=-1).astype(vg.dtype)
-    o = jnp.einsum("bkgs,bskd->bkgd", a, vg).reshape(
-        B, cfg.n_heads_padded, cfg.head_dim_)
-    out = jnp.einsum("bhe,hed->bd", o, p["wo"])
-    return out, {"k": ck, "v": cv}
-
-
-def paged_decode_attention_block(cfg: ArchConfig, p, x, cache, tables, pos,
-                                 freqs):
+def paged_decode_attention_block(cfg: ArchConfig, p, x, cache, meta, freqs,
+                                 backend):
     """One-token decode step against the paged KV pool.
 
     x: [B, d] slot activations; cache: {"k","v": [P, ps, K, D]} (one layer's
-    pages, shared by all slots); tables: [B, maxp] int32 logical->physical page
-    map; pos: [B] absolute positions.  The new K/V lands at page
-    ``tables[b, pos // ps]`` offset ``pos % ps``; attention reads the gathered
-    pages with positions > pos masked, so stale data in partially-filled or
+    pages, shared by all slots); meta: the flat per-step metadata from
+    ``attn_backend.decode_meta`` — page-table rows, absolute positions, and
+    the precomputed physical (page, offset) write target of the new token
+    (ring-aware for sliding-window layers, recycling the page that just aged
+    out of the window).  The attend reads the pages through ``backend`` with
+    positions > pos masked (window layers: masked by absolute position
+    recovered from the ring layout), so stale data in partially-filled or
     recycled pages is softmax-zero.  Returns (out [B, d], new_cache)."""
-    B = x.shape[0]
     ps = cache["k"].shape[1]
-    x1 = x[:, None, :]
-    q = jnp.einsum("bsd,dhe->bshe", x1, p["wq"])
-    k = jnp.einsum("bsd,dhe->bshe", x1, p["wk"])
-    v = jnp.einsum("bsd,dhe->bshe", x1, p["wv"])
-    if "bq" in p:
-        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
-    if freqs is not None:
-        q = apply_rope(q, pos[:, None], freqs)
-        k = apply_rope(k, pos[:, None], freqs)
-    b = jnp.arange(B)
-    page = tables[b, pos // ps]                    # [B] physical pages
-    off = pos % ps
-    ck = cache["k"].at[page, off].set(k[:, 0].astype(cache["k"].dtype))
-    cv = cache["v"].at[page, off].set(v[:, 0].astype(cache["v"].dtype))
-
-    # gather each slot's pages into a contiguous [B, maxp*ps, K, D] view
-    kg = ck[tables].reshape(B, -1, cfg.n_kv_heads, cfg.head_dim_)
-    vg = cv[tables].reshape(B, -1, cfg.n_kv_heads, cfg.head_dim_)
-
-    scale = 1.0 / math.sqrt(cfg.head_dim_)
-    K = cfg.n_kv_heads
-    G = cfg.n_heads_padded // K
-    qg = q[:, 0].reshape(B, K, G, cfg.head_dim_)
-    s = jnp.einsum("bkgd,bskd->bkgs", qg, kg,
-                   preferred_element_type=jnp.float32) * scale
-    if cfg.attn_logit_softcap:
-        s = cfg.attn_logit_softcap * jnp.tanh(s / cfg.attn_logit_softcap)
-    idx = jnp.arange(kg.shape[1])
-    valid = idx[None, :] <= pos[:, None]
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
-    a = jax.nn.softmax(s, axis=-1).astype(vg.dtype)
-    o = jnp.einsum("bkgs,bskd->bkgd", a, vg).reshape(
-        B, cfg.n_heads_padded, cfg.head_dim_)
+    pos = meta["pos"]
+    q, k, v = decode_qkv(cfg, p, x, pos, freqs)
+    ck = cache["k"].at[meta["write_page"], meta["write_off"]].set(
+        k.astype(cache["k"].dtype))
+    cv = cache["v"].at[meta["write_page"], meta["write_off"]].set(
+        v.astype(cache["v"].dtype))
+    tables = meta["tables"]
+    window = cfg.sliding_window
+    if window:
+        from .cache_spec import window_pages
+        tables = tables[:, :min(window_pages(window, ps), tables.shape[1])]
+    o = backend.decode_attend(q, ck, cv, tables, pos,
+                              scale=1.0 / math.sqrt(cfg.head_dim_),
+                              softcap=cfg.attn_logit_softcap, window=window)
     out = jnp.einsum("bhe,hed->bd", o, p["wo"])
     return out, {"k": ck, "v": cv}
 
@@ -340,41 +337,17 @@ def decode_attention_block(cfg: ArchConfig, p, x, cache, pos, freqs, *, window=0
     """One-token decode step.  x: [B, d]; pos: [B] absolute positions; cache ring-
     buffered when window > 0.  Returns (out [B, d], new_cache)."""
     B = x.shape[0]
-    x1 = x[:, None, :]
-    q = jnp.einsum("bsd,dhe->bshe", x1, p["wq"])
-    k = jnp.einsum("bsd,dhe->bshe", x1, p["wk"])
-    v = jnp.einsum("bsd,dhe->bshe", x1, p["wv"])
-    if "bq" in p:
-        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
-    if freqs is not None:
-        q = apply_rope(q, pos[:, None], freqs)
-        k = apply_rope(k, pos[:, None], freqs)
+    q, k, v = decode_qkv(cfg, p, x, pos, freqs)
     L = cache["k"].shape[1]
     slot = (pos % L) if window else pos
     b = jnp.arange(B)
-    ck = cache["k"].at[b, slot].set(k[:, 0].astype(cache["k"].dtype))
-    cv = cache["v"].at[b, slot].set(v[:, 0].astype(cache["v"].dtype))
-
-    scale = 1.0 / math.sqrt(cfg.head_dim_)
-    K = cfg.n_kv_heads
-    G = cfg.n_heads_padded // K
-    qg = q[:, 0].reshape(B, K, G, cfg.head_dim_)
-    s = jnp.einsum("bkgd,bskd->bkgs", qg, ck, preferred_element_type=jnp.float32) * scale
-    if cfg.attn_logit_softcap:
-        s = cfg.attn_logit_softcap * jnp.tanh(s / cfg.attn_logit_softcap)
-    idx = jnp.arange(L)
-    if window:
-        # slot is valid if it has been written and is within the window
-        age = jnp.minimum(pos[:, None] + 1, L)
-        # ring: entries idx written at absolute position pos - ((slot - idx) mod L)
-        k_abs = pos[:, None] - ((slot[:, None] - idx[None, :]) % L)
-        valid = (k_abs >= 0) & (k_abs <= pos[:, None]) & (k_abs > pos[:, None] - L)
-        del age
-    else:
-        valid = idx[None, :] <= pos[:, None]
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
-    a = jax.nn.softmax(s, axis=-1).astype(cv.dtype)
-    o = jnp.einsum("bkgs,bskd->bkgd", a, cv).reshape(
-        B, cfg.n_heads_padded, cfg.head_dim_)
+    ck = cache["k"].at[b, slot].set(k.astype(cache["k"].dtype))
+    cv = cache["v"].at[b, slot].set(v.astype(cache["v"].dtype))
+    # the contiguous ring masks to its own length L (entries older than L are
+    # overwritten), matching the paged ring rule with ring == window == L
+    valid = decode_valid_mask(pos, L, window=L if window else 0)
+    o = masked_token_attend(q, ck, cv, valid,
+                            scale=1.0 / math.sqrt(cfg.head_dim_),
+                            softcap=cfg.attn_logit_softcap)
     out = jnp.einsum("bhe,hed->bd", o, p["wo"])
     return out, {"k": ck, "v": cv}

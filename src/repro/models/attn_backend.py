@@ -1,0 +1,211 @@
+"""Attention-backend registry: one dispatch point for every paged path.
+
+The serving hot loop is paged attention — prefill writes K/V (or MLA latent)
+through per-request page tables, decode reads every live token back per step.
+How that read happens is a *backend* choice, orthogonal to the cache family:
+
+* ``reference`` — the XLA gather+attend formulation (``pool[tables]``
+  materializes the logical view in HBM, then dense masked attention) — the
+  parity oracle every other backend is verified against.  Its decode attends
+  keep the probability-weighted sum in fp32 and round to cache dtype only at
+  the block output, the same single rounding point as the fused kernel's
+  fp32 accumulator, so backends agree to an output ulp and greedy decode
+  stays token-exact across them.
+* ``pallas`` — the fused ``repro.kernels.paged_attention`` decode kernel:
+  the page table rides into the kernel as a scalar-prefetch operand and the
+  BlockSpec index maps walk it directly, so the gather never materializes.
+  Prefill (and anything a backend does not override) falls back to the
+  reference implementation.
+
+A backend implements three *attend cores* — ``decode_attend`` (vanilla GQA +
+sliding-window rings), ``mla_decode_attend`` (absorbed-latent), and
+``prefill_attend`` (chunked multi-token) — while the family framing (QKV
+projection, RoPE, page-table scatter, output projection) is shared code in
+``models.attention`` / ``models.mla`` that every backend reuses.  Model code
+routes exclusively through ``backend.paged_prefill`` / ``backend.paged_decode``;
+future backends (GPU, ragged prefill, speculative verify) plug in by
+registering a class and overriding the cores they fuse.
+
+Selection is threaded from ``ServeConfig.attn_backend`` (``auto`` |
+``reference`` | ``pallas``) through ``launch/serve.py --attn-backend`` and the
+engine's jitted-step cache; ``auto`` picks the fused kernel exactly when jax
+has a TPU to compile it for.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from . import attention, mla
+from ..kernels.paged_attention import (mla_paged_attention_decode,
+                                       paged_attention_decode)
+
+# ---------------------------------------------------------------- registry
+
+_REGISTRY: Dict[str, "AttentionBackend"] = {}
+
+
+def register_backend(cls):
+    """Class decorator: instantiate and register under ``cls.name``."""
+    _REGISTRY[cls.name] = cls()
+    return cls
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_backend(name: str) -> str:
+    """Resolve a ``ServeConfig.attn_backend`` knob to a concrete backend name.
+
+    ``auto`` picks the fused kernel exactly when jax has a TPU to compile it
+    for; elsewhere the XLA reference path is faster than an interpreted
+    kernel (parity tests opt into interpret-mode pallas explicitly)."""
+    if name == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "reference"
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown attention backend {name!r}; "
+                         f"available: {available_backends()}")
+    if name == "pallas" and jax.default_backend() not in ("tpu", "cpu"):
+        # fail at config time with a clear message instead of deep inside a
+        # Mosaic lowering attempt (the kernels are TPU-targeted; CPU runs
+        # them in interpret mode, other backends have no lowering)
+        raise ValueError(
+            "attn_backend='pallas' requires a TPU (compiled) or CPU "
+            f"(interpret mode); jax backend is {jax.default_backend()!r}")
+    return name
+
+
+def get_backend(name: str) -> "AttentionBackend":
+    return _REGISTRY[resolve_backend(name)]
+
+
+# ----------------------------------------------------- flat decode metadata
+
+def decode_meta(cfg: ArchConfig, page_size: int, tables, pos):
+    """Flat per-step decode metadata, computed once instead of re-derived by
+    every layer's block inside the scan: the page-table rows, per-row
+    absolute positions, and the physical (page, offset) write target of the
+    step's new token — ring-aware for sliding-window families.  Works on
+    numpy (engine host path) and jnp (traced) arrays alike; values feed the
+    jitted ``decode_paged`` step as one pytree."""
+    B = tables.shape[0]
+    col = pos // page_size
+    if cfg.sliding_window:
+        from .cache_spec import window_pages
+        col = col % min(window_pages(cfg.sliding_window, page_size),
+                        tables.shape[1])
+    xp = jnp if isinstance(tables, jax.Array) else np
+    # live paged rows always have col < table width; the clamp covers rows
+    # whose table is a null placeholder (state-slot families, idle slots)
+    col = xp.minimum(col, tables.shape[1] - 1)
+    return {"tables": tables, "pos": pos,
+            "write_page": tables[xp.arange(B), col],
+            "write_off": pos % page_size}
+
+
+# ----------------------------------------------------------- backend classes
+
+class AttentionBackend:
+    """Family routing (shared) + attend cores (the extension point)."""
+
+    name = "abstract"
+
+    # -------- public entry points: the only paged-attention call sites
+
+    def paged_prefill(self, cfg: ArchConfig, p, x, cache, tables, start,
+                      n_live, freqs, *, q_block: int = 512,
+                      unroll: bool = False):
+        """Multi-token prefill at an offset into the paged pool.  Routes by
+        cache family (MLA latent / sliding-window ring / vanilla KV); returns
+        (out [B, T, d], new_cache)."""
+        if cfg.use_mla:
+            return mla.mla_paged_prefill_block(
+                cfg, p, x, cache, tables, start, n_live, freqs, backend=self,
+                q_block=q_block, unroll=unroll)
+        return attention.paged_prefill_attention_block(
+            cfg, p, x, cache, tables, start, n_live, freqs, backend=self,
+            q_block=q_block, unroll=unroll)
+
+    def paged_decode(self, cfg: ArchConfig, p, x, cache, meta, freqs):
+        """One-token decode against the paged pool.  ``meta`` is the flat
+        per-step metadata from ``decode_meta``; returns (out [B, d],
+        new_cache)."""
+        if cfg.use_mla:
+            return mla.mla_paged_decode_block(cfg, p, x, cache, meta, freqs,
+                                              backend=self)
+        return attention.paged_decode_attention_block(cfg, p, x, cache, meta,
+                                                      freqs, backend=self)
+
+    # -------- attend cores (override to fuse)
+
+    def decode_attend(self, q, k_pages, v_pages, tables, pos, *, scale: float,
+                      softcap: float = 0.0, window: int = 0):
+        """q: [B, H, D]; pools [P, ps, K, D]; tables [B, n] (ring when
+        ``window > 0``); pos [B].  Returns [B, H, D]."""
+        raise NotImplementedError
+
+    def mla_decode_attend(self, q_eff, q_rope, ckv_pages, krope_pages, tables,
+                          pos, *, scale: float):
+        """Absorbed-latent scores + latent context: q_eff [B, H, L] /
+        q_rope [B, H, R] against [P, ps, L] / [P, ps, R] pages.  Returns the
+        latent context [B, H, L]."""
+        raise NotImplementedError
+
+    def prefill_attend(self, q, k, v, *, causal: bool = True, window: int = 0,
+                       q_block: int = 512, softcap: float = 0.0, q_offset=0,
+                       unroll: bool = False):
+        """Multi-token attend for prefill.  Default: the chunked XLA
+        formulation (a fused ragged-prefill kernel is a future backend's
+        override)."""
+        return attention.chunked_attention(
+            q, k, v, causal=causal, window=window, q_block=q_block,
+            softcap=softcap, q_offset=q_offset, unroll=unroll)
+
+
+@register_backend
+class ReferenceBackend(AttentionBackend):
+    """Gather+attend via XLA — the parity oracle."""
+
+    name = "reference"
+
+    def decode_attend(self, q, k_pages, v_pages, tables, pos, *, scale: float,
+                      softcap: float = 0.0, window: int = 0):
+        kg = attention.gather_pages(k_pages, tables)
+        vg = attention.gather_pages(v_pages, tables)
+        valid = attention.decode_valid_mask(pos, kg.shape[1], window=window)
+        return attention.masked_token_attend(q, kg, vg, valid, scale=scale,
+                                             softcap=softcap)
+
+    def mla_decode_attend(self, q_eff, q_rope, ckv_pages, krope_pages, tables,
+                          pos, *, scale: float):
+        ccg = attention.gather_pages(ckv_pages, tables)
+        crg = attention.gather_pages(krope_pages, tables)
+        valid = attention.decode_valid_mask(pos, ccg.shape[1])
+        return mla.mla_latent_attend(q_eff, q_rope, ccg, crg, valid,
+                                     scale=scale)
+
+
+@register_backend
+class PallasBackend(ReferenceBackend):
+    """Fused paged-attention decode (``repro.kernels.paged_attention``);
+    interpret mode on CPU, Mosaic on TPU.  Prefill inherits the reference
+    cores."""
+
+    name = "pallas"
+
+    def decode_attend(self, q, k_pages, v_pages, tables, pos, *, scale: float,
+                      softcap: float = 0.0, window: int = 0):
+        return paged_attention_decode(q, k_pages, v_pages, tables, pos,
+                                      scale=scale, softcap=softcap,
+                                      window=window)
+
+    def mla_decode_attend(self, q_eff, q_rope, ckv_pages, krope_pages, tables,
+                          pos, *, scale: float):
+        return mla_paged_attention_decode(q_eff, q_rope, ckv_pages,
+                                          krope_pages, tables, pos,
+                                          scale=scale)

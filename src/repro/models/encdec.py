@@ -15,8 +15,8 @@ from ..configs.base import ArchConfig
 from . import shardings
 from .attention import (attn_defs, cache_defs, cross_attention_block,
                         decode_attention_block, full_attention_block,
-                        paged_cache_defs, paged_decode_attention_block,
-                        paged_prefill_attention_block, qkv)
+                        paged_cache_defs, qkv)
+from .attn_backend import get_backend
 from .cache_spec import CacheFamilySpec, CacheSpec
 from .layers import (apply_mlp, apply_norm, apply_rope, embed_defs, embed_tokens,
                      lm_logits, mlp_defs, norm_defs, rope_freqs)
@@ -27,8 +27,9 @@ ENC_LEN_DECODE = 4096   # encoder length assumed for standalone decode cells
 
 
 class EncDecLM:
-    def __init__(self, cfg: ArchConfig):
+    def __init__(self, cfg: ArchConfig, attn_backend: str = "reference"):
         self.cfg = cfg
+        self.attn_backend = get_backend(attn_backend)
 
     def cache_spec(self) -> CacheFamilySpec:
         """Paged decoder self-attention KV + a pinned per-request cross cache
@@ -256,10 +257,11 @@ class EncDecLM:
         o = o.reshape(o.shape[0], cfg.n_heads, cfg.head_dim_)
         return jnp.einsum("bhe,hed->bd", o, p["cross_attn"]["wo"])
 
-    def decode_paged(self, params, kv, state, tables, pos, tokens, mesh=None):
-        """One-token continuous-batching decode: paged self-attention + the
-        slot-pinned cross cache.  Returns (logits, new_kv, state) — the cross
-        cache is read-only here (written once at prefill)."""
+    def decode_paged(self, params, kv, state, meta, tokens, mesh=None):
+        """One-token continuous-batching decode: paged self-attention (via
+        the attention backend, ``meta`` per ``attn_backend.decode_meta``) +
+        the slot-pinned cross cache.  Returns (logits, new_kv, state) — the
+        cross cache is read-only here (written once at prefill)."""
         cfg = self.cfg
         freqs = rope_freqs(cfg, cfg.head_dim_)
         x = embed_tokens(params["embed"], tokens)
@@ -267,8 +269,8 @@ class EncDecLM:
         def body(x, pc):
             p, (cself, ccross) = pc
             h = apply_norm(cfg, p["ln1"], x)
-            a, c2 = paged_decode_attention_block(cfg, p["self_attn"], h, cself,
-                                                 tables, pos, freqs)
+            a, c2 = self.attn_backend.paged_decode(cfg, p["self_attn"], h,
+                                                   cself, meta, freqs)
             x = x + a
             hx = apply_norm(cfg, p["ln_x"], x)
             x = x + self._cross_decode(p, hx, ccross["k"], ccross["v"])
@@ -298,7 +300,7 @@ class EncDecLM:
         def body(x, pc):
             p, cself = pc
             h = apply_norm(cfg, p["ln1"], x)
-            a, c2 = paged_prefill_attention_block(
+            a, c2 = self.attn_backend.paged_prefill(
                 cfg, p["self_attn"], h, cself, tables, start, n_tail, freqs,
                 q_block=cfg.attn_q_block, unroll=cfg.unroll)
             x = x + a

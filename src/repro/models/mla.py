@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
-from .attention import NEG_INF, chunked_attention
+from .attention import (NEG_INF, chunked_attention, gather_pages,
+                        page_write_targets)
 from .layers import apply_rope, rmsnorm
 from .params import ParamDef
 
@@ -90,7 +91,8 @@ def mla_paged_cache_defs(cfg: ArchConfig, num_pages: int, page_size: int):
 
 
 def mla_paged_prefill_block(cfg: ArchConfig, p, x, cache, tables, start,
-                            n_live, freqs, *, q_block=512, unroll=False):
+                            n_live, freqs, backend, *, q_block=512,
+                            unroll=False):
     """Multi-token MLA prefill at an offset, straight into the latent pages.
 
     Mirrors ``paged_prefill_attention_block``: the tail's latent is written
@@ -98,7 +100,8 @@ def mla_paged_prefill_block(cfg: ArchConfig, p, x, cache, tables, start,
     then the *whole* logical sequence — cached prefix pages plus the fresh
     tail — is gathered and per-head K/V are materialized from it with
     ``wkv_b`` exactly as ``mla_full_block`` does, so a cached prefix is read
-    as if this request had prefilled it itself."""
+    as if this request had prefilled it itself.  The attend is delegated to
+    ``backend.prefill_attend``."""
     B, T, _ = x.shape
     ps = cache["ckv"].shape[1]
     nope, rope_d = cfg.nope_head_dim, cfg.rope_head_dim
@@ -113,31 +116,33 @@ def mla_paged_prefill_block(cfg: ArchConfig, p, x, cache, tables, start,
                        positions, freqs)[:, :, 0, :]
 
     live = jnp.arange(T)[None, :] < n_live[:, None]                  # [B, T]
-    page = tables[jnp.arange(B)[:, None], positions // ps]
-    page = jnp.where(live, page, 0)                  # padding -> null page
-    off = positions % ps
+    page, off = page_write_targets(tables, positions, live, ps)
     cc = cache["ckv"].at[page, off].set(ckv.astype(cache["ckv"].dtype))
     cr = cache["krope"].at[page, off].set(krope.astype(cache["krope"].dtype))
 
-    ccg = cc[tables].reshape(B, -1, cfg.kv_lora_rank)
-    crg = cr[tables].reshape(B, -1, rope_d)
+    ccg = gather_pages(cc, tables)
+    crg = gather_pages(cr, tables)
     kv = jnp.einsum("bsl,lhe->bshe", ccg, p["wkv_b"])
     k_nope, v = kv[..., :nope], kv[..., nope:]
     k = jnp.concatenate(
         [k_nope, jnp.broadcast_to(crg[:, :, None, :],
                                   k_nope.shape[:-1] + (rope_d,))], -1)
     qq = jnp.concatenate([q_nope, q_rope], -1)
-    o = chunked_attention(qq, k, v, causal=True, q_block=q_block,
-                          q_offset=start, unroll=unroll)
+    o = backend.prefill_attend(qq, k, v, causal=True, q_block=q_block,
+                               q_offset=start, unroll=unroll)
     return jnp.einsum("bshe,hed->bsd", o, p["wo"]), {"ckv": cc, "krope": cr}
 
 
-def mla_paged_decode_block(cfg: ArchConfig, p, x, cache, tables, pos, freqs):
+def mla_paged_decode_block(cfg: ArchConfig, p, x, cache, meta, freqs,
+                           backend):
     """Absorbed one-token decode against the latent pages (the paged twin of
-    ``mla_decode_block``)."""
+    ``mla_decode_block``).  ``meta`` is the flat per-step metadata from
+    ``attn_backend.decode_meta``; the latent-space attend (scores against
+    ckv/krope pages, context in rank-``kv_lora`` space) is delegated to
+    ``backend.mla_decode_attend``."""
     B = x.shape[0]
-    ps = cache["ckv"].shape[1]
     nope, rope_d = cfg.nope_head_dim, cfg.rope_head_dim
+    pos = meta["pos"]
     scale = 1.0 / math.sqrt(nope + rope_d)
 
     q = _queries(cfg, p, x[:, None, :])[:, 0]                      # [B,H,·]
@@ -149,29 +154,39 @@ def mla_paged_decode_block(cfg: ArchConfig, p, x, cache, tables, pos, freqs):
     kr_new = apply_rope(ckv_full[..., None, cfg.kv_lora_rank:][:, None],
                         pos[:, None], freqs)[:, 0, 0]
 
-    b = jnp.arange(B)
-    page = tables[b, pos // ps]
-    off = pos % ps
-    cc = cache["ckv"].at[page, off].set(ckv_new.astype(cache["ckv"].dtype))
-    cr = cache["krope"].at[page, off].set(kr_new.astype(cache["krope"].dtype))
+    cc = cache["ckv"].at[meta["write_page"], meta["write_off"]].set(
+        ckv_new.astype(cache["ckv"].dtype))
+    cr = cache["krope"].at[meta["write_page"], meta["write_off"]].set(
+        kr_new.astype(cache["krope"].dtype))
 
-    ccg = cc[tables].reshape(B, -1, cfg.kv_lora_rank)
-    crg = cr[tables].reshape(B, -1, rope_d)
     w_uk = p["wkv_b"][..., :nope]                                  # [L,H,nope]
     q_eff = jnp.einsum("bhn,lhn->bhl", q_nope, w_uk)
-    s = jnp.einsum("bhl,bsl->bhs", q_eff, ccg,
-                   preferred_element_type=jnp.float32)
-    s = s + jnp.einsum("bhr,bsr->bhs", q_rope, crg,
-                       preferred_element_type=jnp.float32)
-    s = s * scale
-    valid = jnp.arange(ccg.shape[1])[None, :] <= pos[:, None]
-    s = jnp.where(valid[:, None, :], s, NEG_INF)
-    a = jax.nn.softmax(s, axis=-1).astype(ccg.dtype)
-    ctx = jnp.einsum("bhs,bsl->bhl", a, ccg)
+    ctx = backend.mla_decode_attend(q_eff, q_rope, cc, cr, meta["tables"],
+                                    pos, scale=scale)
     w_uv = p["wkv_b"][..., nope:]                                  # [L, H, v]
     o = jnp.einsum("bhl,lhv->bhv", ctx, w_uv)
     out = jnp.einsum("bhv,hvd->bd", o, p["wo"])
     return out, {"ckv": cc, "krope": cr}
+
+
+def mla_latent_attend(q_eff, q_rope, cc, cr, valid, *, scale: float):
+    """The absorbed-latent attend every reference MLA decode path shares.
+
+    q_eff: [B, H, L] (``w_uk``-absorbed); q_rope: [B, H, R]; cc: [B, S, L];
+    cr: [B, S, R] (contiguous logical views); valid: [B, S] bool.  fp32
+    scores and fp32 probability-weighted context, rounded to cache dtype
+    only at the output — the same rounding point as the fused kernel.
+    Returns the latent context [B, H, L]."""
+    s = jnp.einsum("bhl,bsl->bhs", q_eff, cc,
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bhr,bsr->bhs", q_rope, cr,
+                       preferred_element_type=jnp.float32)
+    s = s * scale
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsl->bhl", a, cc,
+                     preferred_element_type=jnp.float32)
+    return ctx.astype(cc.dtype)
 
 
 def mla_decode_block(cfg: ArchConfig, p, x, cache, pos, freqs):
@@ -195,13 +210,8 @@ def mla_decode_block(cfg: ArchConfig, p, x, cache, pos, freqs):
     # absorb W_uk into q:  q_eff[b,h,l] = sum_n q_nope[b,h,n] wkv_b[l,h,n]
     w_uk = p["wkv_b"][..., :nope]                                  # [L, H, nope]
     q_eff = jnp.einsum("bhn,lhn->bhl", q_nope, w_uk)
-    s = jnp.einsum("bhl,bsl->bhs", q_eff, cc, preferred_element_type=jnp.float32)
-    s = s + jnp.einsum("bhr,bsr->bhs", q_rope, cr, preferred_element_type=jnp.float32)
-    s = s * scale
     valid = jnp.arange(cc.shape[1])[None, :] <= pos[:, None]
-    s = jnp.where(valid[:, None, :], s, NEG_INF)
-    a = jax.nn.softmax(s, axis=-1).astype(cc.dtype)
-    ctx = jnp.einsum("bhs,bsl->bhl", a, cc)
+    ctx = mla_latent_attend(q_eff, q_rope, cc, cr, valid, scale=scale)
     w_uv = p["wkv_b"][..., nope:]                                  # [L, H, v]
     o = jnp.einsum("bhl,lhv->bhv", ctx, w_uv)
     out = jnp.einsum("bhv,hvd->bd", o, p["wo"])

@@ -14,10 +14,12 @@ from .params import ParamDef, abstract_tree, init_tree, specs_tree
 from .transformer import DecoderLM
 
 
-def build_model(cfg: ArchConfig):
+def build_model(cfg: ArchConfig, attn_backend: str = "reference"):
+    """Model for ``cfg``; ``attn_backend`` picks the paged-attention backend
+    (``models.attn_backend`` registry) the serving paths route through."""
     if cfg.enc_dec:
-        return EncDecLM(cfg)
-    return DecoderLM(cfg)
+        return EncDecLM(cfg, attn_backend)
+    return DecoderLM(cfg, attn_backend)
 
 
 def input_defs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, ParamDef]:

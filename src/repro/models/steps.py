@@ -106,22 +106,29 @@ def abstract_train_args(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
 
 # ------------------------------------------------------------- serve steps
 
-def make_serve_step(cfg: ArchConfig, mesh: Optional[Mesh], kind: str):
+def make_serve_step(cfg: ArchConfig, mesh: Optional[Mesh], kind: str,
+                    attn_backend: str = "reference"):
     """kind='decode': step(params, cache, tokens) -> (next_tokens, cache)
        kind='prefill': step(params, batch) -> (logits, cache)
        kind='prefill_at': step(params, batch, last_idx) -> (logits, cache)
          (logits read at per-row position ``last_idx`` — bucketed prompts)
-       kind='decode_paged': step(params, kv, state, tables, pos, tokens)
+       kind='decode_paged': step(params, kv, state, meta, tokens)
          -> (next_tokens, new_kv, new_state) — slot-indexed continuous-
          batching decode against the paged pool and/or state-slot pool
-         (see repro.serving; {} stands in for an absent pool).
+         (see repro.serving; {} stands in for an absent pool).  ``meta`` is
+         the flat per-step metadata pytree from ``attn_backend.decode_meta``
+         (page-table rows, positions, precomputed write targets).
        kind='prefill_paged': step(params, kv, state, tables, slots, start,
          n_tail, tokens, extras) -> (logits, new_kv, new_state) — batched
          tail prefill at offset ``start`` straight into the pools; positions
          < start are read from already-resident pages (radix prefix cache
          hits), recurrent/cross state is scattered into rows ``slots``, and
-         ``extras`` carries frontend inputs (frames / image_embeds)."""
-    model = build_model(cfg)
+         ``extras`` carries frontend inputs (frames / image_embeds).
+
+       ``attn_backend`` selects the paged-attention backend the paged kinds
+       route through (``reference`` gather+attend | ``pallas`` fused decode
+       kernel)."""
+    model = build_model(cfg, attn_backend)
     if kind == "decode":
         def step(params, cache, tokens):
             logits, cache = model.decode(params, cache, tokens, mesh)
@@ -129,9 +136,9 @@ def make_serve_step(cfg: ArchConfig, mesh: Optional[Mesh], kind: str):
             return nxt, cache
         return step
     if kind == "decode_paged":
-        def step(params, kv, state, tables, pos, tokens):
-            logits, kv, state = model.decode_paged(params, kv, state, tables,
-                                                   pos, tokens, mesh)
+        def step(params, kv, state, meta, tokens):
+            logits, kv, state = model.decode_paged(params, kv, state, meta,
+                                                   tokens, mesh)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             return nxt, kv, state
         return step

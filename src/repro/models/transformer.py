@@ -17,17 +17,13 @@ import jax.numpy as jnp
 from ..configs.base import ArchConfig
 from . import shardings
 from .attention import (attn_defs, cache_defs, decode_attention_block,
-                        full_attention_block, paged_cache_defs,
-                        paged_decode_attention_block,
-                        paged_prefill_attention_block,
-                        paged_windowed_decode_attention_block,
-                        paged_windowed_prefill_attention_block)
+                        full_attention_block, paged_cache_defs)
+from .attn_backend import get_backend
 from .cache_spec import CacheFamilySpec, CacheSpec
 from .layers import (apply_mlp, apply_norm, embed_defs, embed_tokens, lm_logits,
                      mlp_defs, norm_defs, rope_freqs)
 from .mla import (mla_cache_defs, mla_decode_block, mla_defs, mla_full_block,
-                  mla_paged_cache_defs, mla_paged_decode_block,
-                  mla_paged_prefill_block)
+                  mla_paged_cache_defs)
 from .moe import moe_apply, moe_decode_apply, moe_defs
 from .params import ParamDef, stack_tree
 from .rglru import (rglru_block, rglru_cache_defs, rglru_decode_block, rglru_defs)
@@ -44,10 +40,16 @@ def _remat(fn, policy: str):
 
 
 class DecoderLM:
-    """Functional model: all state lives in explicit params/cache pytrees."""
+    """Functional model: all state lives in explicit params/cache pytrees.
 
-    def __init__(self, cfg: ArchConfig):
+    ``attn_backend`` selects how the paged serving paths attend (see
+    ``models.attn_backend``): the XLA ``reference`` gather+attend or the
+    fused ``pallas`` decode kernel.  Training / static paths are unaffected.
+    """
+
+    def __init__(self, cfg: ArchConfig, attn_backend: str = "reference"):
         self.cfg = cfg
+        self.attn_backend = get_backend(attn_backend)
 
     # ------------------------------------------------------------ param defs
 
@@ -563,44 +565,32 @@ class DecoderLM:
         defs.pop("pos")
         return defs
 
-    # ----- paged attention-block dispatch (one line per cache family) -----
+    # ----- paged attention dispatch (everything routes via the backend) -----
 
-    def _paged_attn_decode(self, p, h, c, tables, pos, freqs):
-        cfg = self.cfg
-        if cfg.use_mla:
-            return mla_paged_decode_block(cfg, p["attn"], h, c, tables, pos,
-                                          freqs)
-        if cfg.sliding_window:
-            return paged_windowed_decode_attention_block(
-                cfg, p["attn"], h, c, tables, pos, freqs)
-        return paged_decode_attention_block(cfg, p["attn"], h, c, tables, pos,
-                                            freqs)
+    def _paged_attn_decode(self, p, h, c, meta, freqs):
+        return self.attn_backend.paged_decode(self.cfg, p["attn"], h, c, meta,
+                                              freqs)
 
     def _paged_attn_prefill(self, p, h, c, tables, start, n_live, freqs):
         cfg = self.cfg
-        if cfg.use_mla:
-            return mla_paged_prefill_block(
-                cfg, p["attn"], h, c, tables, start, n_live, freqs,
-                q_block=cfg.attn_q_block, unroll=cfg.unroll)
-        if cfg.sliding_window:
-            return paged_windowed_prefill_attention_block(
-                cfg, p["attn"], h, c, tables, start, n_live, freqs,
-                q_block=cfg.attn_q_block, unroll=cfg.unroll)
-        return paged_prefill_attention_block(
+        return self.attn_backend.paged_prefill(
             cfg, p["attn"], h, c, tables, start, n_live, freqs,
             q_block=cfg.attn_q_block, unroll=cfg.unroll)
 
-    def decode_paged(self, params, kv, state, tables, pos, tokens, mesh=None):
+    def decode_paged(self, params, kv, state, meta, tokens, mesh=None):
         """One-token continuous-batching decode step.
 
         kv: layer-stacked paged pool ({} for state-slot families); state:
         layer-stacked per-slot recurrent state ({} for paged families),
-        slot i == batch row i; tables: [B, maxp] int32 per-slot page tables;
-        pos: [B] int32 absolute positions; tokens: [B] int32.  Returns
-        (logits [B, V], new_kv, new_state).  Idle rows ride along masked:
-        their table rows point at the reserved null page and their state rows
-        are overwritten at the next admission's prefill."""
+        slot i == batch row i; meta: flat per-step metadata from
+        ``attn_backend.decode_meta`` — per-slot page-table rows, [B] int32
+        absolute positions, and the new token's precomputed physical write
+        target, derived once by the engine instead of per block; tokens: [B]
+        int32.  Returns (logits [B, V], new_kv, new_state).  Idle rows ride
+        along masked: their table rows point at the reserved null page and
+        their state rows are overwritten at the next admission's prefill."""
         cfg = self.cfg
+        pos = meta["pos"]
         if cfg.family in ("ssm", "hybrid"):
             cache = dict(state)
             cache["pos"] = pos
@@ -612,14 +602,14 @@ class DecoderLM:
 
         def dense_step(x, p, c):
             h = apply_norm(cfg, p["ln1"], x)
-            a, c2 = self._paged_attn_decode(p, h, c, tables, pos, freqs)
+            a, c2 = self._paged_attn_decode(p, h, c, meta, freqs)
             x = x + a
             x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x))
             return x, c2
 
         def moe_step(x, p, c):
             h = apply_norm(cfg, p["ln1"], x)
-            a, c2 = self._paged_attn_decode(p, h, c, tables, pos, freqs)
+            a, c2 = self._paged_attn_decode(p, h, c, meta, freqs)
             x = x + a
             x = x + moe_decode_apply(cfg, p["moe"], apply_norm(cfg, p["ln2"], x),
                                      mesh=mesh)

@@ -40,10 +40,11 @@ story, built from the three standard pieces of a modern LLM-serving stack:
     batch padded together, slowest member gates the batch) kept for
     verification and benchmark comparison.
 
-Model-side support lives in ``models.attention.paged_decode_attention_block``
-(slot-indexed paged reads/writes) and ``models.transformer.DecoderLM
-.decode_paged``; knobs (page size, slot count, length caps, buckets, EOS) in
-``configs.base.ServeConfig``.
+Model-side support lives behind the attention-backend registry
+(``models.attn_backend``: XLA ``reference`` gather+attend or the fused
+``pallas`` paged-attention decode kernel) reached via
+``models.transformer.DecoderLM.decode_paged``; knobs (page size, slot count,
+length caps, buckets, EOS, ``attn_backend``) in ``configs.base.ServeConfig``.
 
 Quick start::
 

@@ -20,7 +20,12 @@ are admitted in one batched prefill call.  The engine compiles a bounded
 program set: one tail prefill per (length bucket, pow2 admission batch), one
 fixed-shape ``[max_slots]`` paged decode step, and one page-copy (COW fork)
 kernel — traffic mix never triggers recompilation, and the jitted steps are
-cached per ``ArchConfig`` so every Engine instance (and test) reuses them.
+cached per (``ArchConfig``, attention backend) so every Engine instance (and
+test) reuses them.  The decode step's paged attention routes through the
+backend registry (``ServeConfig.attn_backend``: ``auto|reference|pallas``,
+see ``models.attn_backend``), and the engine hands it flat per-step metadata
+— page-table rows, positions, and the new token's physical write target,
+derived once on the host per step instead of per layer.
 
 Frontend inputs for enc-dec (audio frames) and vlm (image embeddings) archs
 are synthesized *per request id* (``fold_in(seed key, rid)``, fixed shapes),
@@ -47,6 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig, ServeConfig
+from ..models.attn_backend import decode_meta, resolve_backend
 from ..models.params import init_tree
 from ..models.registry import build_model, init_cache, init_params
 from ..models.steps import make_serve_step
@@ -110,13 +116,14 @@ def _copy_page_fn(kv, src, dst):
 
 
 @functools.lru_cache(maxsize=None)
-def _paged_steps(cfg: ArchConfig, mesh=None):
+def _paged_steps(cfg: ArchConfig, mesh=None, attn_backend: str = "reference"):
     """Jitted (prefill_paged, decode_paged, copy_page) steps, cached per
-    config so every Engine instance reuses compilations.  The kv and state
-    pool arguments are donated; callers always rebind them."""
-    return (jax.jit(make_serve_step(cfg, mesh, "prefill_paged"),
+    (config, attention backend) so every Engine instance reuses
+    compilations.  The kv and state pool arguments are donated; callers
+    always rebind them."""
+    return (jax.jit(make_serve_step(cfg, mesh, "prefill_paged", attn_backend),
                     donate_argnums=(1, 2)),
-            jax.jit(make_serve_step(cfg, mesh, "decode_paged"),
+            jax.jit(make_serve_step(cfg, mesh, "decode_paged", attn_backend),
                     donate_argnums=(1, 2)),
             jax.jit(_copy_page_fn, donate_argnums=(0,)))
 
@@ -169,10 +176,13 @@ class Engine:
                 if self.scfg.prefix_cache else None
         self.sched = Scheduler(self.scfg, self.pool, self.radix, self.states)
         self._next_rid = 0
-        self._prefill, self._decode, self._copy = _paged_steps(cfg, mesh)
+        self.attn_backend = resolve_backend(self.scfg.attn_backend)
+        self._prefill, self._decode, self._copy = _paged_steps(
+            cfg, mesh, self.attn_backend)
         self._prefill_steps = 0
         self._multi_admit_steps = 0
         self._restores = 0
+        self._decode_times: List[float] = []
 
     # ----------------------------------------------------------- public API
 
@@ -237,6 +247,12 @@ class Engine:
         metrics["prefill_steps"] = self._prefill_steps
         metrics["multi_admit_prefills"] = self._multi_admit_steps
         metrics["state_restores"] = self._restores
+        # decode hot-loop visibility: which attention backend served this run
+        # and how long one fixed-shape decode step takes (percentiles)
+        metrics["attn_backend"] = self.attn_backend
+        metrics["decode_steps"] = len(self._decode_times)
+        metrics["decode_step_ms_p50"] = _percentile(self._decode_times, 50) * 1e3
+        metrics["decode_step_ms_p95"] = _percentile(self._decode_times, 95) * 1e3
         if self.radix is not None:
             metrics["cache_pages"] = len(self.radix.cached_pages)
             metrics["cache_evictions"] = self.radix.evictions
@@ -332,13 +348,18 @@ class Engine:
             pos[i] = slot.pos
             tables[i] = slot.table
         state = self.states.state if self.states is not None else {}
+        # flat per-step metadata, derived once on the host (numpy) instead of
+        # re-derived by every layer's block inside the scanned decode step
+        meta = {k: jnp.asarray(v) for k, v in decode_meta(
+            self.cfg, self.scfg.page_size, tables, pos).items()}
+        t0 = time.perf_counter()
         nxt, self.pool.kv, state = self._decode(
-            self.params, self.pool.kv, state, jnp.asarray(tables),
-            jnp.asarray(pos), jnp.asarray(tokens))
+            self.params, self.pool.kv, state, meta, jnp.asarray(tokens))
         if self.states is not None:
             self.states.state = state
         nxt = np.asarray(nxt)
         now = time.perf_counter()
+        self._decode_times.append(now - t0)
         for i in active:
             slot = self.sched.slots[i]
             slot.pos += 1
