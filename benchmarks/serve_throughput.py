@@ -27,8 +27,16 @@ A second section (``cache_families``) serves one reduced arch per cache
 family — paged KV, MLA latent pages, sliding-window page ring, SSM and
 RG-LRU state slots, enc-dec pinned cross cache — through the same
 continuous-vs-static comparison, reporting per-family tokens/s and TTFT
-(exact-match checked against the single-request baseline).  Emits
-BENCH_serve.json.
+(exact-match checked against the single-request baseline).
+
+A third section (``chunked_prefill``) runs the head-of-line adversarial mix
+— one 2048-token prompt arriving behind live short decodes plus a queue of
+shorts — with and without ``prefill_chunk_tokens``, reporting short-request
+``ttft_p50/p95``, per-engine ``decode_stall_ms`` percentiles, and prefill
+padding waste (``prefill_padded_tokens`` vs ``prefill_actual_tokens``).
+
+Emits BENCH_serve.json and appends a one-line summary to
+BENCH_history.jsonl (the perf trajectory across runs).
 
   PYTHONPATH=src python -m benchmarks.serve_throughput [--requests 16]
 """
@@ -57,6 +65,106 @@ def make_workload(vocab: int, requests: int, families: int, prefix_len: int,
     budgets = [gen_long if i % slots == slots - 1 else gen_short
                for i in range(requests)]
     return prompts, budgets
+
+
+def adversarial_mix(arch: str = "qwen2-0.5b", slots: int = 4,
+                    long_len: int = 2048, n_short: int = 15, gen: int = 4,
+                    chunk: int = 256, seed: int = 0,
+                    attn_backend: str = "auto"):
+    """Head-of-line adversarial mix: one ``long_len``-token prompt arriving
+    behind the first admission wave of short prompts, plus more shorts
+    queued behind it.  The unchunked engine stalls every decoding short for
+    the long prompt's whole monolithic prefill and makes the queued shorts
+    wait it out; chunked prefill (``prefill_chunk_tokens``) bounds each
+    stall at one chunk.  Reports short-request ttft percentiles and
+    decode-stall times for both engine configs (exact-token checked against
+    each other and the static single-request baseline) — the chunking win
+    the ISSUE acceptance bar reads off this section is
+    ``ttft_short_p50_ratio >= 2``."""
+    import dataclasses as _dc
+
+    from repro.configs import ServeConfig, get_arch, reduced
+    from repro.serving import Engine, generate_static
+
+    cfg = _dc.replace(reduced(get_arch(arch)), remat="none")
+    rng = np.random.RandomState(seed)
+    ps = 16
+    max_len = ((long_len + gen + ps - 1) // ps) * ps
+    prompts = [rng.randint(1, cfg.vocab,
+                           size=int(rng.randint(8, 25))).tolist()
+               for _ in range(n_short)]
+    long_prompt = rng.randint(1, cfg.vocab, size=long_len).tolist()
+    # long prompt arrives after the first admission wave fills the slots, so
+    # its prefill competes with live decodes (the stall being measured)
+    prompts.insert(slots - 1, long_prompt)
+    budgets = [gen] * len(prompts)
+    short_rids = [i for i, p in enumerate(prompts) if len(p) < long_len]
+
+    base = ServeConfig(page_size=ps, max_slots=slots, max_len=max_len,
+                       attn_backend=attn_backend)
+    chunked = dataclasses.replace(base, prefill_chunk_tokens=chunk)
+    eng = Engine(cfg, base, seed=seed)
+    params = eng.params
+    # warm every jit shape both configs use before the timed runs
+    eng.run_offline(prompts, budgets)
+    Engine(cfg, chunked, params).run_offline(prompts, budgets)
+
+    res_mono, m_mono = Engine(cfg, base, params).run_offline(prompts, budgets)
+    res_chnk, m_chnk = Engine(cfg, chunked, params).run_offline(prompts,
+                                                               budgets)
+    ref, _ = generate_static(cfg, params, prompts, budgets, base,
+                             batch_size=1)
+    match = ([r.tokens for r in res_mono] == ref
+             and [r.tokens for r in res_chnk] == ref)
+
+    def short_ttft(results, q):
+        return float(np.percentile(
+            [r.ttft for r in results if r.rid in short_rids], q))
+
+    out = {
+        "arch": cfg.name,
+        "long_len": long_len,
+        "n_short": n_short,
+        "prefill_chunk_tokens": chunk,
+        "tokens_match_static": match,
+        "monolithic": {
+            "ttft_short_p50_s": short_ttft(res_mono, 50),
+            "ttft_short_p95_s": short_ttft(res_mono, 95),
+            "decode_stall_ms_p50": m_mono["decode_stall_ms_p50"],
+            "decode_stall_ms_p95": m_mono["decode_stall_ms_p95"],
+            "decode_stall_ms_max": m_mono["decode_stall_ms_max"],
+            "prefill_padded_tokens": m_mono["prefill_padded_tokens"],
+            "prefill_actual_tokens": m_mono["prefill_actual_tokens"],
+            "prefill_padding_waste": m_mono["prefill_padding_waste"],
+            "tokens_per_s": m_mono["tokens_per_s"],
+        },
+        "chunked": {
+            "ttft_short_p50_s": short_ttft(res_chnk, 50),
+            "ttft_short_p95_s": short_ttft(res_chnk, 95),
+            "decode_stall_ms_p50": m_chnk["decode_stall_ms_p50"],
+            "decode_stall_ms_p95": m_chnk["decode_stall_ms_p95"],
+            "decode_stall_ms_max": m_chnk["decode_stall_ms_max"],
+            "chunked_prefill_steps": m_chnk["chunked_prefill_steps"],
+            "prefill_padded_tokens": m_chnk["prefill_padded_tokens"],
+            "prefill_actual_tokens": m_chnk["prefill_actual_tokens"],
+            "prefill_padding_waste": m_chnk["prefill_padding_waste"],
+            "tokens_per_s": m_chnk["tokens_per_s"],
+        },
+    }
+    out["ttft_short_p50_ratio"] = (
+        out["monolithic"]["ttft_short_p50_s"]
+        / max(out["chunked"]["ttft_short_p50_s"], 1e-9))
+    out["decode_stall_max_ratio"] = (
+        out["monolithic"]["decode_stall_ms_max"]
+        / max(out["chunked"]["decode_stall_ms_max"], 1e-9))
+    print(f"serve_throughput,adversarial,long={long_len},chunk={chunk},"
+          f"ttft_short_p50_ms="
+          f"{out['monolithic']['ttft_short_p50_s']*1e3:.1f}"
+          f"->{out['chunked']['ttft_short_p50_s']*1e3:.1f}"
+          f" (x{out['ttft_short_p50_ratio']:.1f}),"
+          f"stall_max_ms={out['monolithic']['decode_stall_ms_max']:.1f}"
+          f"->{out['chunked']['decode_stall_ms_max']:.1f},match={match}")
+    return out
 
 
 # one reduced arch per cache family (see src/repro/models/cache_spec.py)
@@ -136,7 +244,8 @@ def run(arch: str = "qwen2-0.5b", requests: int = 16, slots: int = 4,
         families: int = 4, prefix_len: int = 24, suffix_lo: int = 4,
         suffix_hi: int = 24, gen_short: int = 4, gen_long: int = 128,
         seed: int = 0, out: str = "BENCH_serve.json",
-        attn_backend: str = "auto"):
+        attn_backend: str = "auto", chunk: int = 256,
+        adversarial_long: int = 2048):
     from repro.configs import ServeConfig, get_arch, reduced
     from repro.serving import Engine, generate_static
 
@@ -204,12 +313,33 @@ def run(arch: str = "qwen2-0.5b", requests: int = 16, slots: int = 4,
             cache_m["ttft_p50_s"] / max(cont_m["ttft_p50_s"], 1e-9),
         "cache_families": family_matrix(slots=slots, seed=seed,
                                         attn_backend=attn_backend),
+        "chunked_prefill": adversarial_mix(
+            arch=arch, slots=slots, long_len=adversarial_long, chunk=chunk,
+            seed=seed, attn_backend=attn_backend),
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
     }
     path = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), out) if not os.path.isabs(out) else out
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
+    # append-style perf trajectory: one summary line per benchmark run, so
+    # regressions show as a series instead of a silent overwrite
+    adv = payload["chunked_prefill"]
+    with open(os.path.join(os.path.dirname(path), "BENCH_history.jsonl"),
+              "a") as f:
+        f.write(json.dumps({
+            "timestamp": payload["timestamp"],
+            "arch": payload["arch"],
+            "attn_backend": payload["attn_backend"],
+            "tokens_per_s_static": static_m["tokens_per_s"],
+            "tokens_per_s_continuous": cont_m["tokens_per_s"],
+            "tokens_per_s_prefix_cache": cache_m["tokens_per_s"],
+            "decode_step_ms_p50": cont_m["decode_step_ms_p50"],
+            "prefill_padding_waste": cont_m["prefill_padding_waste"],
+            "adversarial_ttft_short_p50_ratio": adv["ttft_short_p50_ratio"],
+            "adversarial_stall_max_ratio": adv["decode_stall_max_ratio"],
+            "tokens_match": bool(match and adv["tokens_match_static"]),
+        }) + "\n")
     print(f"serve_throughput,arch={cfg.name},requests={requests},"
           f"concurrency={slots},families={families},"
           f"static_tok_s={static_m['tokens_per_s']:.1f},"
@@ -239,10 +369,16 @@ def main():
                     choices=("auto", "reference", "pallas"), default="auto",
                     help="paged-attention backend for the continuous paths "
                          "(recorded in BENCH_serve.json)")
+    ap.add_argument("--prefill-chunk-tokens", type=int, default=256,
+                    help="chunk budget for the adversarial long+short mix")
+    ap.add_argument("--adversarial-long", type=int, default=2048,
+                    help="long-prompt length for the adversarial mix")
     args = ap.parse_args()
     run(arch=args.arch, requests=args.requests, slots=args.slots,
         families=args.families, prefix_len=args.prefix_len,
-        seed=args.seed, out=args.out, attn_backend=args.attn_backend)
+        seed=args.seed, out=args.out, attn_backend=args.attn_backend,
+        chunk=args.prefill_chunk_tokens,
+        adversarial_long=args.adversarial_long)
 
 
 if __name__ == "__main__":

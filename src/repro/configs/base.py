@@ -225,6 +225,11 @@ class ServeConfig:
     attn_backend: str = "auto"   # paged-attention backend (models.attn_backend
                                  # registry): auto -> fused pallas kernel on
                                  # TPU, XLA reference gather+attend elsewhere
+    prefill_chunk_tokens: int = 0  # per-step prefill token budget: 0 = one
+                                 # monolithic (bucketed) prefill per admission;
+                                 # > 0 = long prompts split into page-aligned
+                                 # chunks of at most this many tokens that
+                                 # interleave with decode steps (Sarathi-style)
 
     def __post_init__(self):
         assert self.page_size > 0 and self.max_slots > 0
@@ -233,6 +238,21 @@ class ServeConfig:
         assert self.cache_eviction in ("lru", "none"), self.cache_eviction
         assert self.attn_backend in ("auto", "reference", "pallas"), \
             self.attn_backend
+        assert self.prefill_chunk_tokens >= 0, self.prefill_chunk_tokens
+
+    @property
+    def chunk_tokens(self) -> int:
+        """Effective page-aligned per-step prefill budget (0 = chunking off).
+
+        An unaligned ``prefill_chunk_tokens`` is rounded down to a whole
+        number of pages, never below one page — chunk boundaries always land
+        on page boundaries so the radix cache can publish completed pages
+        mid-prefill."""
+        if not self.prefill_chunk_tokens:
+            return 0
+        return max(self.page_size,
+                   (self.prefill_chunk_tokens // self.page_size)
+                   * self.page_size)
 
     @property
     def pages_per_request(self) -> int:

@@ -4,7 +4,7 @@
 """Shared Pallas-TPU helpers (version compat + interpret-mode fallback).
 
 Every kernel package in this tree (``flash_attention``, ``rbm_cd``,
-``paged_attention``) follows the same shape: ``kernel.py`` holds the
+``paged_attention``, ``ragged_prefill``) follows the same shape: ``kernel.py`` holds the
 ``pallas_call`` body, ``ops.py`` the jit'd public wrapper.  The wrappers
 share one backend rule, hosted here: on CPU (this container, CI) the kernel
 body executes in Pallas interpret mode — bit-accurate to the TPU lowering's

@@ -1,0 +1,5 @@
+"""Fused ragged paged-prefill kernels (vanilla GQA, sliding-window ring,
+MLA materialized-K) — the ``pallas`` attention backend's prefill cores."""
+from .ops import mla_ragged_prefill_attend, ragged_prefill_attend
+
+__all__ = ["mla_ragged_prefill_attend", "ragged_prefill_attend"]

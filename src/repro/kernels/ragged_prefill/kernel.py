@@ -1,0 +1,428 @@
+"""Fused ragged paged-prefill — Pallas TPU kernels.
+
+A chunk-prefill step attends a ragged batch of prompt chunks — every row at
+its own offset (``start``), with its own live length — against that row's
+paged KV.  The per-row page table rides in as a *scalar-prefetch* operand so
+the K/V BlockSpec index maps resolve ``tables[b, j]`` before the body runs
+and the pipeline DMAs exactly the physical pages the row owns: the
+``pool[tables]`` gather the XLA reference path materializes in HBM never
+exists here, and no row pays for another row's prompt length.
+
+Three kernel bodies cover every paged prefill family in
+``models.cache_spec``:
+
+* ``_ragged_prefill_kernel`` — vanilla GQA.  The chunk's K/V are already
+  resident (scattered before the attend), so the kernel sweeps the row's
+  pages with absolute causal masking (``k_abs <= q_abs``); pages wholly past
+  the chunk's last query are skipped.
+* ``_windowed_ragged_prefill_kernel`` — sliding-window page rings.  The ring
+  is read *pre-write* (writing first would recycle slots still holding
+  in-window keys of the chunk's earliest queries): ring slots are masked by
+  the absolute position recovered from the ring layout relative to
+  ``start - 1``, and the chunk's fresh K/V ride in as extra key blocks with
+  the causal+window rule.
+* ``_mla_ragged_prefill_kernel`` — MLA materialized-K.  Per latent page, the
+  per-head K (``ckv @ w_uk`` ++ roped ``krope``) and V (``ckv @ w_uv``) are
+  materialized *inside the kernel* — rounded to the cache dtype at exactly
+  the point the reference einsum rounds — so the [B, S, H, *] K/V tensors
+  the reference path builds in HBM never exist.
+
+Numerics match the reference chunked path's rounding points exactly: fp32
+scores (scale after the dot, softcap after scale), one softmax at the true
+global max over the row's full key set (a two-phase page sweep — scores
+first, probability-weighted values second — rather than an online softmax,
+so the probabilities round at the same max as the reference), probabilities
+rounded to the value dtype before the PV product, fp32 PV accumulation, one
+cast at the block output.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .. import tpu_compiler_params
+
+# the reference mask constant (models.attention.NEG_INF): finite, so a
+# fully-masked row softmaxes to the same uniform distribution the reference
+# produces instead of NaN
+NEG_INF = -1e30
+
+
+def _store_scores(s_scr, seg, q_abs, s, valid):
+    s_scr[:, pl.ds(seg, s.shape[1])] = jnp.where(valid, s, NEG_INF)
+
+
+def _softmax_rows(s_scr):
+    """One softmax over each row's full key set, at the true global max —
+    the same formulation (and degenerate all-masked behavior) as
+    ``jax.nn.softmax`` in the reference chunked path."""
+    s_scr[...] = jax.nn.softmax(s_scr[...], axis=-1)
+
+
+def _pv_accumulate(acc_scr, s_scr, seg, v, v_dtype):
+    """Fold one page of the PV product: probabilities are rounded to the
+    value dtype first (the reference's ``a.astype(v.dtype)``), accumulation
+    stays fp32."""
+    p = s_scr[:, pl.ds(seg, v.shape[0])].astype(v_dtype).astype(jnp.float32)
+    acc_scr[...] += jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+# ------------------------------------------------------------- vanilla GQA
+
+def _ragged_prefill_kernel(tables_ref, start_ref, n_live_ref, q_ref, k_ref,
+                           v_ref, o_ref, s_scr, acc_scr, *, page_size: int,
+                           n_pages: int, q_blk: int, scale: float,
+                           softcap: float, v_dtype):
+    b = pl.program_id(0)
+    qb = pl.program_id(2)
+    i = pl.program_id(3)
+    start = start_ref[b]
+    T, G, D = q_ref.shape[2], q_ref.shape[3], q_ref.shape[4]
+    rows = T * G
+    j = jnp.where(i < n_pages, i, i - n_pages)
+    # absolute query position of each (token, head-group) row
+    q_abs = start + qb * q_blk \
+        + jax.lax.broadcasted_iota(jnp.int32, (rows, page_size), 0) // G
+
+    @pl.when(i < n_pages)
+    def _():
+        k_abs = j * page_size \
+            + jax.lax.broadcasted_iota(jnp.int32, (rows, page_size), 1)
+        # a page wholly past this block's last query is all-causal-masked;
+        # skip the dot, the NEG_INF fill is what the reference mask produces
+        live_page = j * page_size <= start + qb * q_blk + q_blk - 1
+
+        @pl.when(live_page)
+        def _():
+            q = q_ref[0, 0].astype(jnp.float32).reshape(rows, D)
+            k = k_ref[0, :, 0].astype(jnp.float32)               # [ps, D]
+            s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32) * scale
+            if softcap:
+                s = softcap * jnp.tanh(s / softcap)
+            _store_scores(s_scr, j * page_size, q_abs, s, k_abs <= q_abs)
+
+        @pl.when(jnp.logical_not(live_page))
+        def _():
+            s_scr[:, pl.ds(j * page_size, page_size)] = jnp.full(
+                (rows, page_size), NEG_INF, jnp.float32)
+
+    @pl.when(i == n_pages - 1)
+    def _():
+        _softmax_rows(s_scr)
+
+    @pl.when(i == n_pages)
+    def _():
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    @pl.when(i >= n_pages)
+    def _():
+        v = v_ref[0, :, 0].astype(jnp.float32)                   # [ps, D]
+        _pv_accumulate(acc_scr, s_scr, j * page_size, v, v_dtype)
+
+    @pl.when(i == 2 * n_pages - 1)
+    def _():
+        o_ref[0, 0] = acc_scr[...].reshape(T, G, D).astype(o_ref.dtype)
+
+
+def ragged_prefill_fwd(q, k_pages, v_pages, tables, start, n_live, *,
+                       scale: float, softcap: float = 0.0, q_blk: int = 128,
+                       interpret: bool = False):
+    """q: [B, K, T, G, D] roped chunk queries (T padded to a q_blk multiple);
+    k_pages/v_pages: [P, ps, K, D] *post-write* pool; tables: [B, n_pages]
+    int32; start/n_live: [B] int32.  Returns [B, K, T, G, D]."""
+    B, K, T, G, D = q.shape
+    ps = k_pages.shape[1]
+    n_pages = tables.shape[1]
+    n_qb = T // q_blk
+    kernel = functools.partial(
+        _ragged_prefill_kernel, page_size=ps, n_pages=n_pages, q_blk=q_blk,
+        scale=scale, softcap=softcap, v_dtype=v_pages.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, K, n_qb, 2 * n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, q_blk, G, D),
+                         lambda b, kh, qb, i, tr, st, nl: (b, kh, qb, 0, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, kh, qb, i, tr, st, nl:
+                         (tr[b, jnp.where(i < n_pages, i, i - n_pages)],
+                          0, kh, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, kh, qb, i, tr, st, nl:
+                         (tr[b, jnp.where(i < n_pages, i, i - n_pages)],
+                          0, kh, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, q_blk, G, D),
+            lambda b, kh, qb, i, tr, st, nl: (b, kh, qb, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((q_blk * G, n_pages * ps), jnp.float32),
+            pltpu.VMEM((q_blk * G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, T, G, D), q.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(tables, start, n_live, q, k_pages, v_pages)
+
+
+# ------------------------------------------------------ sliding-window ring
+
+def _windowed_ragged_prefill_kernel(tables_ref, start_ref, n_live_ref, q_ref,
+                                    kn_ref, vn_ref, k_ref, v_ref, o_ref,
+                                    s_scr, acc_scr, *, page_size: int,
+                                    n_ring: int, n_fresh: int, q_blk: int,
+                                    window: int, scale: float, softcap: float,
+                                    v_dtype):
+    b = pl.program_id(0)
+    qb = pl.program_id(2)
+    i = pl.program_id(3)
+    start = start_ref[b]
+    n_live = n_live_ref[b]
+    T, G, D = q_ref.shape[2], q_ref.shape[3], q_ref.shape[4]
+    rows = T * G
+    n_kv = n_ring + n_fresh
+    j = jnp.where(i < n_kv, i, i - n_kv)
+    ring_n = n_ring * page_size
+    q_abs = start + qb * q_blk \
+        + jax.lax.broadcasted_iota(jnp.int32, (rows, page_size), 0) // G
+    col = jax.lax.broadcasted_iota(jnp.int32, (rows, page_size), 1)
+
+    @pl.when(i < n_kv)
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32).reshape(rows, D)
+
+        @pl.when(j < n_ring)
+        def _():
+            # pre-write ring: slot positions recovered relative to start - 1
+            # (the last position written before this chunk); start == 0
+            # leaves every slot negative, i.e. fully masked
+            idx = j * page_size + col
+            last = start - 1
+            k_abs = last - ((last % ring_n - idx) % ring_n)
+            valid = (k_abs >= 0) & (k_abs > q_abs - window)
+            k = k_ref[0, :, 0].astype(jnp.float32)
+            s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32) * scale
+            if softcap:
+                s = softcap * jnp.tanh(s / softcap)
+            _store_scores(s_scr, j * page_size, q_abs, s, valid)
+
+        @pl.when(j >= n_ring)
+        def _():
+            jf = j - n_ring
+            k_abs = start + jf * page_size + col
+            valid = (k_abs <= q_abs) & (k_abs > q_abs - window) \
+                & (jf * page_size + col < n_live)
+            k = kn_ref[0, :, 0].astype(jnp.float32)
+            s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32) * scale
+            if softcap:
+                s = softcap * jnp.tanh(s / softcap)
+            _store_scores(s_scr, j * page_size, q_abs, s, valid)
+
+    @pl.when(i == n_kv - 1)
+    def _():
+        _softmax_rows(s_scr)
+
+    @pl.when(i == n_kv)
+    def _():
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    @pl.when(i >= n_kv)
+    def _():
+        vr = v_ref[0, :, 0].astype(jnp.float32)
+        vf = vn_ref[0, :, 0].astype(jnp.float32)
+        vsel = jnp.where(j < n_ring, vr, vf)
+        _pv_accumulate(acc_scr, s_scr, j * page_size, vsel, v_dtype)
+
+    @pl.when(i == 2 * n_kv - 1)
+    def _():
+        o_ref[0, 0] = acc_scr[...].reshape(T, G, D).astype(o_ref.dtype)
+
+
+def windowed_ragged_prefill_fwd(q, k_new, v_new, k_pages, v_pages, tables,
+                                start, n_live, *, window: int, scale: float,
+                                softcap: float = 0.0, q_blk: int = 128,
+                                interpret: bool = False):
+    """q: [B, K, T, G, D]; k_new/v_new: [B, T, K, D] fresh roped chunk K/V
+    (T a multiple of the page size); k_pages/v_pages: [P, ps, K, D]
+    *pre-write* pool; tables: [B, n_ring] ring tables.  Returns
+    [B, K, T, G, D]."""
+    B, K, T, G, D = q.shape
+    ps = k_pages.shape[1]
+    Tk = k_new.shape[1]                   # fresh K/V length (un-padded chunk)
+    assert Tk % ps == 0, (Tk, ps)
+    n_ring = tables.shape[1]
+    n_fresh = Tk // ps
+    n_kv = n_ring + n_fresh
+    n_qb = T // q_blk
+    kernel = functools.partial(
+        _windowed_ragged_prefill_kernel, page_size=ps, n_ring=n_ring,
+        n_fresh=n_fresh, q_blk=q_blk, window=window, scale=scale,
+        softcap=softcap, v_dtype=v_pages.dtype)
+
+    def _ring_map(b, kh, qb, i, tr, st, nl):
+        j = jnp.where(i < n_kv, i, i - n_kv)
+        return (tr[b, jnp.minimum(j, n_ring - 1)], 0, kh, 0)
+
+    def _fresh_map(b, kh, qb, i, tr, st, nl):
+        j = jnp.where(i < n_kv, i, i - n_kv)
+        return (b, jnp.clip(j - n_ring, 0, n_fresh - 1), kh, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, K, n_qb, 2 * n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, q_blk, G, D),
+                         lambda b, kh, qb, i, tr, st, nl: (b, kh, qb, 0, 0)),
+            pl.BlockSpec((1, ps, 1, D), _fresh_map),
+            pl.BlockSpec((1, ps, 1, D), _fresh_map),
+            pl.BlockSpec((1, ps, 1, D), _ring_map),
+            pl.BlockSpec((1, ps, 1, D), _ring_map),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, q_blk, G, D),
+            lambda b, kh, qb, i, tr, st, nl: (b, kh, qb, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((q_blk * G, n_kv * ps), jnp.float32),
+            pltpu.VMEM((q_blk * G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, T, G, D), q.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(tables, start, n_live, q, k_new, v_new, k_pages, v_pages)
+
+
+# ------------------------------------------------------ MLA materialized-K
+
+def _mla_ragged_prefill_kernel(tables_ref, start_ref, n_live_ref, q_ref,
+                               ckv_ref, kr_ref, wuk_ref, wuv_ref, o_ref,
+                               s_scr, acc_scr, *, page_size: int,
+                               n_pages: int, q_blk: int, scale: float,
+                               kv_dtype):
+    b = pl.program_id(0)
+    qb = pl.program_id(2)
+    i = pl.program_id(3)
+    start = start_ref[b]
+    T, E = q_ref.shape[2], q_ref.shape[3]
+    j = jnp.where(i < n_pages, i, i - n_pages)
+    q_abs = start + qb * q_blk \
+        + jax.lax.broadcasted_iota(jnp.int32, (T, page_size), 0)
+
+    @pl.when(i < n_pages)
+    def _():
+        k_abs = j * page_size \
+            + jax.lax.broadcasted_iota(jnp.int32, (T, page_size), 1)
+        live_page = j * page_size <= start + qb * q_blk + q_blk - 1
+
+        @pl.when(live_page)
+        def _():
+            ckv = ckv_ref[0].astype(jnp.float32)                 # [ps, L]
+            kr = kr_ref[0].astype(jnp.float32)                   # [ps, R]
+            wuk = wuk_ref[:, 0].astype(jnp.float32)              # [L, nope]
+            # materialize this page's per-head K, rounded to the cache dtype
+            # exactly where the reference ``ckv @ wkv_b`` einsum rounds
+            k_nope = jax.lax.dot_general(
+                ckv, wuk, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32).astype(kv_dtype)
+            k = jnp.concatenate([k_nope.astype(jnp.float32), kr], axis=-1)
+            q = q_ref[0, 0].astype(jnp.float32)                  # [T, E]
+            s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32) * scale
+            _store_scores(s_scr, j * page_size, q_abs, s, k_abs <= q_abs)
+
+        @pl.when(jnp.logical_not(live_page))
+        def _():
+            s_scr[:, pl.ds(j * page_size, page_size)] = jnp.full(
+                (T, page_size), NEG_INF, jnp.float32)
+
+    @pl.when(i == n_pages - 1)
+    def _():
+        _softmax_rows(s_scr)
+
+    @pl.when(i == n_pages)
+    def _():
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    @pl.when(i >= n_pages)
+    def _():
+        ckv = ckv_ref[0].astype(jnp.float32)
+        wuv = wuv_ref[:, 0].astype(jnp.float32)                  # [L, vd]
+        v = jax.lax.dot_general(
+            ckv, wuv, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(kv_dtype)
+        _pv_accumulate(acc_scr, s_scr, j * page_size,
+                       v.astype(jnp.float32), kv_dtype)
+
+    @pl.when(i == 2 * n_pages - 1)
+    def _():
+        o_ref[0, 0] = acc_scr[...].astype(o_ref.dtype)
+
+
+def mla_ragged_prefill_fwd(q, ckv_pages, krope_pages, w_uk, w_uv, tables,
+                           start, n_live, *, scale: float, q_blk: int = 128,
+                           interpret: bool = False):
+    """q: [B, H, T, nope+rope] (rope part roped); ckv_pages: [P, ps, L];
+    krope_pages: [P, ps, R]; w_uk: [L, H, nope]; w_uv: [L, H, vd]; tables:
+    [B, n_pages].  Returns the attended values [B, H, T, vd]."""
+    B, H, T, E = q.shape
+    L = ckv_pages.shape[2]
+    vd = w_uv.shape[2]
+    ps = ckv_pages.shape[1]
+    n_pages = tables.shape[1]
+    n_qb = T // q_blk
+    kernel = functools.partial(
+        _mla_ragged_prefill_kernel, page_size=ps, n_pages=n_pages,
+        q_blk=q_blk, scale=scale, kv_dtype=ckv_pages.dtype)
+
+    def _page_map(b, h, qb, i, tr, st, nl):
+        return (tr[b, jnp.where(i < n_pages, i, i - n_pages)], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, H, n_qb, 2 * n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, q_blk, E),
+                         lambda b, h, qb, i, tr, st, nl: (b, h, qb, 0)),
+            pl.BlockSpec((1, ps, L), _page_map),
+            pl.BlockSpec((1, ps, krope_pages.shape[2]), _page_map),
+            pl.BlockSpec((L, 1, w_uk.shape[2]),
+                         lambda b, h, qb, i, tr, st, nl: (0, h, 0)),
+            pl.BlockSpec((L, 1, vd),
+                         lambda b, h, qb, i, tr, st, nl: (0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, q_blk, vd),
+            lambda b, h, qb, i, tr, st, nl: (b, h, qb, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((q_blk, n_pages * ps), jnp.float32),
+            pltpu.VMEM((q_blk, vd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, T, vd), q.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(tables, start, n_live, q, ckv_pages, krope_pages, w_uk, w_uv)

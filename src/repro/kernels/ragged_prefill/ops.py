@@ -1,0 +1,95 @@
+"""Jit'd public wrappers for the fused ragged paged-prefill kernels.
+
+On CPU (this container, CI) the kernel bodies execute in interpret mode; on
+TPU the same ``pallas_call`` lowers to Mosaic.  The wrappers accept the
+model-layout tensors (``q: [B, T, H, D]``, pools ``[P, ps, K, D]`` /
+``[P, ps, L]``) and handle the kernel's grouped-query / head-major layouts,
+q-block padding, and per-row int32 metadata; see
+``src/repro/kernels/README.md`` for the full ragged-prefill contract
+(per-row (start, n_live) metadata, masking rules, pre- vs post-write pool
+semantics, numerics).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .. import default_interpret
+from .kernel import (mla_ragged_prefill_fwd, ragged_prefill_fwd,
+                     windowed_ragged_prefill_fwd)
+
+
+def _pad_q(q, q_blk):
+    """Pad the token axis (axis 2 of [B, K/H, T, ...]) to a q_blk multiple.
+    Padding rows attend causally-valid garbage and are sliced off."""
+    T = q.shape[2]
+    pad = (-T) % q_blk
+    if pad:
+        q = jnp.pad(q, [(0, 0), (0, 0), (0, pad)]
+                    + [(0, 0)] * (q.ndim - 3))
+    return q, T
+
+
+@partial(jax.jit, static_argnames=("window", "softcap", "q_blk", "interpret"))
+def ragged_prefill_attend(q, k_new, v_new, k_pages, v_pages, tables, start,
+                          n_live, *, window: int = 0, softcap: float = 0.0,
+                          q_blk: int = 128, interpret: bool = None):
+    """Ragged chunk-prefill attend against the paged KV pool.
+
+    q: [B, T, H, D] roped chunk queries at per-row offsets ``start`` [B];
+    n_live: [B] real chunk tokens.  ``window == 0``: ``k_pages``/``v_pages``
+    [P, ps, K, D] are the *post-write* pool (the chunk's K/V are already
+    resident; ``k_new``/``v_new`` are ignored).  ``window > 0``: the pool is
+    *pre-write*, ``tables`` [B, n_ring] is the page ring, and
+    ``k_new``/``v_new`` [B, T, K, D] carry the chunk's fresh roped K/V (T
+    must be a page multiple).  Returns [B, T, H, D]."""
+    B, T, H, D = q.shape
+    K = k_pages.shape[2]
+    assert H % K == 0, (H, K)
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, T, K, H // K, D).transpose(0, 2, 1, 3, 4)
+    blk = min(q_blk, ((T + 7) // 8) * 8)
+    qg, T0 = _pad_q(qg, blk)
+    tables = jnp.asarray(tables, jnp.int32)
+    start = jnp.asarray(start, jnp.int32)
+    n_live = jnp.asarray(n_live, jnp.int32)
+    if window == 0:
+        o = ragged_prefill_fwd(qg, k_pages, v_pages, tables, start, n_live,
+                               scale=scale, softcap=softcap, q_blk=blk,
+                               interpret=default_interpret(interpret))
+    else:
+        kn = jnp.asarray(k_new, k_pages.dtype)
+        vn = jnp.asarray(v_new, v_pages.dtype)
+        o = windowed_ragged_prefill_fwd(
+            qg, kn, vn, k_pages, v_pages, tables, start, n_live,
+            window=window, scale=scale, softcap=softcap, q_blk=blk,
+            interpret=default_interpret(interpret))
+    return o[:, :, :T0].transpose(0, 2, 1, 3, 4).reshape(B, T0, H, D)
+
+
+@partial(jax.jit, static_argnames=("nope", "q_blk", "interpret"))
+def mla_ragged_prefill_attend(q, ckv_pages, krope_pages, wkv_b, tables, start,
+                              n_live, *, nope: int, q_blk: int = 128,
+                              interpret: bool = None):
+    """Ragged MLA chunk-prefill attend against the post-write latent pages.
+
+    q: [B, T, H, nope+rope] (rope part already roped); ckv_pages:
+    [P, ps, L]; krope_pages: [P, ps, R]; wkv_b: [L, H, nope + v_head_dim];
+    tables: [B, n_pages].  Per-head K/V are materialized page-by-page inside
+    the kernel (``ckv @ w_uk`` ++ krope, ``ckv @ w_uv``) with the reference
+    einsum's rounding.  Returns [B, T, H, v_head_dim]."""
+    B, T, H, E = q.shape
+    scale = 1.0 / math.sqrt(E)
+    qg = q.transpose(0, 2, 1, 3)                       # [B, H, T, E]
+    blk = min(q_blk, ((T + 7) // 8) * 8)
+    qg, T0 = _pad_q(qg, blk)
+    w_uk, w_uv = wkv_b[..., :nope], wkv_b[..., nope:]
+    o = mla_ragged_prefill_fwd(
+        qg, ckv_pages, krope_pages, w_uk, w_uv,
+        jnp.asarray(tables, jnp.int32), jnp.asarray(start, jnp.int32),
+        jnp.asarray(n_live, jnp.int32), scale=scale, q_blk=blk,
+        interpret=default_interpret(interpret))
+    return o[:, :, :T0].transpose(0, 2, 1, 3)

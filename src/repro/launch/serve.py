@@ -85,6 +85,11 @@ def main(argv=None):
                          "reference = XLA gather+attend, pallas = fused "
                          "paged-attention decode kernel (interpret mode on "
                          "CPU); auto picks pallas exactly on TPU")
+    ap.add_argument("--prefill-chunk-tokens", type=int, default=0,
+                    help="per-step prefill token budget: long prompts split "
+                         "into page-aligned chunks that interleave with "
+                         "decode steps (0 = one monolithic prefill per "
+                         "admission)")
     ap.add_argument("--max-len", type=int, default=0,
                     help="per-request length cap (0 -> fitted to workload)")
     ap.add_argument("--verify", action="store_true",
@@ -103,7 +108,8 @@ def main(argv=None):
     scfg = ServeConfig(page_size=ps, max_slots=slots, max_len=max_len,
                        prefix_cache=args.prefix_cache,
                        cache_eviction=args.cache_eviction,
-                       attn_backend=args.attn_backend)
+                       attn_backend=args.attn_backend,
+                       prefill_chunk_tokens=args.prefill_chunk_tokens)
 
     prompts, budgets = make_prompts(args, cfg.vocab)
 
@@ -127,6 +133,13 @@ def main(argv=None):
         ttft = [r.ttft for r in results]
         print(f"[serve] attention backend: {metrics['attn_backend']} "
               f"(decode step p50 {metrics['decode_step_ms_p50']:.1f} ms)")
+        if args.prefill_chunk_tokens:
+            print(f"[serve] chunked prefill: budget "
+                  f"{scfg.chunk_tokens} tokens, "
+                  f"{metrics['chunked_prefill_steps']} continuation chunks, "
+                  f"padding waste {metrics['prefill_padding_waste']:.2f}, "
+                  f"decode stall max "
+                  f"{metrics['decode_stall_ms_max']:.1f} ms")
         print(f"[serve] {cfg.name} continuous: {metrics['n_requests']} reqs, "
               f"{metrics['new_tokens']} toks in {metrics['wall_s']*1e3:.1f} ms "
               f"({metrics['tokens_per_s']:.1f} tok/s, "

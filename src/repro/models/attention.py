@@ -107,6 +107,81 @@ def chunked_attention(
     return out
 
 
+def ring_chunk_attention(
+    q: jax.Array,            # [B, T, H, D] roped chunk queries
+    k: jax.Array,            # [B, T, K, D] fresh roped chunk keys
+    v: jax.Array,            # [B, T, K, D]
+    k_ring: jax.Array,       # [B, n, K, D] gathered page ring BEFORE the
+    v_ring: jax.Array,       #   chunk's writes (positions < start)
+    start: jax.Array,        # [B] absolute position of q[:, 0]
+    n_live: jax.Array,       # [B] real (non-padding) chunk tokens
+    *,
+    window: int,
+    softcap: float = 0.0,
+    q_block: int = 512,
+    unroll: bool = False,
+) -> jax.Array:
+    """Sliding-window attend for a *chunk* of prefill at offset ``start``.
+
+    A chunk's queries need keys from earlier chunks, which live only in the
+    page ring.  The ring is gathered before this chunk's scatter (writing
+    first would recycle slots still holding in-window keys of the earliest
+    queries), so ring slot ``s`` holds the latest position ``< start``
+    congruent to ``s`` mod the ring length; each slot's absolute position is
+    recovered from that layout and masked to the window, and the chunk's own
+    keys are attended fresh with the causal+window rule.  At ``start == 0``
+    the ring part is fully masked and this reduces (token-exactly — masked
+    entries are exact softmax zeros) to the fresh-only attend the unchunked
+    windowed prefill always used."""
+    B, T, H, D = q.shape
+    K = k.shape[2]
+    n = k_ring.shape[1]                               # ring length in tokens
+    scale = 1.0 / math.sqrt(D)
+    q_block = min(q_block, T)
+    pad = (-T) % q_block
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nb = q.shape[1] // q_block
+    qb = q.reshape(B, nb, q_block, K, H // K, D)
+    qb = jnp.moveaxis(qb, 1, 0)                      # [nb, B, q_block, K, G, D]
+    kc = jnp.concatenate([k_ring, k], axis=1)        # [B, n + T, K, D]
+    vc = jnp.concatenate([v_ring, v], axis=1)
+    start = jnp.asarray(start, jnp.int32).reshape(-1)
+    # ring-slot absolute positions, recovered relative to the last position
+    # written before this chunk (start - 1); start == 0 -> all negative
+    last = (start - 1)[:, None]                                   # [B, 1]
+    idx = jnp.arange(n)[None, :]
+    k_abs = last - ((last % n - idx) % n)                         # [B, n]
+    fresh_abs = start[:, None] + jnp.arange(T)[None, :]           # [B, T]
+    fresh_live = jnp.arange(T)[None, :] < n_live[:, None]         # [B, T]
+
+    def block(carry, inp):
+        qi, bidx = inp
+        qpos = start[:, None] + bidx * q_block \
+            + jnp.arange(q_block)[None, :]                        # [B, q]
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qi, kc,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        vr = (k_abs[:, None, :] >= 0) \
+            & (k_abs[:, None, :] > qpos[:, :, None] - window)     # [B, q, n]
+        vf = (fresh_abs[:, None, :] <= qpos[:, :, None]) \
+            & (fresh_abs[:, None, :] > qpos[:, :, None] - window) \
+            & fresh_live[:, None, :]                              # [B, q, T]
+        mask = jnp.concatenate([vr, vf], axis=2)                  # [B, q, n+T]
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+        a = jax.nn.softmax(s, axis=-1).astype(vc.dtype)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", a, vc)
+        return carry, o
+
+    _, out = jax.lax.scan(jax.checkpoint(block), None, (qb, jnp.arange(nb)),
+                          unroll=unroll)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, nb * q_block, H, v.shape[-1])
+    if pad:
+        out = out[:, :T]
+    return out
+
+
 def full_attention_block(cfg: ArchConfig, p, x, freqs, *, causal=True, window=0,
                          positions=None, q_block=512, unroll=False):
     """Self-attention over a full sequence (train / prefill)."""
@@ -191,21 +266,6 @@ def decode_valid_mask(pos: jax.Array, n: int, *, window: int = 0) -> jax.Array:
         & (k_abs > pos[:, None] - window)
 
 
-def page_write_targets(tables, positions, live, page_size: int, *,
-                       ring_pages: int = 0):
-    """Physical (page, offset) write targets for [B, T] absolute positions
-    through the page table; positions with ``live == False`` are routed to
-    the reserved null page (physical page 0, a write sink) so they can never
-    clobber live entries.  ``ring_pages > 0`` wraps the table column into the
-    sliding-window page ring."""
-    B = tables.shape[0]
-    col = positions // page_size
-    if ring_pages:
-        col = col % ring_pages
-    page = tables[jnp.arange(B)[:, None], col]
-    return jnp.where(live, page, 0), positions % page_size
-
-
 def decode_qkv(cfg: ArchConfig, p, x, pos, freqs):
     """Project + rope one decode token.  x: [B, d]; pos: [B].  Returns
     (q [B, H, D], k [B, K, D], v [B, K, D])."""
@@ -251,53 +311,57 @@ def masked_token_attend(q, kg, vg, valid, *, scale: float,
 # output projection.  The attend itself is delegated to ``backend`` (see
 # models.attn_backend) — reference gather+attend or the fused Pallas kernel.
 
-def paged_prefill_attention_block(cfg: ArchConfig, p, x, cache, tables, start,
-                                  n_live, freqs, backend, *, q_block=512,
-                                  unroll=False):
-    """Multi-token prefill step against the paged KV pool, at an offset.
+def paged_prefill_attention_block(cfg: ArchConfig, p, x, cache, meta, freqs,
+                                  backend, *, q_block=512, unroll=False):
+    """Multi-token (chunk) prefill step against the paged KV pool.
 
-    x: [B, T, d] tail activations; cache: {"k","v": [P, ps, K, D]} one layer's
-    pages; tables: [B, maxp] int32 logical->physical page map; start: [B]
-    absolute position of x[:, 0]; n_live: [B] count of real (non-padding)
-    tail tokens.  Row i's K/V lands at page ``tables[b, (start+i) // ps]``
-    offset ``(start+i) % ps``; padding rows are routed to the null page.
+    x: [B, T, d] chunk activations; cache: {"k","v": [P, ps, K, D]} one
+    layer's pages; meta: the flat per-step prefill metadata from
+    ``attn_backend.prefill_meta`` — page-table rows, per-row chunk offsets
+    (``start``: absolute position of x[:, 0]), live counts, and the
+    precomputed physical (page, offset) write target of every chunk position
+    (padding and ring-aged-out positions routed to the null page), derived
+    once by the engine instead of per layer.
 
-    Vanilla layers attend to the gathered pages with absolute causal masking,
-    so a cached prefix written by an earlier request is read exactly as if
-    this request had prefilled it itself.  Sliding-window layers
-    (``cfg.sliding_window > 0``) write through the page *ring* instead —
-    position ``i`` lands at table slot ``(i // ps) % horizon``, positions
-    that would be overwritten inside this same prefill go to the null page so
-    the scatter never writes one (page, offset) twice — and attend to the
-    fresh K/V (windowed families are not prefix-cacheable, the whole prompt
-    is in ``x``).  Returns (out [B, T, d], new_cache)."""
+    Vanilla layers attend to the gathered (post-write) pages with absolute
+    causal masking, so a prefix written by an earlier request (radix cache
+    hit) or an earlier chunk of this request is read exactly as if this call
+    had prefilled it itself.  Sliding-window layers attend the chunk's fresh
+    K/V plus the page *ring* as gathered before the chunk's scatter
+    (``ring_chunk_attention``); the attend core is delegated to ``backend``
+    (reference gather+attend or the fused ragged-prefill kernel).  Returns
+    (out [B, T, d], new_cache)."""
     B, T, _ = x.shape
     ps = cache["k"].shape[1]
+    tables, start, n_live = meta["tables"], meta["start"], meta["n_live"]
     q, k, v = qkv(cfg, p, x)
     positions = start[:, None] + jnp.arange(T)[None, :]              # [B, T]
     if freqs is not None:
         q = apply_rope(q, positions, freqs)
         k = apply_rope(k, positions, freqs)
-    live = jnp.arange(T)[None, :] < n_live[:, None]                  # [B, T]
     window = cfg.sliding_window
     if window:
         from .cache_spec import window_pages
-        R = min(window_pages(window, ps), tables.shape[1])
-        live = live & (positions >= (start + n_live)[:, None] - R * ps)
-        page, off = page_write_targets(tables, positions, live, ps,
-                                       ring_pages=R)
+        ring_tables = tables[:, :min(window_pages(window, ps),
+                                     tables.shape[1])]
+        # the ring must be read *before* the chunk's writes recycle slots
+        # still holding in-window keys of this chunk's earliest queries
+        o = backend.prefill_attend(
+            q, k, v, cache["k"], cache["v"], ring_tables, start, n_live,
+            window=window, softcap=cfg.attn_logit_softcap, q_block=q_block,
+            unroll=unroll)
+        ck = cache["k"].at[meta["write_page"], meta["write_off"]].set(
+            k.astype(cache["k"].dtype))
+        cv = cache["v"].at[meta["write_page"], meta["write_off"]].set(
+            v.astype(cache["v"].dtype))
     else:
-        page, off = page_write_targets(tables, positions, live, ps)
-    ck = cache["k"].at[page, off].set(k.astype(cache["k"].dtype))
-    cv = cache["v"].at[page, off].set(v.astype(cache["v"].dtype))
-    if window:
-        kg, vg = k, v
-    else:
-        kg, vg = gather_pages(ck, tables), gather_pages(cv, tables)
-    o = backend.prefill_attend(q, kg, vg, causal=True, window=window,
-                               q_block=q_block,
-                               softcap=cfg.attn_logit_softcap,
-                               q_offset=start, unroll=unroll)
+        ck = cache["k"].at[meta["write_page"], meta["write_off"]].set(
+            k.astype(cache["k"].dtype))
+        cv = cache["v"].at[meta["write_page"], meta["write_off"]].set(
+            v.astype(cache["v"].dtype))
+        o = backend.prefill_attend(
+            q, k, v, ck, cv, tables, start, n_live, window=0,
+            softcap=cfg.attn_logit_softcap, q_block=q_block, unroll=unroll)
     return jnp.einsum("bshe,hed->bsd", o, p["wo"]), {"k": ck, "v": cv}
 
 

@@ -11,20 +11,21 @@ How that read happens is a *backend* choice, orthogonal to the cache family:
   the block output, the same single rounding point as the fused kernel's
   fp32 accumulator, so backends agree to an output ulp and greedy decode
   stays token-exact across them.
-* ``pallas`` — the fused ``repro.kernels.paged_attention`` decode kernel:
+* ``pallas`` — the fused kernels: ``repro.kernels.paged_attention`` for
+  decode and ``repro.kernels.ragged_prefill`` for chunk prefill.  In both,
   the page table rides into the kernel as a scalar-prefetch operand and the
   BlockSpec index maps walk it directly, so the gather never materializes.
-  Prefill (and anything a backend does not override) falls back to the
-  reference implementation.
 
-A backend implements three *attend cores* — ``decode_attend`` (vanilla GQA +
-sliding-window rings), ``mla_decode_attend`` (absorbed-latent), and
-``prefill_attend`` (chunked multi-token) — while the family framing (QKV
-projection, RoPE, page-table scatter, output projection) is shared code in
-``models.attention`` / ``models.mla`` that every backend reuses.  Model code
-routes exclusively through ``backend.paged_prefill`` / ``backend.paged_decode``;
-future backends (GPU, ragged prefill, speculative verify) plug in by
-registering a class and overriding the cores they fuse.
+A backend implements four *attend cores* — ``decode_attend`` (vanilla GQA +
+sliding-window rings), ``mla_decode_attend`` (absorbed-latent),
+``prefill_attend`` (ragged multi-token chunks against the paged pool), and
+``mla_prefill_attend`` (materialized-K chunks against the latent pages) —
+while the family framing (QKV projection, RoPE, page-table scatter, output
+projection) is shared code in ``models.attention`` / ``models.mla`` that
+every backend reuses.  Model code routes exclusively through
+``backend.paged_prefill`` / ``backend.paged_decode``; future backends (GPU,
+speculative verify) plug in by registering a class and overriding the cores
+they fuse.
 
 Selection is threaded from ``ServeConfig.attn_backend`` (``auto`` |
 ``reference`` | ``pallas``) through ``launch/serve.py --attn-backend`` and the
@@ -43,6 +44,8 @@ from ..configs.base import ArchConfig
 from . import attention, mla
 from ..kernels.paged_attention import (mla_paged_attention_decode,
                                        paged_attention_decode)
+from ..kernels.ragged_prefill import (mla_ragged_prefill_attend,
+                                      ragged_prefill_attend)
 
 # ---------------------------------------------------------------- registry
 
@@ -108,6 +111,45 @@ def decode_meta(cfg: ArchConfig, page_size: int, tables, pos):
             "write_off": pos % page_size}
 
 
+# ---------------------------------------------------- flat prefill metadata
+
+def prefill_meta(cfg: ArchConfig, page_size: int, tables, slots, start,
+                 n_tail, T: int):
+    """Flat per-step prefill metadata, the prefill twin of ``decode_meta``:
+    page-table rows, state-slot rows, each row's chunk offset (``start``,
+    absolute position of the chunk's first token) and live token count, and
+    the precomputed physical (page, offset) write target of every chunk
+    position — shared by all layers instead of re-derived per block.
+
+    ``T`` is the chunk's *text* width (the prefill bucket); the write-target
+    arrays cover the hidden width ``cfg.n_image_tokens + T`` (vlm prepends
+    its image prefix).  Padding rows/positions and, for sliding-window
+    families, positions that age out of the ring before the chunk ends are
+    routed to the reserved null page.  Works on numpy (engine host path) and
+    jnp arrays alike; the jitted ``prefill_paged`` step consumes it as one
+    pytree, so step shapes are keyed by (bucket, padded rows) — with
+    chunking, by the chunk budget — never by individual prompt lengths."""
+    xp = jnp if isinstance(tables, jax.Array) else np
+    B = tables.shape[0]
+    Th = cfg.n_image_tokens + T
+    positions = start[:, None] + xp.arange(Th)[None, :]           # [B, Th]
+    n_live = n_tail + cfg.n_image_tokens
+    live = xp.arange(Th)[None, :] < n_live[:, None]
+    col = positions // page_size
+    if cfg.sliding_window:
+        from .cache_spec import window_pages
+        R = min(window_pages(cfg.sliding_window, page_size), tables.shape[1])
+        live = live & (positions >= (start + n_live)[:, None]
+                       - R * page_size)
+        col = col % R
+    col = xp.minimum(col, tables.shape[1] - 1)
+    page = tables[xp.arange(B)[:, None], col]
+    return {"tables": tables, "slots": slots, "start": start,
+            "n_tail": n_tail, "n_live": n_live,
+            "write_page": xp.where(live, page, 0),
+            "write_off": positions % page_size}
+
+
 # ----------------------------------------------------------- backend classes
 
 class AttentionBackend:
@@ -117,18 +159,18 @@ class AttentionBackend:
 
     # -------- public entry points: the only paged-attention call sites
 
-    def paged_prefill(self, cfg: ArchConfig, p, x, cache, tables, start,
-                      n_live, freqs, *, q_block: int = 512,
-                      unroll: bool = False):
-        """Multi-token prefill at an offset into the paged pool.  Routes by
-        cache family (MLA latent / sliding-window ring / vanilla KV); returns
-        (out [B, T, d], new_cache)."""
+    def paged_prefill(self, cfg: ArchConfig, p, x, cache, meta, freqs, *,
+                      q_block: int = 512, unroll: bool = False):
+        """Multi-token chunk prefill at an offset into the paged pool.
+        ``meta`` is the flat per-step metadata from ``prefill_meta``.  Routes
+        by cache family (MLA latent / sliding-window ring / vanilla KV);
+        returns (out [B, T, d], new_cache)."""
         if cfg.use_mla:
             return mla.mla_paged_prefill_block(
-                cfg, p, x, cache, tables, start, n_live, freqs, backend=self,
+                cfg, p, x, cache, meta, freqs, backend=self,
                 q_block=q_block, unroll=unroll)
         return attention.paged_prefill_attention_block(
-            cfg, p, x, cache, tables, start, n_live, freqs, backend=self,
+            cfg, p, x, cache, meta, freqs, backend=self,
             q_block=q_block, unroll=unroll)
 
     def paged_decode(self, cfg: ArchConfig, p, x, cache, meta, freqs):
@@ -156,15 +198,28 @@ class AttentionBackend:
         latent context [B, H, L]."""
         raise NotImplementedError
 
-    def prefill_attend(self, q, k, v, *, causal: bool = True, window: int = 0,
-                       q_block: int = 512, softcap: float = 0.0, q_offset=0,
-                       unroll: bool = False):
-        """Multi-token attend for prefill.  Default: the chunked XLA
-        formulation (a fused ragged-prefill kernel is a future backend's
-        override)."""
-        return attention.chunked_attention(
-            q, k, v, causal=causal, window=window, q_block=q_block,
-            softcap=softcap, q_offset=q_offset, unroll=unroll)
+    def prefill_attend(self, q, k, v, k_pages, v_pages, tables, start, n_live,
+                       *, window: int = 0, softcap: float = 0.0,
+                       q_block: int = 512, unroll: bool = False):
+        """Ragged multi-token prefill attend against the paged pool.
+
+        q: [B, T, H, D] roped chunk queries at per-row offsets ``start``;
+        n_live: [B] real chunk tokens.  ``window == 0``: the chunk's K/V are
+        already resident — ``k_pages``/``v_pages`` are the *post-write* pool
+        and ``k``/``v`` are unused.  ``window > 0``: ``k_pages``/``v_pages``
+        are the *pre-write* page ring (``tables`` truncated to the ring
+        horizon) and ``k``/``v`` [B, T, K, D] carry the chunk's fresh roped
+        K/V.  Returns [B, T, H, D_v]."""
+        raise NotImplementedError
+
+    def mla_prefill_attend(self, q, ckv_pages, krope_pages, wkv_b, tables,
+                           start, n_live, *, nope: int, q_block: int = 512,
+                           unroll: bool = False):
+        """Ragged MLA prefill attend: materialized-K semantics against the
+        post-write latent pages (see ``mla.mla_materialized_prefill_attend``,
+        the reference formulation).  q: [B, T, H, nope+rope]; returns
+        [B, T, H, v_head_dim]."""
+        raise NotImplementedError
 
 
 @register_backend
@@ -189,12 +244,33 @@ class ReferenceBackend(AttentionBackend):
         return mla.mla_latent_attend(q_eff, q_rope, ccg, crg, valid,
                                      scale=scale)
 
+    def prefill_attend(self, q, k, v, k_pages, v_pages, tables, start, n_live,
+                       *, window: int = 0, softcap: float = 0.0,
+                       q_block: int = 512, unroll: bool = False):
+        if window == 0:
+            kg = attention.gather_pages(k_pages, tables)
+            vg = attention.gather_pages(v_pages, tables)
+            return attention.chunked_attention(
+                q, kg, vg, causal=True, q_block=q_block, softcap=softcap,
+                q_offset=start, unroll=unroll)
+        return attention.ring_chunk_attention(
+            q, k, v, attention.gather_pages(k_pages, tables),
+            attention.gather_pages(v_pages, tables), start, n_live,
+            window=window, softcap=softcap, q_block=q_block, unroll=unroll)
+
+    def mla_prefill_attend(self, q, ckv_pages, krope_pages, wkv_b, tables,
+                           start, n_live, *, nope: int, q_block: int = 512,
+                           unroll: bool = False):
+        return mla.mla_materialized_prefill_attend(
+            q, ckv_pages, krope_pages, wkv_b, tables, start, n_live,
+            nope=nope, q_block=q_block, unroll=unroll)
+
 
 @register_backend
 class PallasBackend(ReferenceBackend):
-    """Fused paged-attention decode (``repro.kernels.paged_attention``);
-    interpret mode on CPU, Mosaic on TPU.  Prefill inherits the reference
-    cores."""
+    """Fused paged attention (``repro.kernels.paged_attention`` decode +
+    ``repro.kernels.ragged_prefill`` chunk prefill); interpret mode on CPU,
+    Mosaic on TPU."""
 
     name = "pallas"
 
@@ -209,3 +285,16 @@ class PallasBackend(ReferenceBackend):
         return mla_paged_attention_decode(q_eff, q_rope, ckv_pages,
                                           krope_pages, tables, pos,
                                           scale=scale)
+
+    def prefill_attend(self, q, k, v, k_pages, v_pages, tables, start, n_live,
+                       *, window: int = 0, softcap: float = 0.0,
+                       q_block: int = 512, unroll: bool = False):
+        return ragged_prefill_attend(q, k, v, k_pages, v_pages, tables,
+                                     start, n_live, window=window,
+                                     softcap=softcap)
+
+    def mla_prefill_attend(self, q, ckv_pages, krope_pages, wkv_b, tables,
+                           start, n_live, *, nope: int, q_block: int = 512,
+                           unroll: bool = False):
+        return mla_ragged_prefill_attend(q, ckv_pages, krope_pages, wkv_b,
+                                         tables, start, n_live, nope=nope)

@@ -284,24 +284,36 @@ class EncDecLM:
         logits = lm_logits(cfg, params["embed"], x)
         return logits, nself, {"cross": ncross}
 
-    def prefill_paged(self, params, kv, state, tables, slots, start, n_tail,
-                      tokens, extras=None, mesh=None):
-        """Full-prompt prefill: encode each request's frames, write the
-        decoder prompt's self-attention KV through the page tables, and pin
-        the cross K/V into the state slots at rows ``slots`` (out-of-range
-        rows — batch padding — scatter nothing).  ``start`` is always 0
-        (frame-conditioned prompts are not prefix-cacheable)."""
+    def prefill_paged(self, params, kv, state, meta, tokens, extras=None,
+                      mesh=None, continuation: bool = False):
+        """Chunk prefill: encode each request's frames, write the decoder
+        prompt chunk's self-attention KV through the page tables (``meta``
+        per ``attn_backend.prefill_meta``; ``start > 0`` resumes a chunked
+        prompt against its already-resident pages), and pin the cross K/V
+        into the state slots at rows ``meta["slots"]`` (out-of-range rows —
+        batch padding — scatter nothing).
+
+        ``continuation=True`` (chunks after the first of a long prompt)
+        skips the encoder entirely: the cross K/V the first chunk pinned are
+        *read back from the state slots* for this chunk's cross-attention —
+        the pinned values are the same bf16 the fresh projection would
+        produce, so the chunk is bitwise-identical at a fraction of the
+        step cost (no per-chunk encoder forward, no re-pin)."""
         cfg = self.cfg
+        if continuation:
+            return self._prefill_paged_continue(params, kv, state, meta,
+                                                tokens, mesh)
         enc_out = self.encode(params, extras["frames"], mesh)
         freqs = rope_freqs(cfg, cfg.head_dim_)
         B = tokens.shape[0]
+        slots, n_tail = meta["slots"], meta["n_tail"]
         x = embed_tokens(params["embed"], tokens)
 
         def body(x, pc):
             p, cself = pc
             h = apply_norm(cfg, p["ln1"], x)
             a, c2 = self.attn_backend.paged_prefill(
-                cfg, p["self_attn"], h, cself, tables, start, n_tail, freqs,
+                cfg, p["self_attn"], h, cself, meta, freqs,
                 q_block=cfg.attn_q_block, unroll=cfg.unroll)
             x = x + a
             hx = apply_norm(cfg, p["ln_x"], x)
@@ -328,3 +340,47 @@ class EncDecLM:
         last = x[jnp.arange(B), n_tail - 1]
         logits = lm_logits(cfg, params["embed"], last)
         return logits, nself, new_state
+
+    def _prefill_paged_continue(self, params, kv, state, meta, tokens,
+                                mesh=None):
+        """Continuation-chunk prefill: no encoder, no cross re-pin — each
+        layer cross-attends the K/V rows the first chunk pinned into the
+        state slots (padding rows clamp to row 0 and attend harmless
+        garbage; their logits are never read)."""
+        cfg = self.cfg
+        freqs = rope_freqs(cfg, cfg.head_dim_)
+        B = tokens.shape[0]
+        slots, n_tail = meta["slots"], meta["n_tail"]
+        rows = jnp.clip(slots, 0, state["cross"]["k"].shape[1] - 1)
+        ck = state["cross"]["k"][:, rows]        # [L, B, enc_len, K, D]
+        cv = state["cross"]["v"][:, rows]
+        x = embed_tokens(params["embed"], tokens)
+
+        def body(x, pc):
+            p, cself, ckl, cvl = pc
+            h = apply_norm(cfg, p["ln1"], x)
+            a, c2 = self.attn_backend.paged_prefill(
+                cfg, p["self_attn"], h, cself, meta, freqs,
+                q_block=cfg.attn_q_block, unroll=cfg.unroll)
+            x = x + a
+            hx = apply_norm(cfg, p["ln_x"], x)
+            q = jnp.einsum("bsd,dhe->bshe", hx, p["cross_attn"]["wq"])
+            if "bq" in p["cross_attn"]:
+                q = q + p["cross_attn"]["bq"]
+            from .attention import chunked_attention
+            o = chunked_attention(q, ckl, cvl, causal=False,
+                                  q_block=cfg.attn_q_block, unroll=cfg.unroll)
+            x = x + jnp.einsum("bshe,hed->bsd", o, p["cross_attn"]["wo"])
+            x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x))
+            return x, c2
+
+        def f(carry, pc):
+            x = carry
+            x, c2 = body(x, pc)
+            return x, c2
+        x, nself = jax.lax.scan(f, x, (params["dec_blocks"], kv, ck, cv),
+                                unroll=cfg.unroll)
+        x = apply_norm(cfg, params["final_norm"], x)
+        last = x[jnp.arange(B), n_tail - 1]
+        logits = lm_logits(cfg, params["embed"], last)
+        return logits, nself, state

@@ -15,8 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
-from .attention import (NEG_INF, chunked_attention, gather_pages,
-                        page_write_targets)
+from .attention import NEG_INF, chunked_attention, gather_pages
 from .layers import apply_rope, rmsnorm
 from .params import ParamDef
 
@@ -90,21 +89,21 @@ def mla_paged_cache_defs(cfg: ArchConfig, num_pages: int, page_size: int):
     }
 
 
-def mla_paged_prefill_block(cfg: ArchConfig, p, x, cache, tables, start,
-                            n_live, freqs, backend, *, q_block=512,
-                            unroll=False):
-    """Multi-token MLA prefill at an offset, straight into the latent pages.
+def mla_paged_prefill_block(cfg: ArchConfig, p, x, cache, meta, freqs,
+                            backend, *, q_block=512, unroll=False):
+    """Multi-token MLA chunk prefill, straight into the latent pages.
 
-    Mirrors ``paged_prefill_attention_block``: the tail's latent is written
-    token-granularly through the page table (padding rows to the null page),
-    then the *whole* logical sequence — cached prefix pages plus the fresh
-    tail — is gathered and per-head K/V are materialized from it with
-    ``wkv_b`` exactly as ``mla_full_block`` does, so a cached prefix is read
-    as if this request had prefilled it itself.  The attend is delegated to
-    ``backend.prefill_attend``."""
+    Mirrors ``paged_prefill_attention_block``: the chunk's latent is written
+    token-granularly through the page table (``meta`` carries the
+    precomputed write targets; padding rows go to the null page), then the
+    attend against the *whole* logical sequence — cached/earlier-chunk
+    prefix pages plus the fresh chunk — is delegated to
+    ``backend.mla_prefill_attend``, whose contract is the materialized-K
+    formulation of ``mla_full_block`` (per-head K/V rebuilt from the
+    post-write latent pages with ``wkv_b``)."""
     B, T, _ = x.shape
-    ps = cache["ckv"].shape[1]
-    nope, rope_d = cfg.nope_head_dim, cfg.rope_head_dim
+    nope = cfg.nope_head_dim
+    tables, start, n_live = meta["tables"], meta["start"], meta["n_live"]
     positions = start[:, None] + jnp.arange(T)[None, :]              # [B, T]
     q = _queries(cfg, p, x)
     q_nope, q_rope = q[..., :nope], q[..., nope:]
@@ -115,22 +114,37 @@ def mla_paged_prefill_block(cfg: ArchConfig, p, x, cache, tables, start,
     krope = apply_rope(ckv_full[..., cfg.kv_lora_rank:][:, :, None, :],
                        positions, freqs)[:, :, 0, :]
 
-    live = jnp.arange(T)[None, :] < n_live[:, None]                  # [B, T]
-    page, off = page_write_targets(tables, positions, live, ps)
-    cc = cache["ckv"].at[page, off].set(ckv.astype(cache["ckv"].dtype))
-    cr = cache["krope"].at[page, off].set(krope.astype(cache["krope"].dtype))
+    cc = cache["ckv"].at[meta["write_page"], meta["write_off"]].set(
+        ckv.astype(cache["ckv"].dtype))
+    cr = cache["krope"].at[meta["write_page"], meta["write_off"]].set(
+        krope.astype(cache["krope"].dtype))
 
-    ccg = gather_pages(cc, tables)
-    crg = gather_pages(cr, tables)
-    kv = jnp.einsum("bsl,lhe->bshe", ccg, p["wkv_b"])
+    qq = jnp.concatenate([q_nope, q_rope], -1)
+    o = backend.mla_prefill_attend(qq, cc, cr, p["wkv_b"], tables, start,
+                                   n_live, nope=nope, q_block=q_block,
+                                   unroll=unroll)
+    return jnp.einsum("bshe,hed->bsd", o, p["wo"]), {"ckv": cc, "krope": cr}
+
+
+def mla_materialized_prefill_attend(q, ckv_pages, krope_pages, wkv_b, tables,
+                                    start, n_live, *, nope: int,
+                                    q_block: int = 512, unroll: bool = False):
+    """The reference MLA prefill attend: gather the (post-write) latent
+    pages, materialize per-head K/V from them with ``wkv_b`` exactly as
+    ``mla_full_block`` does — so a cached prefix or an earlier chunk is read
+    as if this call had prefilled it itself — and run the chunked XLA
+    attend.  q: [B, T, H, nope+rope] (rope part already roped).  Returns the
+    attended values [B, T, H, v_head_dim]."""
+    rope_d = q.shape[-1] - nope
+    ccg = gather_pages(ckv_pages, tables)
+    crg = gather_pages(krope_pages, tables)
+    kv = jnp.einsum("bsl,lhe->bshe", ccg, wkv_b)
     k_nope, v = kv[..., :nope], kv[..., nope:]
     k = jnp.concatenate(
         [k_nope, jnp.broadcast_to(crg[:, :, None, :],
                                   k_nope.shape[:-1] + (rope_d,))], -1)
-    qq = jnp.concatenate([q_nope, q_rope], -1)
-    o = backend.prefill_attend(qq, k, v, causal=True, q_block=q_block,
-                               q_offset=start, unroll=unroll)
-    return jnp.einsum("bshe,hed->bsd", o, p["wo"]), {"ckv": cc, "krope": cr}
+    return chunked_attention(q, k, v, causal=True, q_block=q_block,
+                             q_offset=start, unroll=unroll)
 
 
 def mla_paged_decode_block(cfg: ArchConfig, p, x, cache, meta, freqs,

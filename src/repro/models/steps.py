@@ -118,12 +118,15 @@ def make_serve_step(cfg: ArchConfig, mesh: Optional[Mesh], kind: str,
          (see repro.serving; {} stands in for an absent pool).  ``meta`` is
          the flat per-step metadata pytree from ``attn_backend.decode_meta``
          (page-table rows, positions, precomputed write targets).
-       kind='prefill_paged': step(params, kv, state, tables, slots, start,
-         n_tail, tokens, extras) -> (logits, new_kv, new_state) — batched
-         tail prefill at offset ``start`` straight into the pools; positions
-         < start are read from already-resident pages (radix prefix cache
-         hits), recurrent/cross state is scattered into rows ``slots``, and
-         ``extras`` carries frontend inputs (frames / image_embeds).
+       kind='prefill_paged': step(params, kv, state, meta, tokens, extras)
+         -> (logits, new_kv, new_state) — batched chunk prefill straight
+         into the pools.  ``meta`` is the flat per-step metadata pytree from
+         ``attn_backend.prefill_meta`` (page tables, slot rows, per-row
+         chunk offsets + live counts, precomputed write targets): positions
+         < start are read from already-resident pages — radix prefix-cache
+         hits and earlier chunks alike — recurrent/cross state is scattered
+         into the slot rows, and ``extras`` carries frontend inputs
+         (frames / image_embeds).
 
        ``attn_backend`` selects the paged-attention backend the paged kinds
        route through (``reference`` gather+attend | ``pallas`` fused decode
@@ -143,10 +146,16 @@ def make_serve_step(cfg: ArchConfig, mesh: Optional[Mesh], kind: str,
             return nxt, kv, state
         return step
     if kind == "prefill_paged":
-        def step(params, kv, state, tables, slots, start, n_tail, tokens,
-                 extras):
-            return model.prefill_paged(params, kv, state, tables, slots,
-                                       start, n_tail, tokens, extras, mesh)
+        def step(params, kv, state, meta, tokens, extras):
+            return model.prefill_paged(params, kv, state, meta, tokens,
+                                       extras, mesh)
+        return step
+    if kind == "prefill_paged_cont":
+        # continuation chunks of a long prompt: pure page work — enc-dec
+        # skips the encoder and reads its pinned cross K/V from the slots
+        def step(params, kv, state, meta, tokens, extras):
+            return model.prefill_paged(params, kv, state, meta, tokens,
+                                       extras, mesh, continuation=True)
         return step
     if kind == "prefill_at":
         def step(params, batch, last_idx):

@@ -571,10 +571,10 @@ class DecoderLM:
         return self.attn_backend.paged_decode(self.cfg, p["attn"], h, c, meta,
                                               freqs)
 
-    def _paged_attn_prefill(self, p, h, c, tables, start, n_live, freqs):
+    def _paged_attn_prefill(self, p, h, c, meta, freqs):
         cfg = self.cfg
         return self.attn_backend.paged_prefill(
-            cfg, p["attn"], h, c, tables, start, n_live, freqs,
+            cfg, p["attn"], h, c, meta, freqs,
             q_block=cfg.attn_q_block, unroll=cfg.unroll)
 
     def decode_paged(self, params, kv, state, meta, tokens, mesh=None):
@@ -651,26 +651,32 @@ class DecoderLM:
         logits = lm_logits(cfg, params["embed"], x)
         return logits, new_kv, state
 
-    def prefill_paged(self, params, kv, state, tables, slots, start, n_tail,
-                      tokens, extras=None, mesh=None):
-        """Tail prefill at an offset, straight into the paged pool and/or the
-        state-slot pool.
+    def prefill_paged(self, params, kv, state, meta, tokens, extras=None,
+                      mesh=None, continuation: bool = False):
+        """Chunk prefill at an offset, straight into the paged pool and/or
+        the state-slot pool.  ``continuation`` is a no-op for decoder-only
+        models (chunks after the first are already pure page work); enc-dec
+        overrides it to skip the per-chunk encoder forward.
 
         kv: layer-stacked paged pool ({} for state-slot families); state:
-        layer-stacked per-slot state ({} for paged families); tables: [B,
-        maxp] int32 per-request page tables; slots: [B] int32 decode-row /
-        state-slot indices (out-of-range rows — batch padding — scatter
-        nothing); start: [B] int32 absolute position of ``tokens[:, 0]``;
-        n_tail: [B] int32 count of real tail tokens (``tokens`` is
-        right-padded to a bucket); tokens: [B, T] int32; extras: optional
+        layer-stacked per-slot state ({} for paged families); meta: the flat
+        per-step metadata pytree from ``attn_backend.prefill_meta`` —
+        page-table rows, state-slot / decode-row indices (out-of-range rows
+        — batch padding — scatter nothing), per-row chunk offsets ``start``
+        (absolute position of ``tokens[:, 0]``), live counts ``n_tail``
+        (``tokens`` is right-padded to a bucket), and the precomputed
+        physical write target of every chunk position, derived once by the
+        engine instead of per layer; tokens: [B, T] int32; extras: optional
         frontend inputs ({"image_embeds": [B, n_img, D]} for vlm).
 
-        With ``start == 0`` this is a full prompt prefill; with ``start > 0``
-        (prefix-cacheable families only) the first ``start`` positions are
-        read from pages already resident in the pool and only the tail is
-        computed.  Padding rows/positions write to the null page.  Returns
-        (last-real-token logits [B, V], new_kv, new_state)."""
+        With ``start == 0`` this is a full (or first-chunk) prompt prefill;
+        with ``start > 0`` the first ``start`` positions are read from pages
+        already resident in the pool — radix prefix-cache hits and earlier
+        chunks of the same prompt alike.  Padding rows/positions write to
+        the null page.  Returns (last-real-token logits [B, V], new_kv,
+        new_state)."""
         cfg = self.cfg
+        slots, n_tail = meta["slots"], meta["n_tail"]
         if cfg.family in ("ssm", "hybrid"):
             return self._prefill_state_slots(params, kv, state, slots, n_tail,
                                              tokens, mesh)
@@ -688,16 +694,14 @@ class DecoderLM:
 
         def dense_step(x, p, c):
             h = apply_norm(cfg, p["ln1"], x)
-            a, c2 = self._paged_attn_prefill(p, h, c, tables, start, n_live,
-                                             freqs)
+            a, c2 = self._paged_attn_prefill(p, h, c, meta, freqs)
             x = x + a
             x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x))
             return x, c2
 
         def moe_step(x, p, c):
             h = apply_norm(cfg, p["ln1"], x)
-            a, c2 = self._paged_attn_prefill(p, h, c, tables, start, n_live,
-                                             freqs)
+            a, c2 = self._paged_attn_prefill(p, h, c, meta, freqs)
             x = x + a
             m, _ = moe_apply(cfg, p["moe"], apply_norm(cfg, p["ln2"], x),
                              mesh=mesh)

@@ -16,16 +16,24 @@ pinned cross cache.  Prefill writes straight into the pools
 (``prefill_paged``): each admitted request's pages/slot are bound up front
 and the prompt — or, with the radix prefix cache enabled, only its uncached
 tail — is computed at a bucketed length; several same-bucket queued requests
-are admitted in one batched prefill call.  The engine compiles a bounded
-program set: one tail prefill per (length bucket, pow2 admission batch), one
-fixed-shape ``[max_slots]`` paged decode step, and one page-copy (COW fork)
-kernel — traffic mix never triggers recompilation, and the jitted steps are
-cached per (``ArchConfig``, attention backend) so every Engine instance (and
-test) reuses them.  The decode step's paged attention routes through the
-backend registry (``ServeConfig.attn_backend``: ``auto|reference|pallas``,
-see ``models.attn_backend``), and the engine hands it flat per-step metadata
-— page-table rows, positions, and the new token's physical write target,
-derived once on the host per step instead of per layer.
+are admitted in one batched prefill call.  With
+``ServeConfig.prefill_chunk_tokens > 0`` long prompts prefill in
+page-aligned *chunks* that interleave with decode steps (see
+``scheduler``): a mid-prefill request keeps its pages and an ``n_filled``
+cursor, completed pages publish to the radix cache after every chunk, and
+the first token comes from the final chunk's logits.  The engine compiles a
+bounded program set: one chunk prefill per (length bucket, pow2 admission
+batch) — with chunking, shapes are keyed by the chunk budget, never by
+individual prompt lengths — one fixed-shape ``[max_slots]`` paged decode
+step, and one page-copy (COW fork) kernel — traffic mix never triggers
+recompilation, and the jitted steps are cached per (``ArchConfig``,
+attention backend) so every Engine instance (and test) reuses them.  The
+paged attends route through the backend registry
+(``ServeConfig.attn_backend``: ``auto|reference|pallas``, see
+``models.attn_backend``), and the engine hands each step flat per-step
+metadata (``decode_meta`` / ``prefill_meta``) — page-table rows, positions,
+physical write targets — derived once on the host per step instead of per
+layer.
 
 Frontend inputs for enc-dec (audio frames) and vlm (image embeddings) archs
 are synthesized *per request id* (``fold_in(seed key, rid)``, fixed shapes),
@@ -52,7 +60,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig, ServeConfig
-from ..models.attn_backend import decode_meta, resolve_backend
+from ..models.attn_backend import decode_meta, prefill_meta, resolve_backend
 from ..models.params import init_tree
 from ..models.registry import build_model, init_cache, init_params
 from ..models.steps import make_serve_step
@@ -123,6 +131,8 @@ def _paged_steps(cfg: ArchConfig, mesh=None, attn_backend: str = "reference"):
     always rebind them."""
     return (jax.jit(make_serve_step(cfg, mesh, "prefill_paged", attn_backend),
                     donate_argnums=(1, 2)),
+            jax.jit(make_serve_step(cfg, mesh, "prefill_paged_cont",
+                                    attn_backend), donate_argnums=(1, 2)),
             jax.jit(make_serve_step(cfg, mesh, "decode_paged", attn_backend),
                     donate_argnums=(1, 2)),
             jax.jit(_copy_page_fn, donate_argnums=(0,)))
@@ -177,12 +187,22 @@ class Engine:
         self.sched = Scheduler(self.scfg, self.pool, self.radix, self.states)
         self._next_rid = 0
         self.attn_backend = resolve_backend(self.scfg.attn_backend)
-        self._prefill, self._decode, self._copy = _paged_steps(
-            cfg, mesh, self.attn_backend)
+        self._prefill, self._prefill_cont, self._decode, self._copy = \
+            _paged_steps(cfg, mesh, self.attn_backend)
         self._prefill_steps = 0
         self._multi_admit_steps = 0
+        self._chunk_steps = 0              # continuation-chunk prefill calls
         self._restores = 0
         self._decode_times: List[float] = []
+        # prefill work accounting: padded counts what the device computed
+        # (pow2 rows x bucket), actual counts real prompt tokens — the gap is
+        # padding waste, the thing chunking + bucketing are trading against
+        self._prefill_padded_tokens = 0
+        self._prefill_actual_tokens = 0
+        # decode-stall bookkeeping: wall time decode-ready slots spend parked
+        # behind non-decode steps (the head-of-line cost chunking bounds)
+        self._stall_accum = 0.0
+        self._decode_stalls: List[float] = []
 
     # ----------------------------------------------------------- public API
 
@@ -203,17 +223,27 @@ class Engine:
         return rid
 
     def step(self) -> bool:
-        """Run one scheduler action (a prefill, restore, or decode). False
-        when idle."""
+        """Run one scheduler action (a prefill, a continuation chunk, a
+        restore, or a decode). False when idle."""
         action = self.sched.next_action()
         if action is None:
             return False
+        waiting = bool(self.sched.decode_ready())
+        t0 = time.perf_counter()
         if action[0] == "prefill":
             self._run_prefill(action[1])
+        elif action[0] == "prefill_chunk":
+            self._run_chunks(action[1])
         elif action[0] == "restore":
             self._run_restore(action[1])
         else:
             self._run_decode(action[1])
+        if action[0] == "decode":
+            self._decode_stalls.append(self._stall_accum)
+            self._stall_accum = 0.0
+        elif waiting:
+            # decode-ready slots sat out this step: head-of-line stall
+            self._stall_accum += time.perf_counter() - t0
         return True
 
     def collect(self) -> List[RequestResult]:
@@ -246,7 +276,22 @@ class Engine:
         metrics = _aggregate(results, wall)
         metrics["prefill_steps"] = self._prefill_steps
         metrics["multi_admit_prefills"] = self._multi_admit_steps
+        metrics["chunked_prefill_steps"] = self._chunk_steps
         metrics["state_restores"] = self._restores
+        # prefill padding waste: what the pow2-row x bucket padding cost on
+        # top of the real prompt tokens (the old metrics counted padded
+        # tokens as work; these two keep them apart)
+        metrics["prefill_padded_tokens"] = self._prefill_padded_tokens
+        metrics["prefill_actual_tokens"] = self._prefill_actual_tokens
+        metrics["prefill_padding_waste"] = 1.0 - (
+            self._prefill_actual_tokens
+            / max(self._prefill_padded_tokens, 1))
+        # head-of-line visibility: how long decode-ready slots sat parked
+        # behind prefill work (chunking exists to bound this)
+        stalls = self._decode_stalls or [0.0]
+        metrics["decode_stall_ms_p50"] = _percentile(stalls, 50) * 1e3
+        metrics["decode_stall_ms_p95"] = _percentile(stalls, 95) * 1e3
+        metrics["decode_stall_ms_max"] = max(stalls) * 1e3
         # decode hot-loop visibility: which attention backend served this run
         # and how long one fixed-shape decode step takes (percentiles)
         metrics["attn_backend"] = self.attn_backend
@@ -274,56 +319,117 @@ class Engine:
         key = "frames" if cfg.enc_dec else "image_embeds"
         return {key: jnp.asarray(out)}
 
-    def _run_prefill(self, adms: List[Admission]) -> None:
-        """Execute a batch of already-accounted admissions: fork COW pages if
-        a cache match ended mid-page, then prefill every uncached tail
-        straight into the bound pages / state slots in one call (the batch is
-        padded to a pow2 row count so the program set stays bounded)."""
-        for adm in adms:
-            if adm.cow_dst is not None:
-                self.pool.kv = self._copy(self.pool.kv,
-                                          jnp.asarray(adm.cow_src, jnp.int32),
-                                          jnp.asarray(adm.cow_dst, jnp.int32))
-        tails = [adm.req.prompt[adm.n_matched:] for adm in adms]
-        bucket = self.scfg.bucket_of(max(len(t) for t in tails))
-        B = _pow2_pad(len(adms), self.scfg.max_slots)
+    def _prefill_call(self, rows: List[Tuple[int, Any, int, int]],
+                      continuation: bool = False) -> np.ndarray:
+        """Run one batched chunk-prefill call.  ``rows`` holds
+        (slot_idx, req, n_done, n_chunk): each row prefills prompt tokens
+        [n_done, n_done + n_chunk) into its bound pages / state slot.  The
+        batch is padded to a pow2 row count and the tokens to a bucket so
+        the program set stays bounded (keyed by the chunk budget, not by
+        prompt lengths).  ``continuation`` marks a batch of chunks after
+        the first: no frontend inputs (vlm never chunks, enc-dec reads its
+        pinned cross cache instead of re-encoding).  Returns the per-row
+        last-real-token logits."""
+        bucket = self.scfg.bucket_of(max(c for _, _, _, c in rows))
+        B = _pow2_pad(len(rows), self.scfg.max_slots)
         toks = np.zeros((B, bucket), np.int32)
         start = np.zeros((B,), np.int32)
         n_tail = np.zeros((B,), np.int32)
         tables = np.full((B, max(self.pool.table_width, 1)), NULL_PAGE,
                          np.int32)
         slots = np.full((B,), self.scfg.max_slots, np.int32)  # pad rows: drop
-        for i, (adm, tail) in enumerate(zip(adms, tails)):
-            toks[i, :len(tail)] = tail
-            start[i] = adm.n_matched
-            n_tail[i] = len(tail)
-            tables[i] = adm.table
-            slots[i] = adm.slot_idx
+        for i, (slot_idx, req, n_done, n_chunk) in enumerate(rows):
+            toks[i, :n_chunk] = req.prompt[n_done:n_done + n_chunk]
+            start[i] = n_done
+            n_tail[i] = n_chunk
+            tables[i] = self.sched.slots[slot_idx].table
+            slots[i] = slot_idx
+        # token-addressable families attend only pages the batch actually
+        # reaches: truncate the table view to a pow2 page count (bounded
+        # program set) instead of always paying a max_len-wide gather — an
+        # early chunk of a long prompt, or a short prompt under a large
+        # max_len, attends O(its own length), not O(max_len)
+        ps = self.scfg.page_size
+        width = tables.shape[1]
+        if not self.cfg.sliding_window:        # ring tables are minimal already
+            need = -(-(int((start + n_tail).max())
+                       + self.pool.spec.prefix_tokens) // ps)
+            W = 1
+            while W < need:
+                W *= 2
+            width = max(min(W, tables.shape[1]), 1)
+        meta = {k: jnp.asarray(v) for k, v in prefill_meta(
+            self.cfg, ps, tables[:, :width], slots, start, n_tail,
+            bucket).items()}
         state = self.states.state if self.states is not None else {}
-        extras = self._extras([adm.req.rid for adm in adms], B)
-        logits, self.pool.kv, state = self._prefill(
-            self.params, self.pool.kv, state, jnp.asarray(tables),
-            jnp.asarray(slots), jnp.asarray(start), jnp.asarray(n_tail),
-            jnp.asarray(toks), extras)
+        extras = {} if continuation \
+            else self._extras([req.rid for _, req, _, _ in rows], B)
+        step = self._prefill_cont if continuation and self.cfg.enc_dec \
+            else self._prefill
+        logits, self.pool.kv, state = step(
+            self.params, self.pool.kv, state, meta, jnp.asarray(toks), extras)
         if self.states is not None:
             self.states.state = state
-        logits = np.asarray(logits)
+        self._prefill_padded_tokens += B * bucket
+        self._prefill_actual_tokens += sum(c for _, _, _, c in rows)
+        return np.asarray(logits)
+
+    def _after_chunk(self, slot_idx: int, req, n_done: int, n_chunk: int,
+                     logits_row: Optional[np.ndarray], now: float,
+                     pages: List[int]) -> None:
+        """Advance a slot's prefill cursor past one chunk: publish the newly
+        completed full prompt pages (immutable from here on — later chunks
+        and decode write strictly past them, so a same-prefix request queued
+        behind a long prompt starts hitting the cache mid-prefill), and on
+        the final chunk take the first token from this call's logits."""
+        slot = self.sched.slots[slot_idx]
+        slot.n_filled = n_done + n_chunk
+        if self.radix is not None:
+            ps = self.scfg.page_size
+            full = min(slot.n_filled, len(req.prompt)) // ps
+            if full:
+                self.radix.insert(req.prompt[:full * ps], pages[:full])
+        if slot.n_filled >= len(req.prompt):
+            req.t_first = now
+            req.generated.append(int(logits_row.argmax()))
+            self._maybe_retire(slot_idx, now)
+
+    def _run_prefill(self, adms: List[Admission]) -> None:
+        """Execute a batch of already-accounted admissions: fork COW pages if
+        a cache match ended mid-page, then prefill each request's *first
+        chunk* — the whole uncached tail unless chunking caps it — straight
+        into the bound pages / state slots in one call."""
+        for adm in adms:
+            if adm.cow_dst is not None:
+                self.pool.kv = self._copy(self.pool.kv,
+                                          jnp.asarray(adm.cow_src, jnp.int32),
+                                          jnp.asarray(adm.cow_dst, jnp.int32))
+        rows = [(adm.slot_idx, adm.req, adm.n_matched, adm.n_chunk)
+                for adm in adms]
+        logits = self._prefill_call(rows)
         now = time.perf_counter()
         self._prefill_steps += 1
         if len(adms) > 1:
             self._multi_admit_steps += 1
         for i, adm in enumerate(adms):
-            req = adm.req
-            req.t_first = now
-            req.generated.append(int(logits[i].argmax()))
-            if self.radix is not None:
-                # publish the full prompt pages for reuse (they are immutable
-                # for the slot's lifetime: decode writes land strictly past)
-                full = len(req.prompt) // self.scfg.page_size
-                if full:
-                    self.radix.insert(req.prompt[:full * self.scfg.page_size],
-                                      adm.pages[:full])
-            self._maybe_retire(adm.slot_idx, now)
+            self._after_chunk(adm.slot_idx, adm.req, adm.n_matched,
+                              adm.n_chunk, logits[i], now, adm.pages)
+
+    def _run_chunks(self, slot_idxs: List[int]) -> None:
+        """Execute a batch of continuation chunks for mid-prefill slots."""
+        rows = []
+        for i in slot_idxs:
+            slot = self.sched.slots[i]
+            n_done = slot.n_filled
+            n_chunk = self.sched._chunk_len(n_done, len(slot.req.prompt))
+            rows.append((i, slot.req, n_done, n_chunk))
+        logits = self._prefill_call(rows, continuation=True)
+        now = time.perf_counter()
+        self._prefill_steps += 1
+        self._chunk_steps += 1
+        for r, (i, req, n_done, n_chunk) in enumerate(rows):
+            self._after_chunk(i, req, n_done, n_chunk, logits[r], now,
+                              self.sched.slots[i].pages)
 
     def _run_restore(self, adm: Admission) -> None:
         """Re-admit a checkpointed (preempted) request: write its state

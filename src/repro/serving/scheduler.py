@@ -20,9 +20,21 @@ Policy (SGLang/Orca-style, simplified to a synchronous loop):
   the window), zero for pure state-slot families.  State-slot families
   (SSM / RG-LRU hybrids, the enc-dec cross cache) additionally claim one
   ``StateSlotPool`` slot, whose index is the decode row.
-* **Decode**: otherwise every live slot advances one token in a single
-  fixed-shape jitted step; idle slots ride along masked (their page-table
-  rows point at the null page).
+* **Chunked prefill** (``ServeConfig.prefill_chunk_tokens > 0``, paged
+  text-prompt families): a prompt longer than the budget is prefilled in
+  page-aligned *chunks* that interleave Sarathi-style with decode steps —
+  after any prefill step, a decode step runs whenever a slot is decode-ready,
+  so one long prompt can never head-of-line-block every live request for its
+  whole prefill.  A mid-prefill request stays resident in its slot with all
+  its pages and an ``n_filled`` cursor; it joins the decode batch only once
+  the cursor reaches the prompt end (and earns its first token from that
+  final chunk's logits).  Continuation chunks batch like admissions do
+  (same-bucket, oldest first, capped at the budget), and completed pages
+  publish to the radix cache after every chunk, so a same-prefix request
+  queued behind a long prompt starts hitting the cache mid-prefill.
+* **Decode**: otherwise every decode-ready slot advances one token in a
+  single fixed-shape jitted step; idle slots ride along masked (their
+  page-table rows point at the null page).
 * **Growth / eviction / preemption**: a slot crossing a page boundary gets a
   fresh page from the free list — unless it has reached the ring horizon, in
   which case the table entry it is about to write already points at the page
@@ -80,12 +92,20 @@ class Slot:
     admit_seq: int                        # admission order (preemption victim key)
     nodes: List[RadixNode] = dataclasses.field(default_factory=list)
     n_shared: int = 0                     # leading pages shared via the cache
+    n_filled: int = 0                     # prompt tokens resident (cached +
+                                          # prefilled); < len(prompt) means
+                                          # the slot is mid-chunked-prefill
+                                          # and not yet decode-ready
+
+    @property
+    def prefilling(self) -> bool:
+        return self.n_filled < len(self.req.prompt)
 
 
 @dataclasses.dataclass
 class Admission:
     """An admission the scheduler has fully accounted; the engine only has to
-    run the device work (COW copy + tail prefill, or a state restore)."""
+    run the device work (COW copy + chunk prefill, or a state restore)."""
     slot_idx: int
     req: Request
     n_matched: int                        # cached prompt tokens (incl. COW)
@@ -93,6 +113,8 @@ class Admission:
     cow_dst: Optional[int]                # exclusively-owned fork target
     table: np.ndarray                     # the bound slot's page table
     pages: List[int]                      # shared + exclusive pages, in order
+    n_chunk: int = 0                      # first-chunk tokens to prefill (the
+                                          # whole tail when chunking is off)
     restore: Optional[Tuple[int, Any]] = None   # checkpointed (pos, state)
 
 
@@ -108,6 +130,14 @@ class Scheduler:
         self.slots: List[Optional[Slot]] = [None] * scfg.max_slots
         self.finished: List[Request] = []
         self._admit_seq = 0
+        # chunked prefill applies to families whose prompt KV is
+        # token-addressable pages at text positions: recurrent state must be
+        # carried through a whole prompt in one call, and the vlm image
+        # prefix belongs to the first hidden positions of one call
+        self.chunk: int = (scfg.chunk_tokens
+                           if pool.spec.paged and not pool.spec.prefix_tokens
+                           else 0)
+        self._last_was_prefill = False
 
     # ------------------------------------------------------------- inventory
 
@@ -124,29 +154,61 @@ class Scheduler:
     def active_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is not None]
 
+    def decode_ready(self) -> List[int]:
+        """Slots whose prompt KV is fully resident — the decode batch.
+        Mid-chunked-prefill slots ride along masked (null-page tables would
+        be wrong: they own real pages, they just haven't earned a first
+        token yet)."""
+        return [i for i, s in enumerate(self.slots)
+                if s is not None and not s.prefilling]
+
+    def prefilling_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots)
+                if s is not None and s.prefilling]
+
     def free_slot(self) -> Optional[int]:
         for i, s in enumerate(self.slots):
             if s is None:
                 return i
         return None
 
+    def _chunk_len(self, n_done: int, n_prompt: int) -> int:
+        """Length of the next prefill chunk for a prompt with ``n_done``
+        tokens already resident: everything that's left when chunking is
+        off, else up to the budget, ending on a page boundary (so completed
+        pages can publish to the radix cache) unless the prompt ends first.
+        A cache hit can leave ``n_done`` mid-page (COW); alignment recovers
+        at the first chunk boundary."""
+        if not self.chunk:
+            return n_prompt - n_done
+        ps = self.scfg.page_size
+        end = min(n_prompt, (n_done + self.chunk) // ps * ps)
+        if end <= n_done:                  # can't happen with chunk >= ps;
+            end = min(n_prompt, n_done + self.chunk)   # guard anyway
+        return end - n_done
+
     # ------------------------------------------------------------ scheduling
 
     def next_action(self) -> Optional[Tuple]:
-        """('prefill', [Admission, ...]) | ('restore', Admission)
-        | ('decode', [slot_idx, ...]) | None."""
-        if self.queue:
-            adms = self.try_admit_batch()
-            if adms:
-                if adms[0].restore is not None:
-                    return ("restore", adms[0])
-                return ("prefill", adms)
-        active = self.active_slots()
-        if active:
-            self._grow_pages()
-            active = self.active_slots()          # growth may have preempted
-            if active:
-                return ("decode", active)
+        """('prefill', [Admission, ...]) | ('prefill_chunk', [slot_idx, ...])
+        | ('restore', Admission) | ('decode', [slot_idx, ...]) | None.
+
+        Without chunking, prefill has strict priority over decode (keeping
+        slots full is what buys continuous batching its throughput).  With a
+        chunk budget set, steps interleave Sarathi-style instead: a prefill
+        step (admission or continuation chunk) is followed by a decode step
+        whenever any slot is decode-ready, so a long prompt advances one
+        bounded chunk at a time instead of stalling every live request for
+        its whole prefill."""
+        order = ("prefill", "decode")
+        if self.chunk and self._last_was_prefill and self.decode_ready():
+            order = ("decode", "prefill")
+        for phase in order:
+            act = self._prefill_action() if phase == "prefill" \
+                else self._decode_action()
+            if act is not None:
+                self._last_was_prefill = act[0] != "decode"
+                return act
         if self.queue:
             # no slot/page capacity and nothing running to free any.  If the
             # prefix cache is what holds the pool (cache_eviction="none", or
@@ -154,19 +216,63 @@ class Scheduler:
             # flush the tree's references and retry once before giving up.
             if self.radix is not None and self.radix.num_nodes:
                 self.radix.reset()
-                adms = self.try_admit_batch()
-                if adms:
-                    return ("prefill", adms)
+                act = self._prefill_action()
+                if act is not None:
+                    self._last_was_prefill = True
+                    return act
             raise RuntimeError(
                 f"scheduler deadlock: request {self.queue[0].rid} needs "
                 f"{self.pool.pages_for(len(self.queue[0].prompt))} pages, "
                 f"pool has {self.pool.num_free} free and no live slots")
         return None
 
+    def _prefill_action(self) -> Optional[Tuple]:
+        """Admissions first (keeping slots full is what buys continuous
+        batching its throughput), then continuation chunks of already-
+        admitted prompts."""
+        if self.queue:
+            adms = self.try_admit_batch()
+            if adms:
+                if adms[0].restore is not None:
+                    return ("restore", adms[0])
+                return ("prefill", adms)
+        chunks = self._chunk_batch()
+        if chunks:
+            return ("prefill_chunk", chunks)
+        return None
+
+    def _decode_action(self) -> Optional[Tuple]:
+        if not self.decode_ready():
+            return None
+        self._grow_pages()
+        active = self.decode_ready()              # growth may have preempted
+        return ("decode", active) if active else None
+
+    def _chunk_batch(self) -> List[int]:
+        """Continuation chunks, oldest admissions first: consecutive
+        mid-prefill slots whose next chunk lands in the same bucket are
+        batched, up to the per-step token budget."""
+        jobs: List[int] = []
+        bucket: Optional[int] = None
+        total = 0
+        for i in sorted(self.prefilling_slots(),
+                        key=lambda i: self.slots[i].admit_seq):
+            slot = self.slots[i]
+            c = self._chunk_len(slot.n_filled, len(slot.req.prompt))
+            b = self.scfg.bucket_of(c)
+            if bucket is not None and b != bucket:
+                break
+            if jobs and total + c > self.chunk:
+                break
+            jobs.append(i)
+            bucket, total = b, total + c
+        return jobs
+
     def try_admit_batch(self) -> List[Admission]:
         """Drain the queue head into one prefill: consecutive requests whose
-        tails share a bucket are admitted together (each one individually
-        all-or-nothing).  A checkpointed request is admitted alone — its
+        first chunks share a bucket are admitted together (each one
+        individually all-or-nothing), capped at the per-step token budget
+        when chunking is on.  A checkpointed request is admitted alone — its
         action is a state restore, not a prefill.  With the prefix cache on,
         a request whose prompt pages an *earlier admission in this batch* is
         about to publish waits a step instead, so it re-matches as a cache
@@ -174,6 +280,7 @@ class Scheduler:
         adms: List[Admission] = []
         bucket: Optional[int] = None
         ps = self.scfg.page_size
+        total = 0
         pending_keys: set = set()
         while self.queue:
             head = self.queue[0]
@@ -183,28 +290,31 @@ class Scheduler:
                     if adm is not None:
                         adms.append(adm)
                 break
-            n_tail = len(head.prompt)
+            n_matched = 0
             match = None
             keys = set()
             if self.radix is not None:
-                # one probe (clock-touches only) finds the tail bucket and is
-                # reused by try_admit below — nothing mutates in between
+                # one probe (clock-touches only) finds the chunk bucket and
+                # is reused by try_admit below — nothing mutates in between
                 match = self.radix.match(head.prompt, len(head.prompt) - 1)
-                n_tail -= match.n_matched
+                n_matched = match.n_matched
                 # a radix node is its token *prefix*: key the pages this
                 # prompt would publish by their cumulative prefixes
                 keys = {tuple(head.prompt[:(j + 1) * ps])
                         for j in range(len(head.prompt) // ps)}
                 if keys & pending_keys:
                     break
-            b = self.scfg.bucket_of(n_tail)
+            c = self._chunk_len(n_matched, len(head.prompt))
+            b = self.scfg.bucket_of(c)
             if bucket is not None and b != bucket:
+                break
+            if self.chunk and adms and total + c > self.chunk:
                 break
             adm = self.try_admit(match)
             if adm is None:
                 break
             adms.append(adm)
-            bucket = b
+            bucket, total = b, total + c
             pending_keys |= keys
         return adms
 
@@ -222,7 +332,8 @@ class Scheduler:
             # checkpointable families are page-free: a slot is all it needs
             self.queue.popleft()
             pos, _ = req.checkpoint
-            slot = self.bind(idx, req, [], pos=pos)
+            slot = self.bind(idx, req, [], pos=pos,
+                             n_filled=len(req.prompt))
             adm = Admission(slot_idx=idx, req=req, n_matched=0, cow_src=None,
                             cow_dst=None, table=slot.table, pages=[],
                             restore=req.checkpoint)
@@ -259,23 +370,25 @@ class Scheduler:
         pages = shared + fresh
         slot = self.bind(idx, req, pages,
                          pos=self.pool.spec.prefix_tokens + n, nodes=nodes,
-                         n_shared=len(shared))
+                         n_shared=len(shared), n_filled=n_matched)
         req.cached_tokens = n_matched
         return Admission(slot_idx=idx, req=req, n_matched=n_matched,
                          cow_src=cow_src,
                          cow_dst=fresh[0] if cow_len else None,
-                         table=slot.table, pages=pages)
+                         table=slot.table, pages=pages,
+                         n_chunk=self._chunk_len(n_matched, n))
 
     # ----------------------------------------------------- slot transitions
 
     def bind(self, slot_idx: int, req: Request, pages: List[int], pos: int,
              nodes: Optional[List[RadixNode]] = None,
-             n_shared: int = 0) -> Slot:
+             n_shared: int = 0, n_filled: Optional[int] = None) -> Slot:
         table = self.pool.new_table()
         table[:len(pages)] = pages
         slot = Slot(req=req, pos=pos, table=table, pages=pages,
                     admit_seq=self._admit_seq, nodes=list(nodes or []),
-                    n_shared=n_shared)
+                    n_shared=n_shared,
+                    n_filled=len(req.prompt) if n_filled is None else n_filled)
         self._admit_seq += 1
         self.slots[slot_idx] = slot
         if self.states is not None:
@@ -342,6 +455,9 @@ class Scheduler:
             slot = self.slots[i]
             if slot is None:
                 continue
+            if slot.prefilling:
+                continue                   # all prompt pages bound at admission;
+                                           # the decode page can wait its turn
             if len(slot.pages) >= cap:
                 continue                   # ring horizon: recycle in place
             if slot.pos % ps != 0 or slot.pos // ps < len(slot.pages):

@@ -127,9 +127,11 @@ def test_registry_contract():
     with pytest.raises(ValueError):
         resolve_backend("cuda")
     assert get_backend("pallas").name == "pallas"
-    # pallas inherits the reference prefill core (decode is the fused part)
+    # pallas fuses all four cores now: decode (PR 4) and ragged prefill
     assert type(get_backend("pallas")).prefill_attend \
-        is type(get_backend("reference")).prefill_attend
+        is not type(get_backend("reference")).prefill_attend
+    assert type(get_backend("pallas")).mla_prefill_attend \
+        is not type(get_backend("reference")).mla_prefill_attend
 
 
 def test_decode_meta_write_targets():

@@ -1,0 +1,217 @@
+"""Chunked-prefill scheduling invariants and chunk-boundary exactness.
+
+The contract under test: for *any* chunk budget — one page, unaligned
+budgets (rounded down to whole pages), budgets larger than every prompt —
+composed with the prefix cache on/off and preemption mid-prefill, the
+engine's greedy tokens are token-exact against the single-request static
+baseline, and the scheduler actually interleaves decode steps between a
+long prompt's chunks instead of head-of-line-blocking the decode batch.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ServeConfig, get_arch, reduced
+from repro.models.registry import init_params
+from repro.serving import Engine, generate_static
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _cfg(name="qwen2-0.5b"):
+    return dataclasses.replace(reduced(get_arch(name)), remat="none")
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(1, cfg.vocab, size=n).tolist() for n in lens]
+
+
+def test_chunk_tokens_rounds_to_pages():
+    scfg = ServeConfig(page_size=8, max_slots=2, max_len=32,
+                       prefill_chunk_tokens=12)
+    assert scfg.chunk_tokens == 8          # rounded down to whole pages
+    assert dataclasses.replace(scfg, prefill_chunk_tokens=3).chunk_tokens == 8
+    assert dataclasses.replace(scfg, prefill_chunk_tokens=0).chunk_tokens == 0
+    assert dataclasses.replace(scfg, prefill_chunk_tokens=24).chunk_tokens \
+        == 24
+
+
+@pytest.mark.parametrize("chunk", [8, 12, 24, 1000])
+@pytest.mark.parametrize("prefix_cache", [False, True])
+def test_chunked_exact_vs_static(chunk, prefix_cache):
+    """One page, unaligned, multi-page, and larger-than-every-prompt budgets
+    all yield token-exact output, cache on or off."""
+    cfg = _cfg()
+    scfg = ServeConfig(page_size=8, max_slots=4, max_len=64,
+                       prefill_chunk_tokens=chunk, prefix_cache=prefix_cache)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    prompts = _prompts(cfg, [50, 7, 33, 18, 26, 41])
+    budgets = [5, 8, 4, 7, 6, 3]
+    eng = Engine(cfg, scfg, params)
+    results, metrics = eng.run_offline(prompts, budgets)
+    ref, _ = generate_static(cfg, params, prompts, budgets, scfg,
+                             batch_size=1)
+    assert [r.tokens for r in results] == ref
+    if scfg.chunk_tokens and scfg.chunk_tokens < max(len(p) for p in prompts):
+        assert metrics["chunked_prefill_steps"] > 0
+    assert metrics["prefill_padded_tokens"] >= metrics[
+        "prefill_actual_tokens"] > 0
+    assert eng.pool.num_allocated == (
+        len(eng.radix.cached_pages) if eng.radix is not None else 0)
+
+
+@pytest.mark.parametrize("arch", ["starcoder2-7b", "deepseek-v2-236b",
+                                  "seamless-m4t-large-v2"])
+def test_chunked_families_exact_vs_static(arch):
+    """Chunk cursors thread through the windowed page ring, the MLA latent
+    pages, and the enc-dec decoder self-KV (continuation chunks skip the
+    encoder and cross-attend the pinned slot K/V)."""
+    cfg = _cfg(arch)
+    scfg = ServeConfig(page_size=8, max_slots=3, max_len=56,
+                       prefill_chunk_tokens=16)
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    prompts = _prompts(cfg, [40, 9, 26, 33], seed=3)
+    budgets = [4, 6, 5, 3]
+    eng = Engine(cfg, scfg, params, seed=0)
+    results, metrics = eng.run_offline(prompts, budgets)
+    assert metrics["chunked_prefill_steps"] > 0
+    ref, _ = generate_static(cfg, params, prompts, budgets, scfg,
+                             batch_size=1, seed=0)
+    assert [r.tokens for r in results] == ref
+
+
+def test_state_slot_families_ignore_chunk_budget():
+    """Recurrent state must absorb a whole prompt in one call: the budget is
+    a no-op for pure state-slot families, and serving stays exact."""
+    cfg = _cfg("mamba2-780m")
+    scfg = ServeConfig(page_size=8, max_slots=2, max_len=48,
+                       prefill_chunk_tokens=8)
+    params = init_params(cfg, jax.random.PRNGKey(3))
+    prompts = _prompts(cfg, [30, 11, 22], seed=4)
+    eng = Engine(cfg, scfg, params, seed=0)
+    assert eng.sched.chunk == 0
+    results, metrics = eng.run_offline(prompts, 5)
+    assert metrics["chunked_prefill_steps"] == 0
+    ref, _ = generate_static(cfg, params, prompts, 5, scfg, batch_size=1,
+                             seed=0)
+    assert [r.tokens for r in results] == ref
+
+
+def test_decode_interleaves_between_chunks():
+    """Sarathi-style mixed steps: while short requests hold decode slots, a
+    long prompt's continuation chunks must alternate with decode steps —
+    never two consecutive prefill steps while a slot sat decode-ready."""
+    cfg = _cfg()
+    scfg = ServeConfig(page_size=8, max_slots=4, max_len=96,
+                       prefill_chunk_tokens=16)
+    params = init_params(cfg, jax.random.PRNGKey(4))
+    prompts = _prompts(cfg, [10, 12, 9, 64], seed=5)   # long prompt last
+    budgets = [30, 30, 30, 4]
+    eng = Engine(cfg, scfg, params)
+    acts = []
+    orig = eng.sched.next_action
+
+    def wrapped():
+        a = orig()
+        if a is not None:
+            acts.append((a[0], bool(eng.sched.decode_ready())))
+        return a
+
+    eng.sched.next_action = wrapped
+    results, metrics = eng.run_offline(prompts, budgets)
+    assert metrics["chunked_prefill_steps"] > 0
+    for (kind_a, _), (kind_b, ready_b) in zip(acts, acts[1:]):
+        if kind_a != "decode" and kind_b != "decode":
+            assert not ready_b, (
+                "two consecutive prefill steps while decode-ready: "
+                f"{[k for k, _ in acts]}")
+    ref, _ = generate_static(cfg, params, prompts, budgets, scfg,
+                             batch_size=1)
+    assert [r.tokens for r in results] == ref
+
+
+def test_per_chunk_publish_feeds_prefix_cache():
+    """Completed pages publish after every chunk: an identical prompt queued
+    behind a long one (more requests than slots, so it admits later) hits
+    pages the first request published mid-prefill."""
+    cfg = _cfg()
+    scfg = ServeConfig(page_size=8, max_slots=1, max_len=64,
+                       prefill_chunk_tokens=8, prefix_cache=True)
+    params = init_params(cfg, jax.random.PRNGKey(5))
+    long = _prompts(cfg, [48], seed=6)[0]
+    prompts = [long, list(long)]
+    eng = Engine(cfg, scfg, params)
+    results, metrics = eng.run_offline(prompts, 4)
+    assert results[1].cached_tokens > 0
+    assert metrics["cached_tokens"] == results[1].cached_tokens
+    ref, _ = generate_static(cfg, params, prompts, 4, scfg, batch_size=1)
+    assert [r.tokens for r in results] == ref
+
+
+def test_preemption_mid_prefill_still_exact():
+    """A pool too small for every admitted request can preempt a slot that
+    is still mid-prefill; the replay must stay token-exact."""
+    cfg = _cfg()
+    # 2 slots x 8 pages/request worst case; give 9 pages (+ null)
+    scfg = ServeConfig(page_size=8, max_slots=2, max_len=64, num_pages=10,
+                       prefill_chunk_tokens=8)
+    params = init_params(cfg, jax.random.PRNGKey(6))
+    prompts = _prompts(cfg, [40, 35, 22, 17], seed=7)
+    budgets = [20, 18, 12, 9]
+    eng = Engine(cfg, scfg, params)
+    results, _ = eng.run_offline(prompts, budgets)
+    ref, _ = generate_static(cfg, params, prompts, budgets, scfg,
+                             batch_size=1)
+    assert [r.tokens for r in results] == ref
+    assert sum(r.n_preemptions for r in results) > 0
+    assert eng.pool.num_allocated == 0
+
+
+def test_decode_stall_metrics_present():
+    cfg = _cfg()
+    scfg = ServeConfig(page_size=8, max_slots=2, max_len=48)
+    params = init_params(cfg, jax.random.PRNGKey(7))
+    _, metrics = Engine(cfg, scfg, params).run_offline(
+        _prompts(cfg, [9, 30, 12], seed=8), 4)
+    for key in ("decode_stall_ms_p50", "decode_stall_ms_p95",
+                "decode_stall_ms_max", "prefill_padding_waste"):
+        assert key in metrics and metrics[key] >= 0
+
+
+# ------------------------------------------------------- property (hypothesis)
+
+def test_chunk_boundary_property():
+    """Any (prompt mix, chunk budget, cache flag) combination is token-exact
+    vs the static single-request baseline, including budgets of exactly one
+    page, unaligned budgets, and chunk == prompt."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(8))
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        lens=st.lists(st.integers(min_value=1, max_value=44), min_size=1,
+                      max_size=5),
+        chunk=st.integers(min_value=1, max_value=48),
+        prefix_cache=st.booleans(),
+        seed=st.integers(min_value=0, max_value=3),
+    )
+    def check(lens, chunk, prefix_cache, seed):
+        scfg = ServeConfig(page_size=8, max_slots=3, max_len=56,
+                           prefill_chunk_tokens=chunk,
+                           prefix_cache=prefix_cache)
+        prompts = _prompts(cfg, lens, seed=seed)
+        eng = Engine(cfg, scfg, params)
+        results, _ = eng.run_offline(prompts, 4)
+        ref, _ = generate_static(cfg, params, prompts, 4, scfg, batch_size=1)
+        assert [r.tokens for r in results] == ref
+        # no leaked pages: only the radix tree may still hold references
+        assert eng.pool.num_allocated == (
+            len(eng.radix.cached_pages) if eng.radix is not None else 0)
+
+    check()
