@@ -1,0 +1,160 @@
+"""Perf-regression gate over the BENCH_history.jsonl trajectory.
+
+``serve_throughput`` appends one summary line per run; this script compares
+the newest entry of each ``(arch, attn_backend)`` group against the *median*
+of that group's prior entries (median, not mean, so one historical outlier
+cannot poison the baseline) and exits nonzero when the newest run regressed:
+
+* ``tokens_per_s_continuous`` dropped more than 15%, or
+* ``decode_step_ms_p50`` rose more than 25%.
+
+A group with fewer than 3 entries (newest + at least 2 priors) has no
+trustworthy baseline — it is reported but never failed.  ``--warn-only``
+downgrades every failure to a warning (CI uses it while the history is
+young; drop the flag once enough runs have accumulated).
+
+  PYTHONPATH=src python -m benchmarks.check_regression [BENCH_history.jsonl]
+      [--warn-only] [--max-tok-drop 0.15] [--max-step-rise 0.25]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Any, Dict, List
+
+MIN_ENTRIES = 3           # newest + >=2 priors before the gate can fail
+
+
+def _median(xs: List[float]) -> float:
+    s = sorted(xs)
+    n = len(s)
+    return s[n // 2] if n % 2 else (s[n // 2 - 1] + s[n // 2]) / 2.0
+
+
+def load_history(path: str) -> List[Dict[str, Any]]:
+    entries = []
+    with open(path) as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                entries.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                print(f"[check_regression] WARNING: skipping malformed "
+                      f"line {i + 1}: {e}", file=sys.stderr)
+    return entries
+
+
+def check(entries: List[Dict[str, Any]], max_tok_drop: float,
+          max_step_rise: float) -> List[Dict[str, Any]]:
+    """One verdict row per (arch, attn_backend) group, newest vs median of
+    priors.  ``status`` is ok / regressed / insufficient-history."""
+    groups: Dict[tuple, List[Dict[str, Any]]] = {}
+    for e in entries:                     # file order == append order
+        groups.setdefault((e.get("arch"), e.get("attn_backend")), []).append(e)
+
+    rows = []
+    for (arch, backend), group in sorted(groups.items()):
+        newest, priors = group[-1], group[:-1]
+        row: Dict[str, Any] = {
+            "arch": arch, "attn_backend": backend, "n_entries": len(group),
+            "status": "ok", "problems": [],
+        }
+        if len(group) < MIN_ENTRIES:
+            row["status"] = "insufficient-history"
+            rows.append(row)
+            continue
+        tok_base = _median([p["tokens_per_s_continuous"] for p in priors])
+        step_base = _median([p["decode_step_ms_p50"] for p in priors])
+        tok_now = newest["tokens_per_s_continuous"]
+        step_now = newest["decode_step_ms_p50"]
+        row["tokens_per_s"] = {"baseline": tok_base, "newest": tok_now,
+                               "ratio": tok_now / max(tok_base, 1e-12)}
+        row["decode_step_ms_p50"] = {"baseline": step_base,
+                                     "newest": step_now,
+                                     "ratio": step_now / max(step_base,
+                                                             1e-12)}
+        if tok_now < tok_base * (1.0 - max_tok_drop):
+            row["problems"].append(
+                f"tokens_per_s_continuous {tok_now:.1f} is "
+                f"{(1 - tok_now / tok_base) * 100:.1f}% below the "
+                f"median-of-priors {tok_base:.1f} "
+                f"(threshold {max_tok_drop * 100:.0f}%)")
+        if step_now > step_base * (1.0 + max_step_rise):
+            row["problems"].append(
+                f"decode_step_ms_p50 {step_now:.2f} is "
+                f"{(step_now / step_base - 1) * 100:.1f}% above the "
+                f"median-of-priors {step_base:.2f} "
+                f"(threshold {max_step_rise * 100:.0f}%)")
+        if newest.get("tokens_match") is False:
+            row["problems"].append("newest run reports tokens_match=false "
+                                   "(correctness, not just perf)")
+        if row["problems"]:
+            row["status"] = "regressed"
+        rows.append(row)
+    return rows
+
+
+def main(argv=None) -> int:
+    default_hist = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_history.jsonl")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("history", nargs="?", default=default_hist,
+                    help="BENCH_history.jsonl path (default: repo root)")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="report regressions but always exit 0")
+    ap.add_argument("--max-tok-drop", type=float, default=0.15,
+                    help="max tolerated tokens_per_s_continuous drop "
+                         "(fraction, default 0.15)")
+    ap.add_argument("--max-step-rise", type=float, default=0.25,
+                    help="max tolerated decode_step_ms_p50 rise "
+                         "(fraction, default 0.25)")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.history):
+        print(f"[check_regression] no history at {args.history}; "
+              f"nothing to gate")
+        return 0
+    entries = load_history(args.history)
+    if not entries:
+        print("[check_regression] empty history; nothing to gate")
+        return 0
+
+    rows = check(entries, args.max_tok_drop, args.max_step_rise)
+    print(f"[check_regression] {len(entries)} history entries, "
+          f"{len(rows)} (arch, attn_backend) groups")
+    print(f"  {'arch':<24} {'backend':<10} {'n':>3} {'tok/s':>16} "
+          f"{'step_ms_p50':>16}  status")
+    failed = False
+    for r in rows:
+        if r["status"] == "insufficient-history":
+            tok = step = f"{'—':>16}"
+        else:
+            tok = (f"{r['tokens_per_s']['newest']:7.1f}/"
+                   f"{r['tokens_per_s']['baseline']:<8.1f}")
+            step = (f"{r['decode_step_ms_p50']['newest']:7.2f}/"
+                    f"{r['decode_step_ms_p50']['baseline']:<8.2f}")
+        print(f"  {r['arch']:<24} {r['attn_backend']:<10} "
+              f"{r['n_entries']:>3} {tok:>16} {step:>16}  {r['status']}")
+        for p in r["problems"]:
+            print(f"    - {p}")
+        if r["status"] == "regressed":
+            failed = True
+
+    if failed and not args.warn_only:
+        print("[check_regression] FAIL: perf regression vs "
+              "median-of-priors baseline")
+        return 1
+    if failed:
+        print("[check_regression] regression detected but --warn-only set")
+    else:
+        print("[check_regression] OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

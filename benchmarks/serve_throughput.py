@@ -279,7 +279,9 @@ def run(arch: str = "qwen2-0.5b", requests: int = 16, slots: int = 4,
     # timed: continuous, prefix cache off (fresh pool, same params)
     results, cont_m = Engine(cfg, scfg, params).run_offline(prompts, budgets)
 
-    # timed: continuous, prefix cache on
+    # timed: continuous, prefix cache on; keep the engine around — its
+    # metrics-registry snapshot (pool occupancy, radix hit accounting,
+    # admission/preemption counters) goes into the payload
     eng_c = Engine(cfg, scfg_cache, params)
     results_c, cache_m = eng_c.run_offline(prompts, budgets)
 
@@ -305,6 +307,9 @@ def run(arch: str = "qwen2-0.5b", requests: int = 16, slots: int = 4,
         "static": static_m,
         "continuous": cont_m,
         "continuous_prefix_cache": cache_m,
+        # full registry snapshot of the prefix-cache run: every pool /
+        # radix / scheduler / engine counter-gauge-histogram in one place
+        "telemetry_prefix_cache": eng_c.metrics_snapshot(),
         "speedup_tokens_per_s": speedup,
         "prefix_cache_speedup_tokens_per_s": cache_speedup,
         "prefix_cache_prefill_tokens_saved":
@@ -335,6 +340,9 @@ def run(arch: str = "qwen2-0.5b", requests: int = 16, slots: int = 4,
             "tokens_per_s_continuous": cont_m["tokens_per_s"],
             "tokens_per_s_prefix_cache": cache_m["tokens_per_s"],
             "decode_step_ms_p50": cont_m["decode_step_ms_p50"],
+            "ttft_p50_s": cont_m["ttft_p50_s"],
+            "cache_hit_rate": cache_m["cache_hit_rate"],
+            "decode_stall_ms_max": cont_m["decode_stall_ms_max"],
             "prefill_padding_waste": cont_m["prefill_padding_waste"],
             "adversarial_ttft_short_p50_ratio": adv["ttft_short_p50_ratio"],
             "adversarial_stall_max_ratio": adv["decode_stall_max_ratio"],

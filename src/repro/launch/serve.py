@@ -15,17 +15,28 @@
 
 ``--verify`` additionally replays every request through the static
 single-request baseline and checks the greedy tokens agree per request.
+
+Observability (continuous engine only)::
+
+  # Chrome-trace JSON for Perfetto + full metrics-registry snapshot
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
+      --engine continuous --requests 16 --mixed --verify \
+      --trace trace.json --metrics-json metrics.json
+
+then ``python -m repro.launch.trace_report trace.json`` for a time-in-phase
+breakdown and per-request TTFT/TPOT table.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 
 import numpy as np
 
 from ..configs import ServeConfig, get_arch, reduced as make_reduced
 from ..models.registry import build_model
-from ..serving import Engine, generate_static
+from ..serving import Engine, Tracer, generate_static
 
 
 def make_prompts(args, vocab: int):
@@ -94,6 +105,16 @@ def main(argv=None):
                     help="per-request length cap (0 -> fitted to workload)")
     ap.add_argument("--verify", action="store_true",
                     help="check tokens against the static single-request path")
+    ap.add_argument("--trace", metavar="PATH", default="",
+                    help="write the request-lifecycle trace as Chrome-trace-"
+                         "event JSON (open in Perfetto / chrome://tracing)")
+    ap.add_argument("--metrics-json", metavar="PATH", default="",
+                    help="write the run metrics + full metrics-registry "
+                         "snapshot as JSON")
+    ap.add_argument("--jax-annotations", action="store_true",
+                    help="wrap jitted prefill/decode steps in jax.profiler "
+                         "TraceAnnotations (visible when a jax profiler "
+                         "trace is also being captured)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -125,8 +146,14 @@ def main(argv=None):
     if engine == "static" and args.attn_backend != "auto":
         print("[serve] WARNING: --attn-backend only applies to the "
               "continuous engine; the static path uses contiguous caches")
+    if engine == "static" and (args.trace or args.jax_annotations):
+        print("[serve] WARNING: --trace/--jax-annotations only apply to the "
+              "continuous engine; no trace will be written")
+    eng = None
     if engine == "continuous":
-        eng = Engine(cfg, scfg, seed=args.seed)   # init_params inside
+        tracer = Tracer(jax_annotations=args.jax_annotations)
+        eng = Engine(cfg, scfg, seed=args.seed,   # init_params inside
+                     tracer=tracer)
         params = eng.params
         results, metrics = eng.run_offline(prompts, budgets)
         tokens = [r.tokens for r in results]
@@ -163,6 +190,20 @@ def main(argv=None):
               f"{metrics['wall_s']*1e3:.1f} ms "
               f"({metrics['tokens_per_s']:.1f} tok/s)")
     print("[serve] sample generations:", [t[:8] for t in tokens[:2]])
+
+    # write artifacts before --verify so a failed verify still leaves the
+    # trace around for diagnosis
+    if args.trace and eng is not None:
+        eng.tracer.save(args.trace)
+        print(f"[serve] trace: {len(eng.tracer.events)} events -> "
+              f"{args.trace} (load in https://ui.perfetto.dev)")
+    if args.metrics_json:
+        out = {"arch": cfg.name, "engine": engine, "metrics": metrics}
+        if eng is not None:
+            out["registry"] = eng.metrics_snapshot()
+        with open(args.metrics_json, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+        print(f"[serve] metrics -> {args.metrics_json}")
 
     if args.verify:
         lens = {len(p) for p in prompts}

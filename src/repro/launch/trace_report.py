@@ -1,0 +1,149 @@
+"""Offline analyzer for serving traces written by ``serve --trace``.
+
+  PYTHONPATH=src python -m repro.launch.trace_report trace.json
+  PYTHONPATH=src python -m repro.launch.trace_report trace.json --validate
+
+Reads the Chrome-trace-event JSON emitted by ``serving.telemetry.Tracer``
+and prints:
+
+* a time-in-phase breakdown over the engine step track — prefill /
+  chunked-prefill / restore / decode device time, the host-scheduling gap
+  (wall clock not covered by any step span), and the decode-stall share
+  (non-decode steps that ran while decode-ready slots were parked behind
+  them, i.e. step spans carrying ``decode_waiting=True``);
+* a per-request table (TTFT, total latency, TPOT, tokens, prefill chunks,
+  preemptions) read from each request's terminal ``finished`` instant.
+
+``--validate`` additionally runs the well-formedness checker
+(``telemetry.validate_trace``: monotonic finite timestamps, proper span
+nesting per track, every admitted request reaching a terminal event) and
+exits nonzero if anything is off — CI runs it on every trace artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List
+
+from ..serving.telemetry import ENGINE_PID, REQUEST_PID, percentile, \
+    validate_trace
+
+# engine phases in display order; anything else lands in "other"
+PHASES = ("prefill", "prefill_chunk", "restore", "decode")
+
+
+def load(path: str) -> Dict[str, Any]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def phase_breakdown(trace: Dict[str, Any]) -> Dict[str, Any]:
+    """Time-in-phase sums (seconds) over the engine step track.
+
+    ``wall_s`` spans first event start to last event end; ``host_s`` is the
+    wall time no step span covers (scheduler decisions, admission matching,
+    host-side bookkeeping); ``stall_s`` is the part of non-decode phases
+    that ran with decode-ready slots waiting."""
+    spans = [e for e in trace.get("traceEvents", [])
+             if e.get("ph") == "X" and e.get("pid") == ENGINE_PID]
+    per = {p: 0.0 for p in PHASES}
+    counts = {p: 0 for p in PHASES}
+    stall = other = 0.0
+    lo, hi = float("inf"), 0.0
+    for e in spans:
+        dur = e.get("dur", 0.0) / 1e6
+        name = e.get("name")
+        lo = min(lo, e["ts"] / 1e6)
+        hi = max(hi, (e["ts"] + e.get("dur", 0.0)) / 1e6)
+        if name in per:
+            per[name] += dur
+            counts[name] += 1
+        else:
+            other += dur
+        if name != "decode" and e.get("args", {}).get("decode_waiting"):
+            stall += dur
+    wall = (hi - lo) if spans else 0.0
+    stepped = sum(per.values()) + other
+    return {"wall_s": wall, "per_phase_s": per, "counts": counts,
+            "other_s": other, "host_s": max(wall - stepped, 0.0),
+            "stall_s": stall, "n_steps": len(spans)}
+
+
+def request_rows(trace: Dict[str, Any]) -> List[Dict[str, Any]]:
+    rows = []
+    for e in trace.get("traceEvents", []):
+        if e.get("ph") == "i" and e.get("name") == "finished" \
+                and e.get("pid") == REQUEST_PID:
+            rows.append({"rid": e.get("tid"), **e.get("args", {})})
+    rows.sort(key=lambda r: r["rid"])
+    return rows
+
+
+def report(trace: Dict[str, Any]) -> str:
+    out = []
+    bd = phase_breakdown(trace)
+    wall = bd["wall_s"] or 1e-12
+    out.append(f"engine steps: {bd['n_steps']}   "
+               f"wall {bd['wall_s']*1e3:.1f} ms")
+    out.append("time in phase:")
+    for p in PHASES:
+        s = bd["per_phase_s"][p]
+        out.append(f"  {p:<14} {s*1e3:9.1f} ms  {s/wall*100:5.1f}%  "
+                   f"({bd['counts'][p]} steps)")
+    if bd["other_s"]:
+        out.append(f"  {'other':<14} {bd['other_s']*1e3:9.1f} ms  "
+                   f"{bd['other_s']/wall*100:5.1f}%")
+    out.append(f"  {'host-sched':<14} {bd['host_s']*1e3:9.1f} ms  "
+               f"{bd['host_s']/wall*100:5.1f}%  (wall not in any step)")
+    out.append(f"  {'decode-stall':<14} {bd['stall_s']*1e3:9.1f} ms  "
+               f"{bd['stall_s']/wall*100:5.1f}%  "
+               f"(non-decode steps with decode ready)")
+
+    rows = request_rows(trace)
+    if rows:
+        ttfts = [r.get("ttft_s", 0.0) for r in rows]
+        tpots = [r.get("tpot_s", 0.0) for r in rows]
+        out.append("")
+        out.append(f"requests: {len(rows)}   "
+                   f"ttft p50 {percentile(ttfts, 50)*1e3:.1f} / "
+                   f"p95 {percentile(ttfts, 95)*1e3:.1f} ms   "
+                   f"tpot p50 {percentile(tpots, 50)*1e3:.2f} ms")
+        out.append(f"  {'rid':>4} {'ttft_ms':>9} {'finish_ms':>10} "
+                   f"{'tpot_ms':>8} {'toks':>5} {'chunks':>6} {'preempt':>7}")
+        for r in rows:
+            out.append(
+                f"  {r['rid']:>4} {r.get('ttft_s', 0.0)*1e3:>9.1f} "
+                f"{r.get('finish_s', 0.0)*1e3:>10.1f} "
+                f"{r.get('tpot_s', 0.0)*1e3:>8.2f} "
+                f"{r.get('n_tokens', 0):>5} "
+                f"{r.get('n_prefill_chunks', 0):>6} "
+                f"{r.get('n_preemptions', 0):>7}")
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="Chrome-trace JSON from serve --trace")
+    ap.add_argument("--validate", action="store_true",
+                    help="run the well-formedness checker; exit nonzero on "
+                         "any problem")
+    args = ap.parse_args(argv)
+
+    trace = load(args.trace)
+    print(report(trace))
+    if args.validate:
+        problems = validate_trace(trace)
+        if problems:
+            print(f"\n[trace_report] INVALID trace "
+                  f"({len(problems)} problems):", file=sys.stderr)
+            for p in problems:
+                print(f"  - {p}", file=sys.stderr)
+            return 1
+        print(f"\n[trace_report] trace valid "
+              f"({len(trace.get('traceEvents', []))} events)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -40,6 +40,17 @@ story, built from the three standard pieces of a modern LLM-serving stack:
     batch padded together, slowest member gates the batch) kept for
     verification and benchmark comparison.
 
+``telemetry``
+    Observability layer threaded through all of the above: a typed metrics
+    registry (counters / gauges / histograms, optional labels) shared by
+    pool, radix cache, scheduler and engine, plus a request-lifecycle
+    tracer emitting Chrome-trace-event JSON (``queued -> admitted ->
+    prefill_chunk[i] -> decode -> preempted/restored -> finished`` per
+    request, one span per engine step) viewable in Perfetto.  Both are
+    pure host-side bookkeeping: with telemetry on, ``--verify`` stays
+    token-exact.  See ``launch.trace_report`` for the offline analyzer and
+    ``serving/README.md`` for the metrics catalogue.
+
 Model-side support lives behind the attention-backend registry
 (``models.attn_backend``: XLA ``reference`` gather+attend or the fused
 ``pallas`` paged-attention decode kernel) reached via
@@ -75,3 +86,5 @@ from .engine import Engine, RequestResult, generate_static  # noqa: F401
 from .kv_pool import NULL_PAGE, PagedKVPool, StateSlotPool  # noqa: F401
 from .radix_cache import MatchResult, RadixCache  # noqa: F401
 from .scheduler import Admission, Request, Scheduler  # noqa: F401
+from .telemetry import (  # noqa: F401
+    MetricsRegistry, Tracer, percentile, shared_metrics, validate_trace)

@@ -67,6 +67,7 @@ from ..models.steps import make_serve_step
 from .kv_pool import NULL_PAGE, PagedKVPool, StateSlotPool
 from .radix_cache import RadixCache
 from .scheduler import Admission, Request, Scheduler
+from .telemetry import MetricsRegistry, Tracer, shared_metrics
 
 
 @dataclasses.dataclass
@@ -78,44 +79,12 @@ class RequestResult:
     ttft: float                       # arrival -> first token (s)
     n_preemptions: int = 0
     cached_tokens: int = 0            # prompt tokens reused from the cache
-
-
-def _percentile(xs: Sequence[float], q: float) -> float:
-    if not xs:
-        return 0.0
-    return float(np.percentile(np.asarray(xs), q))
-
-
-def _metrics(n_requests: int, n_tokens: int, latencies: Sequence[float],
-             wall: float) -> Dict[str, float]:
-    """The one metrics schema both engines report (keep them comparable)."""
-    return {
-        "n_requests": n_requests,
-        "new_tokens": n_tokens,
-        "wall_s": wall,
-        "tokens_per_s": n_tokens / max(wall, 1e-9),
-        "requests_per_s": n_requests / max(wall, 1e-9),
-        "latency_p50_s": _percentile(latencies, 50),
-        "latency_p95_s": _percentile(latencies, 95),
-    }
-
-
-def _aggregate(results: List[RequestResult], wall: float) -> Dict[str, float]:
-    m = _metrics(len(results), sum(len(r.tokens) for r in results),
-                 [r.latency for r in results], wall)
-    # engine-only extras: prefill accounting + TTFT (generate_static has
-    # neither a prefix cache nor per-request first-token times)
-    prompt_tokens = sum(len(r.prompt) for r in results)
-    cached = sum(r.cached_tokens for r in results)
-    m.update({
-        "ttft_p50_s": _percentile([r.ttft for r in results], 50),
-        "ttft_p95_s": _percentile([r.ttft for r in results], 95),
-        "prompt_tokens": prompt_tokens,
-        "cached_tokens": cached,
-        "prefill_tokens": prompt_tokens - cached,
-        "cache_hit_rate": cached / max(prompt_tokens, 1),
-    })
-    return m
+    # --- per-request timing from the lifecycle tracer ---
+    ttft_s: float = 0.0               # == ttft (tracer-sourced spelling)
+    finish_s: float = 0.0             # == latency (tracer-sourced spelling)
+    tpot_s: float = 0.0               # time per output token after the first
+    n_prefill_chunks: int = 0         # prefill calls run (incl. replays)
+    preempted: bool = False
 
 
 def _copy_page_fn(kv, src, dst):
@@ -164,7 +133,9 @@ class Engine:
     """Continuous-batching engine over paged + state-slot cache pools."""
 
     def __init__(self, cfg: ArchConfig, scfg: Optional[ServeConfig] = None,
-                 params=None, *, mesh=None, seed: int = 0):
+                 params=None, *, mesh=None, seed: int = 0,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.cfg = cfg
         self.scfg = scfg or ServeConfig()
         self.model = build_model(cfg)
@@ -172,8 +143,13 @@ class Engine:
         self.seed = seed
         self.params = init_params(cfg, jax.random.PRNGKey(seed)) \
             if params is None else params
-        self.pool = PagedKVPool(cfg, self.scfg)
-        self.states = StateSlotPool(cfg, self.scfg) \
+        # telemetry: one registry + one lifecycle tracer shared by every
+        # layer (pool, radix cache, scheduler, engine) — all host-side
+        # appends, so tracing on changes no math and no emitted token
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else Tracer()
+        self.pool = PagedKVPool(cfg, self.scfg, metrics=self.metrics)
+        self.states = StateSlotPool(cfg, self.scfg, metrics=self.metrics) \
             if self.spec.state_slots else None
         if self.scfg.prefix_cache and not self.spec.prefix_cacheable:
             print(f"[engine] WARNING: prefix cache disabled for {cfg.name}: "
@@ -182,27 +158,46 @@ class Engine:
             self.radix = None
         else:
             self.radix = RadixCache(self.pool, self.scfg.page_size,
-                                    self.scfg.cache_eviction) \
+                                    self.scfg.cache_eviction,
+                                    metrics=self.metrics) \
                 if self.scfg.prefix_cache else None
-        self.sched = Scheduler(self.scfg, self.pool, self.radix, self.states)
+        self.sched = Scheduler(self.scfg, self.pool, self.radix, self.states,
+                               metrics=self.metrics, tracer=self.tracer)
         self._next_rid = 0
         self.attn_backend = resolve_backend(self.scfg.attn_backend)
         self._prefill, self._prefill_cont, self._decode, self._copy = \
             _paged_steps(cfg, mesh, self.attn_backend)
-        self._prefill_steps = 0
-        self._multi_admit_steps = 0
-        self._chunk_steps = 0              # continuation-chunk prefill calls
-        self._restores = 0
-        self._decode_times: List[float] = []
+        # engine step counters (previously ad-hoc instance fields)
+        self._m_prefill_steps = self.metrics.counter(
+            "engine.prefill_steps", "prefill calls (admissions + chunks)")
+        self._m_multi_admit = self.metrics.counter(
+            "engine.multi_admit_prefills", "prefill calls admitting >1 req")
+        self._m_chunk_steps = self.metrics.counter(
+            "engine.chunked_prefill_steps", "continuation-chunk calls")
+        self._m_restores = self.metrics.counter(
+            "engine.state_restores", "checkpoint-restore re-admissions")
+        self._m_cow = self.metrics.counter(
+            "engine.cow_forks", "copy-on-write page forks run")
         # prefill work accounting: padded counts what the device computed
         # (pow2 rows x bucket), actual counts real prompt tokens — the gap is
         # padding waste, the thing chunking + bucketing are trading against
-        self._prefill_padded_tokens = 0
-        self._prefill_actual_tokens = 0
+        self._m_padded = self.metrics.counter(
+            "engine.prefill_padded_tokens", "device-computed prefill tokens")
+        self._m_actual = self.metrics.counter(
+            "engine.prefill_actual_tokens", "real prompt tokens prefilled")
+        self._h_decode_step = self.metrics.histogram(
+            "engine.decode_step_s", "fixed-shape decode step wall time")
         # decode-stall bookkeeping: wall time decode-ready slots spend parked
         # behind non-decode steps (the head-of-line cost chunking bounds)
+        self._h_stall = self.metrics.histogram(
+            "engine.decode_stall_s", "time decode-ready slots sat parked "
+            "behind non-decode steps, per decode step")
         self._stall_accum = 0.0
-        self._decode_stalls: List[float] = []
+
+    # legacy spelling kept for callers/tests that read the old counter field
+    @property
+    def _restores(self) -> int:
+        return self._m_restores.value
 
     # ----------------------------------------------------------- public API
 
@@ -231,31 +226,48 @@ class Engine:
         waiting = bool(self.sched.decode_ready())
         t0 = time.perf_counter()
         if action[0] == "prefill":
-            self._run_prefill(action[1])
+            self._run_prefill(action[1], t0)
         elif action[0] == "prefill_chunk":
-            self._run_chunks(action[1])
+            self._run_chunks(action[1], t0)
         elif action[0] == "restore":
-            self._run_restore(action[1])
+            self._run_restore(action[1], t0)
         else:
-            self._run_decode(action[1])
+            self._run_decode(action[1], t0)
+        t1 = time.perf_counter()
+        n_rows = 1 if action[0] == "restore" else len(action[1])
+        self.tracer.step_span(action[0], t0, t1, rows=n_rows,
+                              decode_waiting=waiting)
         if action[0] == "decode":
-            self._decode_stalls.append(self._stall_accum)
+            self._h_stall.observe(self._stall_accum)
             self._stall_accum = 0.0
         elif waiting:
             # decode-ready slots sat out this step: head-of-line stall
-            self._stall_accum += time.perf_counter() - t0
+            self._stall_accum += t1 - t0
         return True
 
     def collect(self) -> List[RequestResult]:
         """Pop every finished request as a RequestResult."""
         out = []
         for req in self.sched.finished:
-            out.append(RequestResult(
+            rec = self.tracer.requests.get(req.rid)
+            res = RequestResult(
                 rid=req.rid, prompt=req.prompt, tokens=list(req.generated),
                 latency=req.t_finish - req.arrival,
                 ttft=req.t_first - req.arrival,
                 n_preemptions=req.n_preemptions,
-                cached_tokens=req.cached_tokens))
+                cached_tokens=req.cached_tokens)
+            if rec is not None and rec.t_finish is not None:
+                # per-request timing from the lifecycle tracer (one source
+                # of truth for spans, results, and the trace report)
+                t_first = rec.t_first if rec.t_first is not None \
+                    else rec.t_finish
+                res.ttft_s = t_first - rec.arrival
+                res.finish_s = rec.t_finish - rec.arrival
+                res.tpot_s = (rec.t_finish - t_first) \
+                    / max(len(req.generated) - 1, 1)
+                res.n_prefill_chunks = rec.n_chunks
+                res.preempted = rec.n_preemptions > 0
+            out.append(res)
         self.sched.finished.clear()
         return out
 
@@ -273,35 +285,33 @@ class Engine:
             pass
         wall = time.perf_counter() - t0
         results = sorted(self.collect(), key=lambda r: r.rid)
-        metrics = _aggregate(results, wall)
-        metrics["prefill_steps"] = self._prefill_steps
-        metrics["multi_admit_prefills"] = self._multi_admit_steps
-        metrics["chunked_prefill_steps"] = self._chunk_steps
-        metrics["state_restores"] = self._restores
-        # prefill padding waste: what the pow2-row x bucket padding cost on
-        # top of the real prompt tokens (the old metrics counted padded
-        # tokens as work; these two keep them apart)
-        metrics["prefill_padded_tokens"] = self._prefill_padded_tokens
-        metrics["prefill_actual_tokens"] = self._prefill_actual_tokens
-        metrics["prefill_padding_waste"] = 1.0 - (
-            self._prefill_actual_tokens
-            / max(self._prefill_padded_tokens, 1))
-        # head-of-line visibility: how long decode-ready slots sat parked
-        # behind prefill work (chunking exists to bound this)
-        stalls = self._decode_stalls or [0.0]
-        metrics["decode_stall_ms_p50"] = _percentile(stalls, 50) * 1e3
-        metrics["decode_stall_ms_p95"] = _percentile(stalls, 95) * 1e3
-        metrics["decode_stall_ms_max"] = max(stalls) * 1e3
+        # the shared schema (same keys as generate_static, column-for-column)
+        # sourced from the metrics registry, plus engine-only extras
+        metrics = shared_metrics(
+            len(results), sum(len(r.tokens) for r in results),
+            [r.latency for r in results], wall,
+            ttfts=[r.ttft for r in results],
+            prompt_tokens=sum(len(r.prompt) for r in results),
+            cached_tokens=sum(r.cached_tokens for r in results),
+            prefill_steps=self._m_prefill_steps.value,
+            prefill_padded_tokens=self._m_padded.value,
+            prefill_actual_tokens=self._m_actual.value,
+            decode_step_s=self._h_decode_step.values,
+            decode_stall_s=self._h_stall.values)
+        metrics["multi_admit_prefills"] = self._m_multi_admit.value
+        metrics["chunked_prefill_steps"] = self._m_chunk_steps.value
+        metrics["state_restores"] = self._m_restores.value
         # decode hot-loop visibility: which attention backend served this run
-        # and how long one fixed-shape decode step takes (percentiles)
         metrics["attn_backend"] = self.attn_backend
-        metrics["decode_steps"] = len(self._decode_times)
-        metrics["decode_step_ms_p50"] = _percentile(self._decode_times, 50) * 1e3
-        metrics["decode_step_ms_p95"] = _percentile(self._decode_times, 95) * 1e3
         if self.radix is not None:
             metrics["cache_pages"] = len(self.radix.cached_pages)
             metrics["cache_evictions"] = self.radix.evictions
         return results, metrics
+
+    def metrics_snapshot(self) -> Dict[str, Any]:
+        """Full registry snapshot (counters/gauges/histograms of every
+        serving layer) — the ``--metrics-json`` payload."""
+        return self.metrics.snapshot()
 
     # -------------------------------------------------------------- prefill
 
@@ -366,13 +376,16 @@ class Engine:
             else self._extras([req.rid for _, req, _, _ in rows], B)
         step = self._prefill_cont if continuation and self.cfg.enc_dec \
             else self._prefill
-        logits, self.pool.kv, state = step(
-            self.params, self.pool.kv, state, meta, jnp.asarray(toks), extras)
+        with self.tracer.annotate("prefill_step"):
+            logits, self.pool.kv, state = step(
+                self.params, self.pool.kv, state, meta, jnp.asarray(toks),
+                extras)
+            logits = np.asarray(logits)
         if self.states is not None:
             self.states.state = state
-        self._prefill_padded_tokens += B * bucket
-        self._prefill_actual_tokens += sum(c for _, _, _, c in rows)
-        return np.asarray(logits)
+        self._m_padded.inc(B * bucket)
+        self._m_actual.inc(sum(c for _, _, _, c in rows))
+        return logits
 
     def _after_chunk(self, slot_idx: int, req, n_done: int, n_chunk: int,
                      logits_row: Optional[np.ndarray], now: float,
@@ -391,31 +404,37 @@ class Engine:
                 self.radix.insert(req.prompt[:full * ps], pages[:full])
         if slot.n_filled >= len(req.prompt):
             req.t_first = now
+            self.tracer.on_first_token(req.rid, now)
             req.generated.append(int(logits_row.argmax()))
             self._maybe_retire(slot_idx, now)
 
-    def _run_prefill(self, adms: List[Admission]) -> None:
+    def _run_prefill(self, adms: List[Admission], t0: float) -> None:
         """Execute a batch of already-accounted admissions: fork COW pages if
         a cache match ended mid-page, then prefill each request's *first
         chunk* — the whole uncached tail unless chunking caps it — straight
         into the bound pages / state slots in one call."""
         for adm in adms:
+            self.tracer.on_admitted(adm.req.rid, t0,
+                                    cached_tokens=adm.n_matched)
             if adm.cow_dst is not None:
                 self.pool.kv = self._copy(self.pool.kv,
                                           jnp.asarray(adm.cow_src, jnp.int32),
                                           jnp.asarray(adm.cow_dst, jnp.int32))
+                self._m_cow.inc()
         rows = [(adm.slot_idx, adm.req, adm.n_matched, adm.n_chunk)
                 for adm in adms]
         logits = self._prefill_call(rows)
         now = time.perf_counter()
-        self._prefill_steps += 1
+        self._m_prefill_steps.inc()
         if len(adms) > 1:
-            self._multi_admit_steps += 1
+            self._m_multi_admit.inc()
         for i, adm in enumerate(adms):
+            self.tracer.on_chunk(adm.req.rid, t0, now,
+                                 n_done=adm.n_matched, n_chunk=adm.n_chunk)
             self._after_chunk(adm.slot_idx, adm.req, adm.n_matched,
                               adm.n_chunk, logits[i], now, adm.pages)
 
-    def _run_chunks(self, slot_idxs: List[int]) -> None:
+    def _run_chunks(self, slot_idxs: List[int], t0: float) -> None:
         """Execute a batch of continuation chunks for mid-prefill slots."""
         rows = []
         for i in slot_idxs:
@@ -425,24 +444,28 @@ class Engine:
             rows.append((i, slot.req, n_done, n_chunk))
         logits = self._prefill_call(rows, continuation=True)
         now = time.perf_counter()
-        self._prefill_steps += 1
-        self._chunk_steps += 1
+        self._m_prefill_steps.inc()
+        self._m_chunk_steps.inc()
         for r, (i, req, n_done, n_chunk) in enumerate(rows):
+            self.tracer.on_chunk(req.rid, t0, now,
+                                 n_done=n_done, n_chunk=n_chunk)
             self._after_chunk(i, req, n_done, n_chunk, logits[r], now,
                               self.sched.slots[i].pages)
 
-    def _run_restore(self, adm: Admission) -> None:
+    def _run_restore(self, adm: Admission, t0: float) -> None:
         """Re-admit a checkpointed (preempted) request: write its state
         snapshot back into the claimed slot and resume decoding where it
         left off — no prompt replay (the scheduler already bound the slot at
         the checkpointed position)."""
+        self.tracer.on_admitted(adm.req.rid, t0, kind="restore")
         _, saved = adm.restore
         self.states.restore(adm.slot_idx, saved)
-        self._restores += 1
+        self._m_restores.inc()
+        self.tracer.on_restored(adm.req.rid, time.perf_counter())
 
     # --------------------------------------------------------------- decode
 
-    def _run_decode(self, active: List[int]) -> None:
+    def _run_decode(self, active: List[int], t_step: float) -> None:
         B = self.scfg.max_slots
         maxp = max(self.pool.table_width, 1)
         tokens = np.zeros((B,), np.int32)
@@ -459,13 +482,14 @@ class Engine:
         meta = {k: jnp.asarray(v) for k, v in decode_meta(
             self.cfg, self.scfg.page_size, tables, pos).items()}
         t0 = time.perf_counter()
-        nxt, self.pool.kv, state = self._decode(
-            self.params, self.pool.kv, state, meta, jnp.asarray(tokens))
+        with self.tracer.annotate("decode_step"):
+            nxt, self.pool.kv, state = self._decode(
+                self.params, self.pool.kv, state, meta, jnp.asarray(tokens))
+            nxt = np.asarray(nxt)
         if self.states is not None:
             self.states.state = state
-        nxt = np.asarray(nxt)
         now = time.perf_counter()
-        self._decode_times.append(now - t0)
+        self._h_decode_step.observe(now - t0)
         for i in active:
             slot = self.sched.slots[i]
             slot.pos += 1
@@ -480,6 +504,7 @@ class Engine:
         if done:
             req.t_finish = now
             self.sched.retire(slot_idx)
+            self.tracer.on_finished(req.rid, now, len(req.generated))
 
 
 # ---------------------------------------------------------- static baseline
@@ -521,6 +546,9 @@ def generate_static(cfg: ArchConfig, params, prompts: Sequence[Sequence[int]],
 
     all_tokens: List[Optional[List[int]]] = [None] * len(prompts)
     latencies: List[float] = [0.0] * len(prompts)
+    ttfts: List[float] = [0.0] * len(prompts)
+    decode_step_s: List[float] = []
+    prefill_padded = prefill_actual = 0
     t0 = time.perf_counter()
     for lo in range(0, len(prompts), batch_size):
         idxs = list(range(lo, min(lo + batch_size, len(prompts))))
@@ -559,11 +587,16 @@ def generate_static(cfg: ArchConfig, params, prompts: Sequence[Sequence[int]],
         # per-row positions: decode writes resume at each prompt's true length
         cache["pos"] = jnp.asarray([n_img + l for l in lens], jnp.int32)
         cur = jnp.asarray(np.asarray(logits).argmax(-1), jnp.int32)
+        t_first = time.perf_counter() - t0       # batch's first tokens exist
+        prefill_padded += B * bucket
+        prefill_actual += sum(lens)
         gen = [np.asarray(cur).copy()]
         # the whole batch decodes until its slowest member is done
         for _ in range(max(budget) - 1):
+            t_step = time.perf_counter()
             cur, cache = decode(params, cache, cur)
-            gen.append(np.asarray(cur).copy())
+            gen.append(np.asarray(cur).copy())   # np.asarray blocks: the
+            decode_step_s.append(time.perf_counter() - t_step)  # step is done
         jax.block_until_ready(cur)
         t_batch = time.perf_counter() - t0
         stacked = np.stack(gen, axis=1)               # [B, max(budget)]
@@ -573,6 +606,14 @@ def generate_static(cfg: ArchConfig, params, prompts: Sequence[Sequence[int]],
                 row = row[:row.index(eos) + 1]
             all_tokens[i] = row
             latencies[i] = t_batch
+            ttfts[i] = t_first
     wall = time.perf_counter() - t0
-    return all_tokens, _metrics(len(prompts), sum(len(t) for t in all_tokens),
-                                latencies, wall)
+    # the shared schema (same keys as the engine path, column-for-column);
+    # stall is honestly zero — the static path has no interleaving to stall
+    return all_tokens, shared_metrics(
+        len(prompts), sum(len(t) for t in all_tokens), latencies, wall,
+        ttfts=ttfts, prompt_tokens=sum(len(p) for p in prompts),
+        prefill_steps=-(-len(prompts) // batch_size),
+        prefill_padded_tokens=prefill_padded,
+        prefill_actual_tokens=prefill_actual,
+        decode_step_s=decode_step_s)

@@ -58,6 +58,7 @@ from ..configs.base import ArchConfig, ServeConfig
 from ..models.cache_spec import CacheFamilySpec, window_pages
 from ..models.params import init_tree
 from ..models.registry import build_model
+from .telemetry import MetricsRegistry
 
 NULL_PAGE = 0
 
@@ -65,7 +66,8 @@ NULL_PAGE = 0
 class PagedKVPool:
     """Device cache pages + host-side page accounting for the serving engine."""
 
-    def __init__(self, cfg: ArchConfig, scfg: ServeConfig):
+    def __init__(self, cfg: ArchConfig, scfg: ServeConfig,
+                 metrics: Optional[MetricsRegistry] = None):
         self.cfg = cfg
         self.scfg = scfg
         model = build_model(cfg)
@@ -87,6 +89,23 @@ class PagedKVPool:
         self.kv: Dict[str, jax.Array] = init_tree(defs, jax.random.PRNGKey(0))
         self._free: List[int] = list(range(self.total_pages - 1, NULL_PAGE, -1))
         self._ref: Dict[int, int] = {}
+        # telemetry: conservation counters (allocated == released + live at
+        # any instant) plus occupancy gauges the scheduler can't see from
+        # num_free alone
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._m_alloc = self.metrics.counter(
+            "pool.pages_allocated", "pages handed out by alloc()")
+        self._m_released = self.metrics.counter(
+            "pool.pages_released", "pages returned to the free list")
+        self._m_shares = self.metrics.counter(
+            "pool.refs_shared", "extra owners added via share()")
+        self._m_live = self.metrics.gauge(
+            "pool.pages_live", "pages currently allocated (refcount > 0)")
+        self._m_free = self.metrics.gauge(
+            "pool.free_pages", "free-list depth")
+        self._m_refs = self.metrics.gauge(
+            "pool.ref_total", "sum of refcounts over live pages")
+        self._m_free.set(len(self._free))
 
     # ------------------------------------------------------------ accounting
 
@@ -129,6 +148,9 @@ class PagedKVPool:
         pages = [self._free.pop() for _ in range(n)]
         for p in pages:
             self._ref[p] = 1
+        self._m_alloc.inc(n)
+        self._m_refs.inc(n)
+        self._sync_gauges()
         return pages
 
     def share(self, pages: Sequence[int]) -> None:
@@ -137,6 +159,8 @@ class PagedKVPool:
             assert p != NULL_PAGE, "tried to share the reserved null page"
             assert p in self._ref, f"share of unallocated page {p}"
             self._ref[p] += 1
+        self._m_shares.inc(len(pages))
+        self._m_refs.inc(len(pages))
 
     def release(self, pages: Sequence[int]) -> None:
         """Drop one owner per page; pages at refcount 0 return to the free
@@ -148,6 +172,13 @@ class PagedKVPool:
             if self._ref[p] == 0:
                 del self._ref[p]
                 self._free.append(p)
+                self._m_released.inc()
+        self._m_refs.dec(len(pages))
+        self._sync_gauges()
+
+    def _sync_gauges(self) -> None:
+        self._m_live.set(len(self._ref))
+        self._m_free.set(len(self._free))
 
     # exclusive-ownership spelling used by pre-refcount call sites/tests
     free = release
@@ -168,7 +199,8 @@ class StateSlotPool:
     which rows are live; ``checkpoint``/``restore`` implement the
     preemption half of the slot lifetime contract (see module docstring)."""
 
-    def __init__(self, cfg: ArchConfig, scfg: ServeConfig):
+    def __init__(self, cfg: ArchConfig, scfg: ServeConfig,
+                 metrics: Optional[MetricsRegistry] = None):
         self.cfg = cfg
         self.scfg = scfg
         model = build_model(cfg)
@@ -177,6 +209,15 @@ class StateSlotPool:
         self.state: Any = init_tree(defs, jax.random.PRNGKey(0))
         self.n_slots = scfg.max_slots
         self._claimed: Set[int] = set()
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._m_resident = self.metrics.gauge(
+            "states.slots_claimed", "state slots held by live requests")
+        self._m_claims = self.metrics.counter(
+            "states.claims", "state-slot claims (admissions)")
+        self._m_ckpt = self.metrics.counter(
+            "states.checkpoints", "slot snapshots taken on preemption")
+        self._m_restore = self.metrics.counter(
+            "states.restores", "checkpointed snapshots written back")
 
     # ------------------------------------------------------------ accounting
 
@@ -192,22 +233,27 @@ class StateSlotPool:
         assert 0 <= slot < self.n_slots, slot
         assert slot not in self._claimed, f"double claim of state slot {slot}"
         self._claimed.add(slot)
+        self._m_claims.inc()
+        self._m_resident.set(len(self._claimed))
 
     def release(self, slot: int) -> None:
         assert slot in self._claimed, f"release of unclaimed state slot {slot}"
         self._claimed.remove(slot)
+        self._m_resident.set(len(self._claimed))
 
     # ------------------------------------------------- checkpoint / restore
 
     def checkpoint(self, slot: int) -> Any:
         """Snapshot one slot's state to host memory (preemption)."""
         assert slot in self._claimed, f"checkpoint of unclaimed slot {slot}"
+        self._m_ckpt.inc()
         return jax.tree.map(lambda a: np.asarray(a[:, slot]), self.state)
 
     def restore(self, slot: int, saved: Any) -> None:
         """Write a checkpointed snapshot back into (a possibly different)
         claimed slot."""
         assert slot in self._claimed, f"restore into unclaimed slot {slot}"
+        self._m_restore.inc()
         self.state = jax.tree.map(
             lambda a, s: a.at[:, slot].set(jnp.asarray(s, a.dtype)),
             self.state, saved)

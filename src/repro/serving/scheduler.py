@@ -60,6 +60,7 @@ import numpy as np
 from ..configs.base import ServeConfig
 from .kv_pool import PagedKVPool, StateSlotPool
 from .radix_cache import RadixCache, RadixNode
+from .telemetry import MetricsRegistry, Tracer
 
 
 @dataclasses.dataclass
@@ -121,7 +122,9 @@ class Admission:
 class Scheduler:
     def __init__(self, scfg: ServeConfig, pool: PagedKVPool,
                  radix: Optional[RadixCache] = None,
-                 states: Optional[StateSlotPool] = None):
+                 states: Optional[StateSlotPool] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
         self.scfg = scfg
         self.pool = pool
         self.radix = radix
@@ -130,6 +133,27 @@ class Scheduler:
         self.slots: List[Optional[Slot]] = [None] * scfg.max_slots
         self.finished: List[Request] = []
         self._admit_seq = 0
+        # telemetry: queueing + admission-policy visibility (the engine's
+        # step counters say what ran; these say what was *decided* and why)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else Tracer(enabled=False)
+        self._m_queue = self.metrics.gauge(
+            "sched.queue_depth", "requests waiting for admission")
+        self._m_slots = self.metrics.gauge(
+            "sched.slots_live", "decode slots bound to live requests")
+        self._m_queued = self.metrics.counter(
+            "sched.queued", "requests entering the queue (incl. requeues)")
+        self._m_admits = self.metrics.counter(
+            "sched.admissions", "committed admissions by kind",
+            labels=("kind",))               # fresh | cache_hit | restore
+        self._m_rejects = self.metrics.counter(
+            "sched.rejections", "admission attempts blocked, by reason",
+            labels=("reason",))             # no_slot | no_pages
+        self._m_preempt = self.metrics.counter(
+            "sched.preemptions", "slots evicted under pressure, by kind",
+            labels=("kind",))               # checkpoint | replay
+        self._m_chunks = self.metrics.counter(
+            "sched.chunk_continuations", "continuation chunks scheduled")
         # chunked prefill applies to families whose prompt KV is
         # token-addressable pages at text positions: recurrent state must be
         # carried through a whole prompt in one call, and the vlm image
@@ -147,6 +171,9 @@ class Scheduler:
                 f"request {req.rid}: prompt len {len(req.prompt)} >= "
                 f"max_len {self.scfg.max_len}")
         self.queue.append(req)
+        self._m_queued.inc()
+        self._m_queue.set(len(self.queue))
+        self.tracer.on_queued(req.rid, req.arrival or self.tracer.now())
 
     def has_work(self) -> bool:
         return bool(self.queue) or any(s is not None for s in self.slots)
@@ -238,6 +265,7 @@ class Scheduler:
                 return ("prefill", adms)
         chunks = self._chunk_batch()
         if chunks:
+            self._m_chunks.inc(len(chunks))
             return ("prefill_chunk", chunks)
         return None
 
@@ -325,12 +353,17 @@ class Scheduler:
         head request (the batch loop's probe), reused to avoid a second
         tree walk."""
         idx = self.free_slot()
-        if idx is None or not self.queue:
+        if not self.queue:
+            return None
+        if idx is None:
+            self._m_rejects.labels(reason="no_slot").inc()
             return None
         req = self.queue[0]
         if req.checkpoint is not None:
             # checkpointable families are page-free: a slot is all it needs
             self.queue.popleft()
+            self._m_queue.set(len(self.queue))
+            self._m_admits.labels(kind="restore").inc()
             pos, _ = req.checkpoint
             slot = self.bind(idx, req, [], pos=pos,
                              n_filled=len(req.prompt))
@@ -359,9 +392,13 @@ class Scheduler:
                 self.radix.make_room(need)
                 self.radix.unlock(nodes)
             if self.pool.num_free < need:
+                self._m_rejects.labels(reason="no_pages").inc()
                 return None
         # ---- commit point: capacity proven, take everything atomically ----
         self.queue.popleft()
+        self._m_queue.set(len(self.queue))
+        self._m_admits.labels(
+            kind="cache_hit" if n_matched else "fresh").inc()
         self.pool.share(shared)
         fresh = self.pool.alloc(need)
         assert fresh is not None
@@ -393,6 +430,7 @@ class Scheduler:
         self.slots[slot_idx] = slot
         if self.states is not None:
             self.states.claim(slot_idx)
+        self._m_slots.set(sum(s is not None for s in self.slots))
         return slot
 
     def _unbind(self, slot_idx: int) -> Slot:
@@ -407,6 +445,7 @@ class Scheduler:
         if self.radix is not None and slot.nodes:
             self.radix.unlock(slot.nodes)
         self.slots[slot_idx] = None
+        self._m_slots.set(sum(s is not None for s in self.slots))
         return slot
 
     def retire(self, slot_idx: int) -> Request:
@@ -438,6 +477,11 @@ class Scheduler:
             slot.req.cached_tokens = 0
         slot.req.n_preemptions += 1
         self.queue.appendleft(slot.req)
+        self._m_preempt.labels(
+            kind="checkpoint" if checkpointable else "replay").inc()
+        self._m_queue.set(len(self.queue))
+        self.tracer.on_preempted(slot.req.rid, self.tracer.now(),
+                                 checkpointable)
         return slot.req
 
     def _grow_pages(self) -> None:
