@@ -6,7 +6,11 @@ of that group's prior entries (median, not mean, so one historical outlier
 cannot poison the baseline) and exits nonzero when the newest run regressed:
 
 * ``tokens_per_s_continuous`` dropped more than 15%, or
-* ``decode_step_ms_p50`` rose more than 25%.
+* ``decode_step_ms_p50`` rose more than 25%, or
+* ``poisson_goodput_tokens_per_s`` (the open-loop streaming section)
+  dropped more than 20% — gated only when the newest entry *and* every
+  prior in the group carry the key, so histories that predate the Poisson
+  section never fail on it.
 
 A group with fewer than 3 entries (newest + at least 2 priors) has no
 trustworthy baseline — it is reported but never failed.  ``--warn-only``
@@ -49,7 +53,8 @@ def load_history(path: str) -> List[Dict[str, Any]]:
 
 
 def check(entries: List[Dict[str, Any]], max_tok_drop: float,
-          max_step_rise: float) -> List[Dict[str, Any]]:
+          max_step_rise: float,
+          max_goodput_drop: float = 0.20) -> List[Dict[str, Any]]:
     """One verdict row per (arch, attn_backend) group, newest vs median of
     priors.  ``status`` is ok / regressed / insufficient-history."""
     groups: Dict[tuple, List[Dict[str, Any]]] = {}
@@ -89,6 +94,21 @@ def check(entries: List[Dict[str, Any]], max_tok_drop: float,
                 f"{(step_now / step_base - 1) * 100:.1f}% above the "
                 f"median-of-priors {step_base:.2f} "
                 f"(threshold {max_step_rise * 100:.0f}%)")
+        # Poisson open-loop goodput: only gate when the whole group carries
+        # the key (entries from before the streaming front-end lack it)
+        good_key = "poisson_goodput_tokens_per_s"
+        if good_key in newest and all(good_key in p for p in priors):
+            good_base = _median([p[good_key] for p in priors])
+            good_now = newest[good_key]
+            row["poisson_goodput"] = {
+                "baseline": good_base, "newest": good_now,
+                "ratio": good_now / max(good_base, 1e-12)}
+            if good_now < good_base * (1.0 - max_goodput_drop):
+                row["problems"].append(
+                    f"poisson_goodput_tokens_per_s {good_now:.1f} is "
+                    f"{(1 - good_now / good_base) * 100:.1f}% below the "
+                    f"median-of-priors {good_base:.1f} "
+                    f"(threshold {max_goodput_drop * 100:.0f}%)")
         if newest.get("tokens_match") is False:
             row["problems"].append("newest run reports tokens_match=false "
                                    "(correctness, not just perf)")
@@ -113,6 +133,10 @@ def main(argv=None) -> int:
     ap.add_argument("--max-step-rise", type=float, default=0.25,
                     help="max tolerated decode_step_ms_p50 rise "
                          "(fraction, default 0.25)")
+    ap.add_argument("--max-goodput-drop", type=float, default=0.20,
+                    help="max tolerated poisson_goodput_tokens_per_s drop "
+                         "(fraction, default 0.20; only gated when every "
+                         "entry in the group has the Poisson section)")
     args = ap.parse_args(argv)
 
     if not os.path.exists(args.history):
@@ -124,7 +148,8 @@ def main(argv=None) -> int:
         print("[check_regression] empty history; nothing to gate")
         return 0
 
-    rows = check(entries, args.max_tok_drop, args.max_step_rise)
+    rows = check(entries, args.max_tok_drop, args.max_step_rise,
+                 args.max_goodput_drop)
     print(f"[check_regression] {len(entries)} history entries, "
           f"{len(rows)} (arch, attn_backend) groups")
     print(f"  {'arch':<24} {'backend':<10} {'n':>3} {'tok/s':>16} "
@@ -140,6 +165,11 @@ def main(argv=None) -> int:
                     f"{r['decode_step_ms_p50']['baseline']:<8.2f}")
         print(f"  {r['arch']:<24} {r['attn_backend']:<10} "
               f"{r['n_entries']:>3} {tok:>16} {step:>16}  {r['status']}")
+        if "poisson_goodput" in r:
+            g = r["poisson_goodput"]
+            print(f"    poisson goodput tok/s: {g['newest']:.1f} vs "
+                  f"median-of-priors {g['baseline']:.1f} "
+                  f"(ratio {g['ratio']:.2f})")
         for p in r["problems"]:
             print(f"    - {p}")
         if r["status"] == "regressed":

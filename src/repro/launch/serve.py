@@ -103,6 +103,11 @@ def main(argv=None):
                          "admission)")
     ap.add_argument("--max-len", type=int, default=0,
                     help="per-request length cap (0 -> fitted to workload)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="drive the overlapped host/device pipeline "
+                         "(Engine.pump(): step N+1's host plan staged while "
+                         "step N runs on device) instead of the synchronous "
+                         "step loop; tokens are identical either way")
     ap.add_argument("--verify", action="store_true",
                     help="check tokens against the static single-request path")
     ap.add_argument("--trace", metavar="PATH", default="",
@@ -155,11 +160,18 @@ def main(argv=None):
         eng = Engine(cfg, scfg, seed=args.seed,   # init_params inside
                      tracer=tracer)
         params = eng.params
-        results, metrics = eng.run_offline(prompts, budgets)
+        results, metrics = eng.run_offline(prompts, budgets,
+                                           overlap=args.overlap)
         tokens = [r.tokens for r in results]
         ttft = [r.ttft for r in results]
         print(f"[serve] attention backend: {metrics['attn_backend']} "
               f"(decode step p50 {metrics['decode_step_ms_p50']:.1f} ms)")
+        if args.overlap:
+            print(f"[serve] overlap: "
+                  f"{eng.metrics.value('engine.overlap_staged')} plans "
+                  f"staged, {eng.metrics.value('engine.overlap_used')} used, "
+                  f"{eng.metrics.value('engine.overlap_dropped')} dropped "
+                  f"(host meta build hidden behind device steps)")
         if args.prefill_chunk_tokens:
             print(f"[serve] chunked prefill: budget "
                   f"{scfg.chunk_tokens} tokens, "

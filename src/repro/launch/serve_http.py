@@ -1,0 +1,321 @@
+"""HTTP/SSE streaming server over the continuous-batching engine.
+
+  # serve an arch on :8080 (SSE streaming, overlapped pipeline)
+  PYTHONPATH=src python -m repro.launch.serve_http --arch qwen2-0.5b \
+      --reduced --port 8080
+
+  # self-contained smoke run (CI): start the server on an ephemeral port,
+  # stream N requests through real HTTP, verify the streamed tokens are
+  # token-exact vs the static single-request baseline, write the trace
+  PYTHONPATH=src python -m repro.launch.serve_http --arch qwen2-0.5b \
+      --reduced --smoke 4 --trace trace.json
+
+API (deliberately tiny, stdlib-only on both ends):
+
+* ``POST /generate`` — body ``{"prompt": [ids...], "max_new_tokens": n}``;
+  responds ``text/event-stream``, one ``data: {json}`` frame per token as
+  it decodes plus a terminal ``done`` (tokens, ttft_s, tpot_s) or ``error``
+  frame.  A client disconnect mid-stream cancels the request — its slot and
+  pages free at the next engine iteration.
+* ``GET /metrics`` — full metrics-registry snapshot as JSON (every serving
+  layer: pool, radix cache, scheduler, engine, overlap counters).
+* ``GET /health`` — liveness + live-slot/queue-depth gauges.
+
+The HTTP layer is hand-rolled over ``asyncio.start_server`` (request line +
+headers + Content-Length body; no chunked uploads, no keep-alive) so the
+serving stack stays dependency-free — the point is the engine behind it,
+not the framework in front.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import dataclasses
+import json
+import sys
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from ..configs import ServeConfig, get_arch, reduced as make_reduced
+from ..serving import Engine, ServingLoop, Tracer, generate_static
+
+MAX_BODY = 1 << 20      # 1 MiB request-body cap
+
+
+def _json_response(payload: Any, status: str = "200 OK") -> bytes:
+    body = json.dumps(payload).encode()
+    return (f"HTTP/1.1 {status}\r\nContent-Type: application/json\r\n"
+            f"Content-Length: {len(body)}\r\nConnection: close\r\n\r\n"
+            ).encode() + body
+
+
+SSE_HEADER = (b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n"
+              b"Cache-Control: no-cache\r\nConnection: close\r\n\r\n")
+
+
+async def _read_request(reader: asyncio.StreamReader
+                        ) -> Optional[Tuple[str, str, bytes]]:
+    """Parse one HTTP/1.1 request: (method, path, body) or None on EOF."""
+    line = await reader.readline()
+    if not line:
+        return None
+    parts = line.decode("latin1").split()
+    if len(parts) < 2:
+        return None
+    method, path = parts[0], parts[1]
+    n_body = 0
+    while True:
+        h = await reader.readline()
+        if h in (b"\r\n", b"\n", b""):
+            break
+        k, _, v = h.decode("latin1").partition(":")
+        if k.strip().lower() == "content-length":
+            n_body = min(int(v.strip()), MAX_BODY)
+    body = await reader.readexactly(n_body) if n_body else b""
+    return method, path, body
+
+
+class HttpFrontend:
+    """Routes HTTP requests into a ``ServingLoop``."""
+
+    def __init__(self, serving: ServingLoop, default_max_new: int = 16):
+        self.serving = serving
+        self.default_max_new = default_max_new
+        self.n_streams = 0
+
+    async def handle(self, reader: asyncio.StreamReader,
+                     writer: asyncio.StreamWriter) -> None:
+        try:
+            req = await _read_request(reader)
+            if req is None:
+                return
+            method, path, body = req
+            if method == "POST" and path == "/generate":
+                await self._generate(writer, body)
+            elif method == "GET" and path == "/metrics":
+                writer.write(_json_response(
+                    self.serving.engine.metrics_snapshot()))
+            elif method == "GET" and path == "/health":
+                m = self.serving.engine.metrics
+                writer.write(_json_response({
+                    "ok": True,
+                    "slots_live": m.value("sched.slots_live"),
+                    "queue_depth": m.value("sched.queue_depth")}))
+            else:
+                writer.write(_json_response({"error": "not found"},
+                                            "404 Not Found"))
+            await writer.drain()
+        except (ConnectionResetError, asyncio.IncompleteReadError,
+                BrokenPipeError):
+            pass
+        finally:
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except (ConnectionResetError, BrokenPipeError):
+                pass
+
+    async def _generate(self, writer: asyncio.StreamWriter,
+                        body: bytes) -> None:
+        try:
+            payload = json.loads(body or b"{}")
+            prompt = [int(t) for t in payload["prompt"]]
+            max_new = int(payload.get("max_new_tokens", self.default_max_new))
+        except (KeyError, TypeError, ValueError) as e:
+            writer.write(_json_response({"error": f"bad request: {e}"},
+                                        "400 Bad Request"))
+            return
+        rid, q = self.serving.submit(prompt, max_new)
+        self.n_streams += 1
+        writer.write(SSE_HEADER)
+        try:
+            while True:
+                ev = await q.get()
+                writer.write(b"data: " + json.dumps(ev).encode() + b"\n\n")
+                await writer.drain()     # disconnect surfaces here
+                if ev["type"] in ("done", "error"):
+                    return
+        except (ConnectionResetError, BrokenPipeError):
+            self.serving.cancel(rid)     # client went away: free the slot
+        finally:
+            self.serving.forget(rid)
+
+
+# --------------------------------------------------------------- smoke mode
+
+
+async def _sse_client(host: str, port: int, prompt, max_new: int
+                      ) -> Dict[str, Any]:
+    """Minimal stdlib SSE client: POST /generate, collect every event."""
+    reader, writer = await asyncio.open_connection(host, port)
+    body = json.dumps({"prompt": prompt, "max_new_tokens": max_new}).encode()
+    writer.write((f"POST /generate HTTP/1.1\r\nHost: {host}\r\n"
+                  f"Content-Type: application/json\r\n"
+                  f"Content-Length: {len(body)}\r\n\r\n").encode() + body)
+    await writer.drain()
+    events = []
+    t_submit = time.perf_counter()
+    t_first = None
+    while True:
+        line = await reader.readline()
+        if not line:
+            raise RuntimeError("server closed the stream mid-request")
+        if not line.startswith(b"data: "):
+            continue                     # headers / keep-alive blank lines
+        ev = json.loads(line[6:])
+        if ev["type"] == "token" and t_first is None:
+            t_first = time.perf_counter()
+        events.append(ev)
+        if ev["type"] in ("done", "error"):
+            break
+    writer.close()
+    try:
+        await writer.wait_closed()
+    except (ConnectionResetError, BrokenPipeError):
+        pass
+    streamed = [e["token"] for e in events if e["type"] == "token"]
+    final = events[-1]
+    return {"events": events, "streamed": streamed, "final": final,
+            "client_ttft_s": (t_first or time.perf_counter()) - t_submit}
+
+
+async def _smoke(frontend: HttpFrontend, host: str, port: int, args,
+                 cfg, scfg) -> int:
+    """Stream ``--smoke N`` requests through real HTTP and verify the
+    streamed tokens byte-for-byte against the static baseline."""
+    rng = np.random.RandomState(args.seed)
+    prompts = [rng.randint(1, cfg.vocab,
+                           size=int(rng.randint(4, args.prompt_len + 1))
+                           ).tolist()
+               for _ in range(args.smoke)]
+    outs = await asyncio.gather(*[
+        _sse_client(host, port, p, args.gen) for p in prompts])
+    ref, _ = generate_static(cfg, frontend.serving.engine.params, prompts,
+                             args.gen, scfg, batch_size=1, seed=args.seed)
+    bad = []
+    for i, (out, expect) in enumerate(zip(outs, ref)):
+        if out["final"]["type"] != "done":
+            bad.append((i, f"terminal {out['final']}"))
+        elif out["streamed"] != expect:
+            bad.append((i, f"streamed {out['streamed']} != {expect}"))
+        elif out["final"]["tokens"] != expect:
+            bad.append((i, "done-frame tokens mismatch"))
+    eng = frontend.serving.engine
+    print(f"[serve_http] smoke: {len(outs)} requests streamed over HTTP; "
+          f"client ttft p50 "
+          f"{np.median([o['client_ttft_s'] for o in outs])*1e3:.1f} ms; "
+          f"overlap staged/used/dropped "
+          f"{eng._m_overlap_staged.value}/{eng._m_overlap_used.value}/"
+          f"{eng._m_overlap_dropped.value}")
+    if bad:
+        for i, why in bad:
+            print(f"[serve_http] SMOKE FAILED request {i}: {why}",
+                  file=sys.stderr)
+        return 1
+    print(f"[serve_http] smoke verify OK: streamed tokens exact vs "
+          f"single-request static baseline for all {len(outs)} requests")
+    return 0
+
+
+# --------------------------------------------------------------------- main
+
+
+def build_engine(args) -> Tuple[Engine, Any, ServeConfig]:
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = make_reduced(cfg)
+    cfg = dataclasses.replace(cfg, remat="none")
+    ps = args.page_size
+    max_len = args.max_len or ((args.prompt_len + args.gen + ps - 1)
+                               // ps) * ps
+    scfg = ServeConfig(page_size=ps, max_slots=args.slots, max_len=max_len,
+                       prefix_cache=args.prefix_cache,
+                       attn_backend=args.attn_backend,
+                       prefill_chunk_tokens=args.prefill_chunk_tokens)
+    tracer = Tracer()
+    eng = Engine(cfg, scfg, seed=args.seed, tracer=tracer)
+    return eng, cfg, scfg
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8080,
+                    help="TCP port (0 = ephemeral; --smoke defaults to 0)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="per-request length cap (0 -> fitted to workload)")
+    ap.add_argument("--prompt-len", type=int, default=32,
+                    help="workload sizing hint (max_len fit + smoke prompts)")
+    ap.add_argument("--gen", type=int, default=16,
+                    help="default max_new_tokens per request")
+    ap.add_argument("--prefix-cache", action="store_true")
+    ap.add_argument("--attn-backend", choices=("auto", "reference", "pallas"),
+                    default="auto")
+    ap.add_argument("--prefill-chunk-tokens", type=int, default=0)
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="drive the synchronous step() instead of the "
+                         "overlapped pump()")
+    ap.add_argument("--queue-size", type=int, default=256,
+                    help="bounded collect-queue size (the backpressure knob)")
+    ap.add_argument("--smoke", type=int, default=0, metavar="N",
+                    help="self-test: stream N requests through HTTP, verify "
+                         "tokens vs the static baseline, exit")
+    ap.add_argument("--trace", metavar="PATH", default="",
+                    help="write the lifecycle trace (incl. host-pipeline "
+                         "dispatch/stage/collect spans) on exit")
+    ap.add_argument("--metrics-json", metavar="PATH", default="",
+                    help="write the metrics-registry snapshot on exit")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    eng, cfg, scfg = build_engine(args)
+    serving = ServingLoop(eng, overlap=not args.no_overlap,
+                          collect_queue_size=args.queue_size)
+    frontend = HttpFrontend(serving, default_max_new=args.gen)
+    port = args.port if not args.smoke else (args.port if args.port != 8080
+                                             else 0)
+
+    async def run() -> int:
+        await serving.start()
+        server = await asyncio.start_server(frontend.handle, args.host, port)
+        bound = server.sockets[0].getsockname()[1]
+        print(f"[serve_http] {cfg.name} on http://{args.host}:{bound} "
+              f"(slots={scfg.max_slots}, max_len={scfg.max_len}, "
+              f"overlap={'off' if args.no_overlap else 'on'}) — "
+              f"POST /generate, GET /metrics, GET /health")
+        rc = 0
+        try:
+            if args.smoke:
+                rc = await _smoke(frontend, args.host, bound, args, cfg, scfg)
+            else:
+                async with server:
+                    await server.serve_forever()
+        finally:
+            server.close()
+            await server.wait_closed()
+            await serving.stop()
+        return rc
+
+    try:
+        rc = asyncio.run(run())
+    except KeyboardInterrupt:
+        rc = 0
+    if args.trace:
+        eng.tracer.save(args.trace)
+        print(f"[serve_http] trace: {len(eng.tracer.events)} events -> "
+              f"{args.trace}")
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            json.dump(eng.metrics_snapshot(), f, indent=2, sort_keys=True)
+        print(f"[serve_http] metrics -> {args.metrics_json}")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -26,11 +26,13 @@ import json
 import sys
 from typing import Any, Dict, List
 
-from ..serving.telemetry import ENGINE_PID, REQUEST_PID, percentile, \
-    validate_trace
+from ..serving.telemetry import ENGINE_PID, HOST_TID, REQUEST_PID, \
+    percentile, validate_trace
 
 # engine phases in display order; anything else lands in "other"
 PHASES = ("prefill", "prefill_chunk", "restore", "decode")
+# overlapped host-pipeline phases (ENGINE_PID, tid=HOST_TID), Engine.pump()
+HOST_PHASES = ("dispatch", "stage", "collect")
 
 
 def load(path: str) -> Dict[str, Any]:
@@ -46,7 +48,9 @@ def phase_breakdown(trace: Dict[str, Any]) -> Dict[str, Any]:
     host-side bookkeeping); ``stall_s`` is the part of non-decode phases
     that ran with decode-ready slots waiting."""
     spans = [e for e in trace.get("traceEvents", [])
-             if e.get("ph") == "X" and e.get("pid") == ENGINE_PID]
+             if e.get("ph") == "X" and e.get("pid") == ENGINE_PID
+             and e.get("tid", 0) == 0]    # step track only: the overlapped
+                                          # host pipeline reports separately
     per = {p: 0.0 for p in PHASES}
     counts = {p: 0 for p in PHASES}
     stall = other = 0.0
@@ -68,6 +72,22 @@ def phase_breakdown(trace: Dict[str, Any]) -> Dict[str, Any]:
     return {"wall_s": wall, "per_phase_s": per, "counts": counts,
             "other_s": other, "host_s": max(wall - stepped, 0.0),
             "stall_s": stall, "n_steps": len(spans)}
+
+
+def host_pipeline(trace: Dict[str, Any]) -> Dict[str, Any]:
+    """Overlapped host-pipeline sums (``Engine.pump()``): time in the
+    dispatch / stage / collect halves on the (ENGINE_PID, HOST_TID) track.
+    Empty dict when the run was synchronous (no host track emitted)."""
+    per = {p: 0.0 for p in HOST_PHASES}
+    counts = {p: 0 for p in HOST_PHASES}
+    for e in trace.get("traceEvents", []):
+        if e.get("ph") == "X" and e.get("pid") == ENGINE_PID \
+                and e.get("tid") == HOST_TID and e.get("name") in per:
+            per[e["name"]] += e.get("dur", 0.0) / 1e6
+            counts[e["name"]] += 1
+    if not any(counts.values()):
+        return {}
+    return {"per_phase_s": per, "counts": counts}
 
 
 def request_rows(trace: Dict[str, Any]) -> List[Dict[str, Any]]:
@@ -99,6 +119,14 @@ def report(trace: Dict[str, Any]) -> str:
     out.append(f"  {'decode-stall':<14} {bd['stall_s']*1e3:9.1f} ms  "
                f"{bd['stall_s']/wall*100:5.1f}%  "
                f"(non-decode steps with decode ready)")
+
+    hp = host_pipeline(trace)
+    if hp:
+        out.append("host pipeline (overlapped dispatch/stage/collect):")
+        for p in HOST_PHASES:
+            s = hp["per_phase_s"][p]
+            out.append(f"  {p:<14} {s*1e3:9.1f} ms  {s/wall*100:5.1f}%  "
+                       f"({hp['counts'][p]} spans)")
 
     rows = request_rows(trace)
     if rows:

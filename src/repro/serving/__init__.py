@@ -40,6 +40,15 @@ story, built from the three standard pieces of a modern LLM-serving stack:
     batch padded together, slowest member gates the batch) kept for
     verification and benchmark comparison.
 
+``server``
+    Async streaming front-end: ``ServingLoop`` drives the engine's
+    overlapped pipeline (``Engine.pump()`` — host plan for step N+1 staged
+    while step N runs on device) from a dedicated thread and streams each
+    token into per-request asyncio queues through a bounded collect queue
+    plus a detokenize worker (backpressure: a slow detokenizer throttles
+    the engine; a slow *client* only buffers its own stream).  The HTTP/SSE
+    layer over it lives in ``launch.serve_http``.
+
 ``telemetry``
     Observability layer threaded through all of the above: a typed metrics
     registry (counters / gauges / histograms, optional labels) shared by
@@ -86,5 +95,6 @@ from .engine import Engine, RequestResult, generate_static  # noqa: F401
 from .kv_pool import NULL_PAGE, PagedKVPool, StateSlotPool  # noqa: F401
 from .radix_cache import MatchResult, RadixCache  # noqa: F401
 from .scheduler import Admission, Request, Scheduler  # noqa: F401
+from .server import ServingLoop, detokenize, stream_request  # noqa: F401
 from .telemetry import (  # noqa: F401
     MetricsRegistry, Tracer, percentile, shared_metrics, validate_trace)

@@ -47,13 +47,37 @@ sequence and draw different frontend inputs.
 ``generate_static`` is the static-batching baseline kept for comparison and
 verification: contiguous per-request KV caches, the whole batch padded
 together and decoded until its slowest member finishes.
+
+**Overlapped host/device pipeline.**  Every step is internally split into a
+*dispatch* half (scheduler decision, host-side meta build, jitted-call
+launch — jax dispatch is asynchronous, so control returns while the device
+works) and a *collect* half (block on the device output, token bookkeeping,
+retirement).  ``step()`` runs them back-to-back (the synchronous loop every
+existing caller sees); ``pump()`` additionally *stages* the host plan for
+step N+1 between the two halves — while step N's jitted call runs on
+device, the engine pre-builds the next decode step's page tables, positions
+and ``decode_meta`` pytree, and validates the staged plan against reality
+at the next dispatch (a retirement, EOS, admission, preemption or page-
+boundary growth invalidates it; validation is an exact fingerprint match,
+so a used staged plan is bit-identical to a replan and tokens stay exact).
+``run_offline(..., overlap=True)`` and the async streaming front-end
+(``serving.server``) drive ``pump()``; overlap hit rates are counted under
+``engine.overlap_*`` and the dispatch/stage/collect phases appear on a
+dedicated host-pipeline tracer track, visibly overlapping the step spans in
+Perfetto.
+
+Streaming hooks: ``on_token(rid, index, token, t)`` fires as each token is
+collected (a preemption replay re-fires earlier indexes; stream consumers
+dedup by index — greedy replay regenerates the identical prefix), and
+finished requests are popped with ``collect()``.  ``cancel(rid)`` aborts a
+queued or live request (client disconnect), releasing its slot and pages.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -76,7 +100,11 @@ class RequestResult:
     prompt: List[int]
     tokens: List[int]                 # generated tokens (greedy), incl. EOS
     latency: float                    # arrival -> finish (s)
-    ttft: float                       # arrival -> first token (s)
+    ttft: float                       # arrival -> first token (s).  First
+                                      # token *ever* produced: a preemption
+                                      # replay does not reset it, so this
+                                      # agrees with tracer-sourced ttft_s
+                                      # (and is what shared_metrics consumes)
     n_preemptions: int = 0
     cached_tokens: int = 0            # prompt tokens reused from the cache
     # --- per-request timing from the lifecycle tracer ---
@@ -85,6 +113,37 @@ class RequestResult:
     tpot_s: float = 0.0               # time per output token after the first
     n_prefill_chunks: int = 0         # prefill calls run (incl. replays)
     preempted: bool = False
+    error: str = ""                   # nonempty: rejected/cancelled, no tokens
+
+    @property
+    def failed(self) -> bool:
+        return bool(self.error)
+
+
+@dataclasses.dataclass
+class _Pending:
+    """One dispatched-but-not-collected engine step: the device is (or may
+    be) still computing ``out_dev``; ``finish`` blocks on it and runs the
+    host-side bookkeeping."""
+    kind: str                         # prefill | prefill_chunk | restore | decode
+    payload: Any                      # scheduler action payload
+    rows: Any                         # prefill row tuples / decode active list
+    out_dev: Any                      # device logits / next-token array
+    t0: float                         # dispatch start (step span start)
+    t_dispatched: float               # host-side dispatch end
+    waiting: bool                     # decode-ready slots parked behind this
+
+
+@dataclasses.dataclass
+class _StagedDecode:
+    """A pre-built host plan for the *next* decode step, computed while the
+    current step runs on device.  ``fp`` is the exact post-step fingerprint
+    (slot, rid, pos, owned pages) the plan assumed; dispatch uses the plan
+    only when reality still matches, so a used plan is bit-identical to a
+    replan."""
+    active: Tuple[int, ...]
+    fp: Tuple[Tuple[int, int, int, int], ...]
+    meta: Dict[str, Any]              # decode_meta, already device-resident
 
 
 def _copy_page_fn(kv, src, dst):
@@ -193,6 +252,26 @@ class Engine:
             "engine.decode_stall_s", "time decode-ready slots sat parked "
             "behind non-decode steps, per decode step")
         self._stall_accum = 0.0
+        # overlapped-pipeline bookkeeping (pump()): staged next-step plans
+        self._staged: Optional[_StagedDecode] = None
+        self._m_overlap_staged = self.metrics.counter(
+            "engine.overlap_staged", "next-step plans staged while the "
+            "device ran the current step")
+        self._m_overlap_used = self.metrics.counter(
+            "engine.overlap_used", "staged plans whose fingerprint still "
+            "matched at dispatch (host work hidden behind device time)")
+        self._m_overlap_dropped = self.metrics.counter(
+            "engine.overlap_dropped", "staged plans invalidated by a "
+            "retirement/EOS/admission/preemption before dispatch")
+        # request-lifecycle admission guards
+        self._inflight: set = set()   # rids queued, live, or awaiting collect
+        self._m_reject_budget = self.metrics.counter(
+            "sched.rejections", "admission attempts blocked, by reason",
+            labels=("reason",)).labels(reason="no_budget")
+        # streaming hook: called as each token is *collected* (host side).
+        # A preemption replay re-fires earlier indexes with identical tokens
+        # (greedy determinism); stream consumers dedup by index.
+        self.on_token: Optional[Callable[[int, int, int, float], None]] = None
 
     # legacy spelling kept for callers/tests that read the old counter field
     @property
@@ -203,46 +282,89 @@ class Engine:
 
     def add_request(self, prompt: Sequence[int], max_new_tokens: int = 16,
                     rid: Optional[int] = None) -> int:
-        """Queue a prompt; returns the request id."""
+        """Queue a prompt; returns the request id.
+
+        A request with no token budget under ``max_len`` (prompt too long,
+        or a non-positive budget after clamping) is rejected *gracefully*:
+        it is counted under ``sched.rejections{reason=no_budget}`` and
+        surfaces from ``collect()`` as a failed ``RequestResult`` (empty
+        tokens, ``error`` set) instead of raising mid-batch and stranding
+        already-admitted requests.  The only submission-time exception is a
+        ``rid`` collision with an in-flight request — accepting it would
+        corrupt tracer and result bookkeeping, so that raises immediately."""
         if rid is None:
             rid = self._next_rid
+        elif rid in self._inflight:
+            raise ValueError(f"request id {rid} collides with an in-flight "
+                             f"request (queued, live, or awaiting collect)")
         self._next_rid = max(self._next_rid, rid) + 1
+        self._inflight.add(rid)
         prompt = [int(t) for t in prompt]
+        now = time.perf_counter()
         max_new = min(int(max_new_tokens), self.scfg.max_len - len(prompt))
         if max_new < 1:
-            raise ValueError(f"request {rid}: no token budget under "
-                             f"max_len={self.scfg.max_len}")
-        req = Request(rid=rid, prompt=prompt, max_new=max_new,
-                      arrival=time.perf_counter())
+            self._m_reject_budget.inc()
+            req = Request(rid=rid, prompt=prompt, max_new=0, arrival=now,
+                          error=f"no_budget: prompt len {len(prompt)} leaves "
+                                f"no token budget under max_len="
+                                f"{self.scfg.max_len}")
+            req.t_finish = now
+            self.sched.finished.append(req)
+            self.tracer.on_rejected(rid, now, "no_budget")
+            return rid
+        req = Request(rid=rid, prompt=prompt, max_new=max_new, arrival=now)
         self.sched.add(req)
         return rid
 
+    def cancel(self, rid: int) -> bool:
+        """Abort a queued or live request (e.g. a disconnected streaming
+        client): its slot/pages are released immediately and it surfaces
+        from ``collect()`` as a failed result carrying whatever tokens it
+        had produced.  Returns False if ``rid`` is not queued or live."""
+        now = time.perf_counter()
+        for req in list(self.sched.queue):
+            if req.rid == rid:
+                self.sched.queue.remove(req)
+                self.sched._m_queue.set(len(self.sched.queue))
+                req.error = "cancelled"
+                req.t_finish = now
+                self.sched.finished.append(req)
+                self.tracer.on_rejected(rid, now, "cancelled")
+                return True
+        for i, slot in enumerate(self.sched.slots):
+            if slot is not None and slot.req.rid == rid:
+                self._drop_staged()           # slot set is about to change
+                slot.req.error = "cancelled"
+                slot.req.t_finish = now
+                self.sched.retire(i)
+                self.tracer.on_finished(rid, now, len(slot.req.generated))
+                return True
+        return False
+
     def step(self) -> bool:
         """Run one scheduler action (a prefill, a continuation chunk, a
-        restore, or a decode). False when idle."""
-        action = self.sched.next_action()
-        if action is None:
+        restore, or a decode) synchronously. False when idle."""
+        pending = self._dispatch_next()
+        if pending is None:
             return False
-        waiting = bool(self.sched.decode_ready())
-        t0 = time.perf_counter()
-        if action[0] == "prefill":
-            self._run_prefill(action[1], t0)
-        elif action[0] == "prefill_chunk":
-            self._run_chunks(action[1], t0)
-        elif action[0] == "restore":
-            self._run_restore(action[1], t0)
-        else:
-            self._run_decode(action[1], t0)
-        t1 = time.perf_counter()
-        n_rows = 1 if action[0] == "restore" else len(action[1])
-        self.tracer.step_span(action[0], t0, t1, rows=n_rows,
-                              decode_waiting=waiting)
-        if action[0] == "decode":
-            self._h_stall.observe(self._stall_accum)
-            self._stall_accum = 0.0
-        elif waiting:
-            # decode-ready slots sat out this step: head-of-line stall
-            self._stall_accum += t1 - t0
+        self._finish_step(pending)
+        return True
+
+    def pump(self) -> bool:
+        """One *overlapped* step: dispatch the next action, stage the host
+        plan for the step after it while the device computes, then collect.
+        Token-for-token identical to ``step()`` (a staged plan is used only
+        when it fingerprints equal to a replan); the win is host time hidden
+        behind device time.  False when idle."""
+        pending = self._dispatch_next()
+        if pending is None:
+            return False
+        self.tracer.host_span("dispatch", pending.t0, pending.t_dispatched,
+                              kind=pending.kind)
+        t_s0 = time.perf_counter()
+        if self._stage_next(pending):
+            self.tracer.host_span("stage", t_s0, time.perf_counter())
+        self._finish_step(pending, overlap=True)
         return True
 
     def collect(self) -> List[RequestResult]:
@@ -250,12 +372,16 @@ class Engine:
         out = []
         for req in self.sched.finished:
             rec = self.tracer.requests.get(req.rid)
+            latency = (req.t_finish - req.arrival
+                       if req.t_finish is not None else 0.0)
             res = RequestResult(
                 rid=req.rid, prompt=req.prompt, tokens=list(req.generated),
-                latency=req.t_finish - req.arrival,
-                ttft=req.t_first - req.arrival,
+                latency=latency,
+                ttft=(req.t_first - req.arrival
+                      if req.t_first is not None else 0.0),
                 n_preemptions=req.n_preemptions,
-                cached_tokens=req.cached_tokens)
+                cached_tokens=req.cached_tokens,
+                error=req.error)
             if rec is not None and rec.t_finish is not None:
                 # per-request timing from the lifecycle tracer (one source
                 # of truth for spans, results, and the trace report)
@@ -267,30 +393,41 @@ class Engine:
                     / max(len(req.generated) - 1, 1)
                 res.n_prefill_chunks = rec.n_chunks
                 res.preempted = rec.n_preemptions > 0
+            self._inflight.discard(req.rid)
             out.append(res)
         self.sched.finished.clear()
         return out
 
     def run_offline(self, prompts: Sequence[Sequence[int]],
-                    max_new_tokens=16) -> Tuple[List[RequestResult], Dict]:
+                    max_new_tokens=16, *,
+                    overlap: bool = False) -> Tuple[List[RequestResult], Dict]:
         """Admit every prompt, drive the loop dry, return (results, metrics).
 
-        ``max_new_tokens`` is an int or a per-prompt sequence."""
+        ``max_new_tokens`` is an int or a per-prompt sequence.  With
+        ``overlap=True`` the loop runs the pipelined ``pump()`` instead of
+        the synchronous ``step()`` (same tokens, host work hidden behind
+        device time)."""
         budgets = ([max_new_tokens] * len(prompts)
                    if isinstance(max_new_tokens, int) else list(max_new_tokens))
+        # a reused engine must not leak the previous run's trailing stall
+        # time (or a stale staged plan) into this run's accounting
+        self._stall_accum = 0.0
+        self._staged = None
         t0 = time.perf_counter()
         for p, m in zip(prompts, budgets):
             self.add_request(p, m)
-        while self.step():
+        drive = self.pump if overlap else self.step
+        while drive():
             pass
         wall = time.perf_counter() - t0
         results = sorted(self.collect(), key=lambda r: r.rid)
-        # the shared schema (same keys as generate_static, column-for-column)
-        # sourced from the metrics registry, plus engine-only extras
+        # latency/TTFT percentiles come from requests that actually served —
+        # a rejected request has no first token and would drag p50 to zero
+        ok = [r for r in results if not r.failed]
         metrics = shared_metrics(
             len(results), sum(len(r.tokens) for r in results),
-            [r.latency for r in results], wall,
-            ttfts=[r.ttft for r in results],
+            [r.latency for r in ok], wall,
+            ttfts=[r.ttft for r in ok],
             prompt_tokens=sum(len(r.prompt) for r in results),
             cached_tokens=sum(r.cached_tokens for r in results),
             prefill_steps=self._m_prefill_steps.value,
@@ -298,6 +435,7 @@ class Engine:
             prefill_actual_tokens=self._m_actual.value,
             decode_step_s=self._h_decode_step.values,
             decode_stall_s=self._h_stall.values)
+        metrics["rejected_requests"] = len(results) - len(ok)
         metrics["multi_admit_prefills"] = self._m_multi_admit.value
         metrics["chunked_prefill_steps"] = self._m_chunk_steps.value
         metrics["state_restores"] = self._m_restores.value
@@ -312,6 +450,96 @@ class Engine:
         """Full registry snapshot (counters/gauges/histograms of every
         serving layer) — the ``--metrics-json`` payload."""
         return self.metrics.snapshot()
+
+    # --------------------------------------------------- dispatch / collect
+
+    def _drop_staged(self) -> None:
+        if self._staged is not None:
+            self._m_overlap_dropped.inc()
+            self._staged = None
+
+    def _dispatch_next(self) -> Optional[_Pending]:
+        """Scheduler decision + host-side meta build + jitted-call launch
+        for one step; returns without blocking on the device (jax dispatch
+        is asynchronous).  ``None`` on drain — trailing stall time
+        accumulated behind non-decode steps is flushed there so it cannot
+        leak into a later run on a reused engine."""
+        action = self.sched.next_action()
+        if action is None:
+            self._drop_staged()
+            if self._stall_accum:
+                self._h_stall.observe(self._stall_accum)
+                self._stall_accum = 0.0
+            return None
+        waiting = bool(self.sched.decode_ready())
+        kind, payload = action
+        if kind != "decode":
+            self._drop_staged()
+        t0 = time.perf_counter()
+        if kind == "prefill":
+            rows, out = self._launch_prefill(payload, t0)
+        elif kind == "prefill_chunk":
+            rows, out = self._launch_chunks(payload, t0)
+        elif kind == "restore":
+            self._run_restore(payload, t0)
+            rows, out = None, None
+        else:
+            rows, out = payload, self._launch_decode(payload)
+        return _Pending(kind=kind, payload=payload, rows=rows, out_dev=out,
+                        t0=t0, t_dispatched=time.perf_counter(),
+                        waiting=waiting)
+
+    def _finish_step(self, pending: _Pending, overlap: bool = False) -> None:
+        """Block on the pending step's device output and run the host-side
+        bookkeeping: token appends, retirement, step span, stall account."""
+        t_c0 = time.perf_counter()
+        if pending.kind == "decode":
+            self._collect_decode(pending)
+        elif pending.kind in ("prefill", "prefill_chunk"):
+            self._collect_prefill(pending)
+        t1 = time.perf_counter()
+        n_rows = 1 if pending.kind == "restore" else len(pending.payload)
+        self.tracer.step_span(pending.kind, pending.t0, t1, rows=n_rows,
+                              decode_waiting=pending.waiting)
+        if overlap:
+            self.tracer.host_span("collect", t_c0, t1, kind=pending.kind)
+        if pending.kind == "decode":
+            self._h_stall.observe(self._stall_accum)
+            self._stall_accum = 0.0
+        elif pending.waiting:
+            # decode-ready slots sat out this step: head-of-line stall
+            self._stall_accum += t1 - pending.t0
+
+    def _stage_next(self, pending: _Pending) -> bool:
+        """While the dispatched step runs on device, pre-build the host plan
+        for the *next* decode step.  Staged only when the next action is
+        deterministically the same decode batch one position further: the
+        pending step is a decode, nothing is queued, no slot is mid-prefill,
+        no slot retires on budget at this step's collect (an EOS retirement
+        is caught by the dispatch fingerprint instead), and no slot crosses
+        a page boundary at its next position.  True when a plan was staged."""
+        if pending.kind != "decode" or self.sched.queue \
+                or self.sched.prefilling_slots():
+            return False
+        active = list(pending.rows)
+        ps = self.scfg.page_size
+        cap = self.pool.table_width
+        for i in active:
+            slot = self.sched.slots[i]
+            if len(slot.req.generated) + 1 >= slot.req.max_new:
+                return False          # retires when this step collects
+            p1 = slot.pos + 1
+            if self.pool.spec.paged and len(slot.pages) < cap \
+                    and p1 % ps == 0 and p1 // ps >= len(slot.pages):
+                return False          # next decode needs page growth
+        self._staged = _StagedDecode(
+            active=tuple(active),
+            fp=tuple((i, self.sched.slots[i].req.rid,
+                      self.sched.slots[i].pos + 1,
+                      len(self.sched.slots[i].pages)) for i in active),
+            meta=self._decode_plan(active, pos_offset=1))
+        self._m_overlap_staged.inc()
+        return True
 
     # -------------------------------------------------------------- prefill
 
@@ -329,9 +557,9 @@ class Engine:
         key = "frames" if cfg.enc_dec else "image_embeds"
         return {key: jnp.asarray(out)}
 
-    def _prefill_call(self, rows: List[Tuple[int, Any, int, int]],
-                      continuation: bool = False) -> np.ndarray:
-        """Run one batched chunk-prefill call.  ``rows`` holds
+    def _prefill_launch(self, rows: List[Tuple[int, Any, int, int]],
+                        continuation: bool = False):
+        """Launch one batched chunk-prefill call.  ``rows`` holds
         (slot_idx, req, n_done, n_chunk): each row prefills prompt tokens
         [n_done, n_done + n_chunk) into its bound pages / state slot.  The
         batch is padded to a pow2 row count and the tokens to a bucket so
@@ -339,7 +567,8 @@ class Engine:
         prompt lengths).  ``continuation`` marks a batch of chunks after
         the first: no frontend inputs (vlm never chunks, enc-dec reads its
         pinned cross cache instead of re-encoding).  Returns the per-row
-        last-real-token logits."""
+        last-real-token logits *still on device* — the collect half blocks
+        on them with ``np.asarray``."""
         bucket = self.scfg.bucket_of(max(c for _, _, _, c in rows))
         B = _pow2_pad(len(rows), self.scfg.max_slots)
         toks = np.zeros((B, bucket), np.int32)
@@ -380,7 +609,6 @@ class Engine:
             logits, self.pool.kv, state = step(
                 self.params, self.pool.kv, state, meta, jnp.asarray(toks),
                 extras)
-            logits = np.asarray(logits)
         if self.states is not None:
             self.states.state = state
         self._m_padded.inc(B * bucket)
@@ -403,13 +631,17 @@ class Engine:
             if full:
                 self.radix.insert(req.prompt[:full * ps], pages[:full])
         if slot.n_filled >= len(req.prompt):
-            req.t_first = now
+            if req.t_first is None:       # replay keeps the original TTFT
+                req.t_first = now
             self.tracer.on_first_token(req.rid, now)
-            req.generated.append(int(logits_row.argmax()))
+            tok = int(logits_row.argmax())
+            req.generated.append(tok)
+            if self.on_token is not None:
+                self.on_token(req.rid, len(req.generated) - 1, tok, now)
             self._maybe_retire(slot_idx, now)
 
-    def _run_prefill(self, adms: List[Admission], t0: float) -> None:
-        """Execute a batch of already-accounted admissions: fork COW pages if
+    def _launch_prefill(self, adms: List[Admission], t0: float):
+        """Launch a batch of already-accounted admissions: fork COW pages if
         a cache match ended mid-page, then prefill each request's *first
         chunk* — the whole uncached tail unless chunking caps it — straight
         into the bound pages / state slots in one call."""
@@ -423,34 +655,38 @@ class Engine:
                 self._m_cow.inc()
         rows = [(adm.slot_idx, adm.req, adm.n_matched, adm.n_chunk)
                 for adm in adms]
-        logits = self._prefill_call(rows)
-        now = time.perf_counter()
+        out = self._prefill_launch(rows)
         self._m_prefill_steps.inc()
         if len(adms) > 1:
             self._m_multi_admit.inc()
-        for i, adm in enumerate(adms):
-            self.tracer.on_chunk(adm.req.rid, t0, now,
-                                 n_done=adm.n_matched, n_chunk=adm.n_chunk)
-            self._after_chunk(adm.slot_idx, adm.req, adm.n_matched,
-                              adm.n_chunk, logits[i], now, adm.pages)
+        return rows, out
 
-    def _run_chunks(self, slot_idxs: List[int], t0: float) -> None:
-        """Execute a batch of continuation chunks for mid-prefill slots."""
+    def _launch_chunks(self, slot_idxs: List[int], t0: float):
+        """Launch a batch of continuation chunks for mid-prefill slots."""
         rows = []
         for i in slot_idxs:
             slot = self.sched.slots[i]
             n_done = slot.n_filled
             n_chunk = self.sched._chunk_len(n_done, len(slot.req.prompt))
             rows.append((i, slot.req, n_done, n_chunk))
-        logits = self._prefill_call(rows, continuation=True)
-        now = time.perf_counter()
+        out = self._prefill_launch(rows, continuation=True)
         self._m_prefill_steps.inc()
         self._m_chunk_steps.inc()
-        for r, (i, req, n_done, n_chunk) in enumerate(rows):
-            self.tracer.on_chunk(req.rid, t0, now,
+        return rows, out
+
+    def _collect_prefill(self, pending: _Pending) -> None:
+        """Collect half of a prefill/chunk step: block on the device logits,
+        then advance every row's cursor (first tokens, cache publishes,
+        retirement)."""
+        logits = np.asarray(pending.out_dev)     # blocks: device step done
+        now = time.perf_counter()
+        for r, (slot_idx, req, n_done, n_chunk) in enumerate(pending.rows):
+            self.tracer.on_chunk(req.rid, pending.t0, now,
                                  n_done=n_done, n_chunk=n_chunk)
-            self._after_chunk(i, req, n_done, n_chunk, logits[r], now,
-                              self.sched.slots[i].pages)
+            pages = (pending.payload[r].pages if pending.kind == "prefill"
+                     else self.sched.slots[slot_idx].pages)
+            self._after_chunk(slot_idx, req, n_done, n_chunk, logits[r],
+                              now, pages)
 
     def _run_restore(self, adm: Admission, t0: float) -> None:
         """Re-admit a checkpointed (preempted) request: write its state
@@ -465,35 +701,69 @@ class Engine:
 
     # --------------------------------------------------------------- decode
 
-    def _run_decode(self, active: List[int], t_step: float) -> None:
+    def _decode_plan(self, active: List[int],
+                     pos_offset: int = 0) -> Dict[str, Any]:
+        """Flat per-step decode metadata, derived once on the host (numpy)
+        instead of re-derived by every layer's block inside the scanned
+        decode step.  ``pos_offset=1`` builds the *next* step's plan while
+        this step's collect hasn't advanced the cursors yet (staging)."""
         B = self.scfg.max_slots
         maxp = max(self.pool.table_width, 1)
-        tokens = np.zeros((B,), np.int32)
         pos = np.zeros((B,), np.int32)
         tables = np.full((B, maxp), NULL_PAGE, np.int32)
         for i in active:
             slot = self.sched.slots[i]
-            tokens[i] = slot.req.generated[-1]
-            pos[i] = slot.pos
+            pos[i] = slot.pos + pos_offset
             tables[i] = slot.table
-        state = self.states.state if self.states is not None else {}
-        # flat per-step metadata, derived once on the host (numpy) instead of
-        # re-derived by every layer's block inside the scanned decode step
-        meta = {k: jnp.asarray(v) for k, v in decode_meta(
+        return {k: jnp.asarray(v) for k, v in decode_meta(
             self.cfg, self.scfg.page_size, tables, pos).items()}
-        t0 = time.perf_counter()
+
+    def _launch_decode(self, active: List[int]):
+        """Launch one fixed-shape decode step, reusing a staged plan when
+        its fingerprint still matches reality (a used plan is bit-identical
+        to a replan — same positions, tables, pages — so tokens are exact).
+        Returns (device next-token array, launch time) without blocking."""
+        B = self.scfg.max_slots
+        tokens = np.zeros((B,), np.int32)
+        for i in active:
+            tokens[i] = self.sched.slots[i].req.generated[-1]
+        meta = None
+        if self._staged is not None:
+            st, self._staged = self._staged, None
+            fp = tuple(
+                (i, self.sched.slots[i].req.rid, self.sched.slots[i].pos,
+                 len(self.sched.slots[i].pages)) for i in active)
+            if tuple(active) == st.active and fp == st.fp:
+                meta = st.meta
+                self._m_overlap_used.inc()
+            else:
+                self._m_overlap_dropped.inc()
+        if meta is None:
+            meta = self._decode_plan(active)
+        state = self.states.state if self.states is not None else {}
+        t_launch = time.perf_counter()
         with self.tracer.annotate("decode_step"):
             nxt, self.pool.kv, state = self._decode(
                 self.params, self.pool.kv, state, meta, jnp.asarray(tokens))
-            nxt = np.asarray(nxt)
         if self.states is not None:
             self.states.state = state
+        return nxt, t_launch
+
+    def _collect_decode(self, pending: _Pending) -> None:
+        """Collect half of a decode step: block on the device tokens, then
+        advance cursors, fire streaming hooks, retire finished slots."""
+        nxt_dev, t_launch = pending.out_dev
+        nxt = np.asarray(nxt_dev)                # blocks: device step done
         now = time.perf_counter()
-        self._h_decode_step.observe(now - t0)
-        for i in active:
+        self._h_decode_step.observe(now - t_launch)
+        for i in pending.rows:
             slot = self.sched.slots[i]
             slot.pos += 1
-            slot.req.generated.append(int(nxt[i]))
+            tok = int(nxt[i])
+            slot.req.generated.append(tok)
+            if self.on_token is not None:
+                self.on_token(slot.req.rid, len(slot.req.generated) - 1,
+                              tok, now)
             self._maybe_retire(i, now)
 
     def _maybe_retire(self, slot_idx: int, now: float) -> None:

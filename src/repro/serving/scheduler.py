@@ -77,6 +77,7 @@ class Request:
     cached_tokens: int = 0               # prompt tokens served from the cache
     # checkpoint-on-preempt snapshot: (pos, host state pytree), or None
     checkpoint: Optional[Tuple[int, Any]] = None
+    error: str = ""                      # nonempty: rejected or cancelled
 
     @property
     def finished(self) -> bool:
@@ -472,8 +473,10 @@ class Scheduler:
                                    self.states.checkpoint(slot_idx))
         slot = self._unbind(slot_idx)
         if not checkpointable:
+            # replay regenerates the same greedy tokens, but t_first is NOT
+            # reset: TTFT measures the first token *ever* produced, so the
+            # legacy RequestResult.ttft agrees with tracer ttft_s
             slot.req.generated.clear()
-            slot.req.t_first = None
             slot.req.cached_tokens = 0
         slot.req.n_preemptions += 1
         self.queue.appendleft(slot.req)

@@ -236,6 +236,10 @@ class MetricsRegistry:
 # Chrome trace-event track layout (pid/tid are just track ids to Perfetto)
 ENGINE_PID = 1
 REQUEST_PID = 2
+HOST_TID = 1       # engine-process track for the overlapped host pipeline:
+                   # dispatch / stage / collect spans emitted by Engine.pump()
+                   # sit beside the step track (tid 0) so the overlap is
+                   # visible in Perfetto
 
 
 @dataclasses.dataclass
@@ -318,6 +322,12 @@ class Tracer:
         self._steps += 1
         self.span(ENGINE_PID, 0, name, t_start, t_end, **args)
 
+    def host_span(self, name: str, t_start: float, t_end: float,
+                  **args) -> None:
+        """One host-pipeline phase (dispatch / stage / collect) of an
+        overlapped ``Engine.pump()`` step, on its own engine-process track."""
+        self.span(ENGINE_PID, HOST_TID, name, t_start, t_end, **args)
+
     # ---------------------------------------------------- request lifecycle
 
     def _rec(self, rid: int) -> RequestRecord:
@@ -355,19 +365,36 @@ class Tracer:
         rec.n_chunks += 1
 
     def on_first_token(self, rid: int, t: float) -> None:
+        """Idempotent: TTFT is the first token *ever* produced, so a
+        preemption replay re-earning token 0 does not move it."""
         if self.enabled:
-            self._rec(rid).t_first = t
+            rec = self._rec(rid)
+            if rec.t_first is None:
+                rec.t_first = t
 
     def on_preempted(self, rid: int, t: float, checkpointed: bool) -> None:
+        # note rec.t_first survives a replay: ttft_s measures the first
+        # token ever produced, matching the legacy RequestResult.ttft
         if not self.enabled:
             return
         rec = self._rec(rid)
         rec.n_preemptions += 1
         rec.t_queued = t
-        if not checkpointed:                # replay: first token is re-earned
-            rec.t_first = None
         self.instant(REQUEST_PID, rid, "preempted", t,
                      checkpointed=checkpointed)
+
+    def on_rejected(self, rid: int, t: float, reason: str) -> None:
+        """Terminal transition for a request that never ran: a graceful
+        admission rejection (no token budget) or a cancellation while still
+        queued.  Emits a ``rejected`` instant, which the validator accepts
+        as this rid's terminal event."""
+        if not self.enabled:
+            return
+        rec = self._rec(rid)
+        rec.arrival = rec.arrival or t
+        rec.t_finish = t
+        rec.terminal = True
+        self.instant(REQUEST_PID, rid, "rejected", t, reason=reason)
 
     def on_restored(self, rid: int, t: float) -> None:
         if not self.enabled:
@@ -404,6 +431,11 @@ class Tracer:
             {"ph": "M", "pid": REQUEST_PID, "tid": 0, "name": "process_name",
              "args": {"name": "requests"}},
         ]
+        if any(e.get("pid") == ENGINE_PID and e.get("tid") == HOST_TID
+               for e in self.events):
+            meta.append(
+                {"ph": "M", "pid": ENGINE_PID, "tid": HOST_TID,
+                 "name": "thread_name", "args": {"name": "host pipeline"}})
         meta += [{"ph": "M", "pid": REQUEST_PID, "tid": rid,
                   "name": "thread_name", "args": {"name": f"request {rid}"}}
                  for rid in sorted(self.requests)]
@@ -459,11 +491,11 @@ def validate_trace(trace: Dict[str, Any]) -> List[str]:
 
         if pid == REQUEST_PID:
             names = {e["name"] for e in evs}
-            if not any(e["ph"] == "i" and e["name"] == "finished"
+            if not any(e["ph"] == "i" and e["name"] in ("finished", "rejected")
                        for e in evs):
                 problems.append(
                     f"request {tid}: admitted (spans {sorted(names)}) but "
-                    f"never reached a terminal 'finished' event")
+                    f"never reached a terminal 'finished'/'rejected' event")
             queued_ends = [e["ts"] + e.get("dur", 0.0) for e in evs
                           if e["ph"] == "X" and e["name"] == "queued"]
             decodes = [e["ts"] for e in evs

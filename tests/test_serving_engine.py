@@ -171,8 +171,16 @@ def test_every_family_reports_pageable():
 
 
 def test_prompt_too_long_rejected():
+    """A zero-budget prompt no longer raises mid-batch: it surfaces as a
+    failed RequestResult and is counted under sched.rejections, while the
+    rest of the batch drains normally."""
     cfg = _cfg()
     eng = Engine(cfg, ServeConfig(page_size=8, max_slots=2, max_len=16),
                  init_params(cfg, jax.random.PRNGKey(0)))
-    with pytest.raises(ValueError):
-        eng.add_request(list(range(1, 17)), max_new_tokens=4)
+    rid = eng.add_request(list(range(1, 17)), max_new_tokens=4)
+    results = eng.collect()
+    assert len(results) == 1 and results[0].rid == rid
+    assert results[0].failed and "no_budget" in results[0].error
+    assert results[0].tokens == []
+    reject = eng.metrics.get("sched.rejections").labels(reason="no_budget")
+    assert reject.value == 1
