@@ -1,16 +1,26 @@
 """Perf-regression gate over the BENCH_history.jsonl trajectory.
 
-``serve_throughput`` appends one summary line per run; this script compares
-the newest entry of each ``(arch, attn_backend)`` group against the *median*
-of that group's prior entries (median, not mean, so one historical outlier
-cannot poison the baseline) and exits nonzero when the newest run regressed:
+``serve_throughput`` appends one summary line per run *per kv_dtype*; this
+script compares the newest entry of each ``(arch, attn_backend, kv_dtype)``
+group against the *median* of that group's prior entries (median, not mean,
+so one historical outlier cannot poison the baseline) and exits nonzero when
+the newest run regressed:
 
 * ``tokens_per_s_continuous`` dropped more than 15%, or
 * ``decode_step_ms_p50`` rose more than 25%, or
 * ``poisson_goodput_tokens_per_s`` (the open-loop streaming section)
   dropped more than 20% — gated only when the newest entry *and* every
   prior in the group carry the key, so histories that predate the Poisson
-  section never fail on it.
+  section never fail on it, or
+* ``kv_bytes_per_token`` rose more than 15% — same whole-group-carries-it
+  rule.  Bytes/token is a *pool layout* property, so any rise means someone
+  fattened the page format (e.g. widened the int8 scale dtype) and the
+  quantization win quietly shrank.
+
+``kv_dtype`` defaults to ``bf16`` for entries that predate the quantized
+mode, so old histories fold into the bf16 group instead of forming a
+phantom one; the int8 series (whose throughput and bytes/token sit on a
+different scale) is gated against its own priors only.
 
 A group with fewer than 3 entries (newest + at least 2 priors) has no
 trustworthy baseline — it is reported but never failed.  ``--warn-only``
@@ -53,20 +63,21 @@ def load_history(path: str) -> List[Dict[str, Any]]:
 
 
 def check(entries: List[Dict[str, Any]], max_tok_drop: float,
-          max_step_rise: float,
-          max_goodput_drop: float = 0.20) -> List[Dict[str, Any]]:
-    """One verdict row per (arch, attn_backend) group, newest vs median of
-    priors.  ``status`` is ok / regressed / insufficient-history."""
+          max_step_rise: float, max_goodput_drop: float = 0.20,
+          max_kv_bytes_rise: float = 0.15) -> List[Dict[str, Any]]:
+    """One verdict row per (arch, attn_backend, kv_dtype) group, newest vs
+    median of priors.  ``status`` is ok / regressed / insufficient-history."""
     groups: Dict[tuple, List[Dict[str, Any]]] = {}
     for e in entries:                     # file order == append order
-        groups.setdefault((e.get("arch"), e.get("attn_backend")), []).append(e)
+        groups.setdefault((e.get("arch"), e.get("attn_backend"),
+                           e.get("kv_dtype", "bf16")), []).append(e)
 
     rows = []
-    for (arch, backend), group in sorted(groups.items()):
+    for (arch, backend, kv_dtype), group in sorted(groups.items()):
         newest, priors = group[-1], group[:-1]
         row: Dict[str, Any] = {
-            "arch": arch, "attn_backend": backend, "n_entries": len(group),
-            "status": "ok", "problems": [],
+            "arch": arch, "attn_backend": backend, "kv_dtype": kv_dtype,
+            "n_entries": len(group), "status": "ok", "problems": [],
         }
         if len(group) < MIN_ENTRIES:
             row["status"] = "insufficient-history"
@@ -109,6 +120,21 @@ def check(entries: List[Dict[str, Any]], max_tok_drop: float,
                     f"{(1 - good_now / good_base) * 100:.1f}% below the "
                     f"median-of-priors {good_base:.1f} "
                     f"(threshold {max_goodput_drop * 100:.0f}%)")
+        # KV bytes/token (pool page layout): only gate when the whole group
+        # carries the key (entries from before the quantized-KV mode lack it)
+        kb_key = "kv_bytes_per_token"
+        if kb_key in newest and all(kb_key in p for p in priors):
+            kb_base = _median([p[kb_key] for p in priors])
+            kb_now = newest[kb_key]
+            row["kv_bytes_per_token"] = {
+                "baseline": kb_base, "newest": kb_now,
+                "ratio": kb_now / max(kb_base, 1e-12)}
+            if kb_now > kb_base * (1.0 + max_kv_bytes_rise):
+                row["problems"].append(
+                    f"kv_bytes_per_token {kb_now:.1f} is "
+                    f"{(kb_now / kb_base - 1) * 100:.1f}% above the "
+                    f"median-of-priors {kb_base:.1f} "
+                    f"(threshold {max_kv_bytes_rise * 100:.0f}%)")
         if newest.get("tokens_match") is False:
             row["problems"].append("newest run reports tokens_match=false "
                                    "(correctness, not just perf)")
@@ -137,6 +163,10 @@ def main(argv=None) -> int:
                     help="max tolerated poisson_goodput_tokens_per_s drop "
                          "(fraction, default 0.20; only gated when every "
                          "entry in the group has the Poisson section)")
+    ap.add_argument("--max-kv-bytes-rise", type=float, default=0.15,
+                    help="max tolerated kv_bytes_per_token rise (fraction, "
+                         "default 0.15; only gated when every entry in the "
+                         "group has the key)")
     args = ap.parse_args(argv)
 
     if not os.path.exists(args.history):
@@ -149,10 +179,10 @@ def main(argv=None) -> int:
         return 0
 
     rows = check(entries, args.max_tok_drop, args.max_step_rise,
-                 args.max_goodput_drop)
+                 args.max_goodput_drop, args.max_kv_bytes_rise)
     print(f"[check_regression] {len(entries)} history entries, "
-          f"{len(rows)} (arch, attn_backend) groups")
-    print(f"  {'arch':<24} {'backend':<10} {'n':>3} {'tok/s':>16} "
+          f"{len(rows)} (arch, attn_backend, kv_dtype) groups")
+    print(f"  {'arch':<24} {'backend':<10} {'kv':<5} {'n':>3} {'tok/s':>16} "
           f"{'step_ms_p50':>16}  status")
     failed = False
     for r in rows:
@@ -164,10 +194,16 @@ def main(argv=None) -> int:
             step = (f"{r['decode_step_ms_p50']['newest']:7.2f}/"
                     f"{r['decode_step_ms_p50']['baseline']:<8.2f}")
         print(f"  {r['arch']:<24} {r['attn_backend']:<10} "
-              f"{r['n_entries']:>3} {tok:>16} {step:>16}  {r['status']}")
+              f"{r['kv_dtype']:<5} {r['n_entries']:>3} {tok:>16} "
+              f"{step:>16}  {r['status']}")
         if "poisson_goodput" in r:
             g = r["poisson_goodput"]
             print(f"    poisson goodput tok/s: {g['newest']:.1f} vs "
+                  f"median-of-priors {g['baseline']:.1f} "
+                  f"(ratio {g['ratio']:.2f})")
+        if "kv_bytes_per_token" in r:
+            g = r["kv_bytes_per_token"]
+            print(f"    kv bytes/token: {g['newest']:.1f} vs "
                   f"median-of-priors {g['baseline']:.1f} "
                   f"(ratio {g['ratio']:.2f})")
         for p in r["problems"]:

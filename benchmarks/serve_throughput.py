@@ -42,8 +42,16 @@ rate, per-request TTFT/TPOT deadlines, reporting goodput (tokens from
 SLO-meeting requests only), SLO attainment, and TTFT/TPOT percentiles —
 streamed tokens exact-checked against the static baseline.
 
-Emits BENCH_serve.json and appends a one-line summary to
-BENCH_history.jsonl (the perf trajectory across runs).
+A fifth section (``quantization``) serves the same mixed workload with
+``kv_dtype=int8`` (int8 KV pages + per-page bf16 absmax scales, dequant
+in-kernel) vs ``bf16``, reporting KV bytes/token, tokens/s, max concurrent
+residency at a fixed pool byte budget, and the dual-gate parity stats
+(bounded max-abs logit error + exact greedy match at high-margin tokens,
+see ``serving.quant_verify``).
+
+Emits BENCH_serve.json and appends one summary line per kv_dtype to
+BENCH_history.jsonl (the perf trajectory across runs; ``kv_dtype`` keeps
+the bf16 and int8 series in separate regression-gate groups).
 
   PYTHONPATH=src python -m benchmarks.serve_throughput [--requests 16]
 """
@@ -301,6 +309,120 @@ def poisson_openloop(arch: str = "qwen2-0.5b", requests: int = 16,
     return out
 
 
+def quantization(arch: str = "qwen2-0.5b", requests: int = 8,
+                 slots: int = 4, gen: int = 8, prompt_lo: int = 8,
+                 prompt_hi: int = 24, pool_budget_mib: float = 64.0,
+                 seed: int = 0, attn_backend: str = "auto"):
+    """Quantized-KV section: int8 paged pool vs bf16 on the same workload.
+
+    Serves one mixed-length closed-loop workload twice — ``kv_dtype=bf16``
+    and ``kv_dtype=int8`` (same params, same backend, both warmed) — and
+    reports the three numbers the int8 mode is judged on:
+
+    * ``kv_bytes_per_token`` both ways (int8 pages + bf16 per-page scales
+      vs bf16 pages; the acceptance bar is a ratio <= 0.55x);
+    * decode throughput both ways (tokens/s and decode-step p50 — the HBM
+      gather moves half the bytes, so int8 must not be slower);
+    * max concurrent residency at a *fixed pool byte budget*: how many
+      max-length requests fit if the whole pool is capped at
+      ``pool_budget_mib`` — the capacity win quantization buys (bar:
+      >= 1.8x).
+
+    The int8 run's tokens then go through the dual-gate verifier
+    (``serving.quant_verify``): bounded max-abs logit error vs a bf16
+    replay plus exact greedy match at high-margin positions.  The error
+    stats land in the payload so the quantization noise level is tracked
+    run-over-run alongside throughput."""
+    import dataclasses as _dc
+
+    from repro.configs import ServeConfig, get_arch, reduced
+    from repro.serving import Engine, dual_gate_verify
+
+    cfg = _dc.replace(reduced(get_arch(arch)), remat="none")
+    rng = np.random.RandomState(seed)
+    ps = 16
+    max_len = ((prompt_hi + gen + ps - 1) // ps) * ps
+    base = ServeConfig(page_size=ps, max_slots=slots, max_len=max_len,
+                       attn_backend=attn_backend)
+    int8 = dataclasses.replace(base, kv_dtype="int8")
+    prompts = [rng.randint(1, cfg.vocab, size=int(
+        rng.randint(prompt_lo, prompt_hi + 1))).tolist()
+        for _ in range(requests)]
+    budgets = [gen] * requests
+
+    eng_b = Engine(cfg, base, seed=seed)
+    params = eng_b.params
+    if not eng_b.pool.spec.paged:
+        return {"arch": cfg.name, "skipped":
+                "kv_dtype only applies to paged attention families"}
+    # warm every jit shape for both dtypes before the timed runs
+    eng_b.run_offline(prompts, budgets)
+    Engine(cfg, int8, params).run_offline(prompts, budgets)
+
+    _, m_b = Engine(cfg, base, params).run_offline(prompts, budgets)
+    eng_i = Engine(cfg, int8, params)
+    res_i, m_i = eng_i.run_offline(prompts, budgets)
+
+    # capacity at a fixed byte budget: page_nbytes counts payload AND scale
+    # leaves for int8 (a page id owns its slice of both), so the residency
+    # ratio is the honest capacity win, not payload-only accounting
+    pages_req = eng_b.pool.pages_for(prompt_hi + gen)
+    budget = int(pool_budget_mib * 2 ** 20)
+    resident_b = budget // (eng_b.pool.page_nbytes * pages_req)
+    resident_i = budget // (eng_i.pool.page_nbytes * pages_req)
+
+    report = dual_gate_verify(cfg, int8, params, prompts,
+                              [r.tokens for r in res_i],
+                              attn_backend=m_i["attn_backend"])
+    verify = {k: v for k, v in report.items() if k != "per_request"}
+    verify["per_request_max_err"] = [r["max_err"]
+                                    for r in report["per_request"]]
+
+    out = {
+        "arch": cfg.name,
+        "attn_backend": m_i["attn_backend"],
+        "requests": requests,
+        "bf16": {
+            "kv_bytes_per_token": eng_b.pool.kv_bytes_per_token,
+            "page_nbytes": eng_b.pool.page_nbytes,
+            "tokens_per_s": m_b["tokens_per_s"],
+            "decode_step_ms_p50": m_b["decode_step_ms_p50"],
+        },
+        "int8": {
+            "kv_bytes_per_token": eng_i.pool.kv_bytes_per_token,
+            "page_nbytes": eng_i.pool.page_nbytes,
+            "tokens_per_s": m_i["tokens_per_s"],
+            "decode_step_ms_p50": m_i["decode_step_ms_p50"],
+        },
+        "kv_bytes_ratio": (eng_i.pool.kv_bytes_per_token
+                           / max(eng_b.pool.kv_bytes_per_token, 1e-9)),
+        "tokens_per_s_ratio": (m_i["tokens_per_s"]
+                               / max(m_b["tokens_per_s"], 1e-9)),
+        "pool_budget_mib": pool_budget_mib,
+        "pages_per_request": pages_req,
+        "max_resident_bf16": int(resident_b),
+        "max_resident_int8": int(resident_i),
+        "residency_ratio": resident_i / max(resident_b, 1),
+        "quant_verify": verify,
+        "dual_gate_ok": report["ok"],
+    }
+    print(f"serve_throughput,quantization,arch={cfg.name},"
+          f"kv_bytes_per_token={out['bf16']['kv_bytes_per_token']:.0f}"
+          f"->{out['int8']['kv_bytes_per_token']:.0f}"
+          f" (x{out['kv_bytes_ratio']:.3f}),"
+          f"tok_s={out['bf16']['tokens_per_s']:.1f}"
+          f"->{out['int8']['tokens_per_s']:.1f},"
+          f"residency={out['max_resident_bf16']}"
+          f"->{out['max_resident_int8']}"
+          f" (x{out['residency_ratio']:.2f})")
+    print(f"serve_throughput,quantization,max_logit_err="
+          f"{verify['max_logit_err']:.4f} (tol {verify['tol']:.2f}),"
+          f"high_margin_mismatches={verify['high_margin_mismatches']}/"
+          f"{verify['high_margin_tokens']},"
+          f"dual_gate_ok={report['ok']}")
+    return out
+
+
 # one reduced arch per cache family (see src/repro/models/cache_spec.py)
 FAMILY_MATRIX = (
     ("paged_kv", "qwen2-0.5b"),
@@ -458,6 +580,8 @@ def run(arch: str = "qwen2-0.5b", requests: int = 16, slots: int = 4,
         "poisson_openloop": poisson_openloop(
             arch=arch, requests=requests, slots=slots, seed=seed,
             attn_backend=attn_backend),
+        "quantization": quantization(
+            arch=arch, slots=slots, seed=seed, attn_backend=attn_backend),
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
     }
     path = os.path.join(os.path.dirname(os.path.dirname(
@@ -468,12 +592,17 @@ def run(arch: str = "qwen2-0.5b", requests: int = 16, slots: int = 4,
     # regressions show as a series instead of a silent overwrite
     adv = payload["chunked_prefill"]
     poi = payload["poisson_openloop"]
+    quant = payload["quantization"]
     with open(os.path.join(os.path.dirname(path), "BENCH_history.jsonl"),
               "a") as f:
+        # kv_dtype is part of every line so check_regression groups never
+        # mix dtypes — an int8 run must not drag down the bf16 baseline
+        # (or vice versa)
         f.write(json.dumps({
             "timestamp": payload["timestamp"],
             "arch": payload["arch"],
             "attn_backend": payload["attn_backend"],
+            "kv_dtype": "bf16",
             "tokens_per_s_static": static_m["tokens_per_s"],
             "tokens_per_s_continuous": cont_m["tokens_per_s"],
             "tokens_per_s_prefix_cache": cache_m["tokens_per_s"],
@@ -487,9 +616,30 @@ def run(arch: str = "qwen2-0.5b", requests: int = 16, slots: int = 4,
             "poisson_goodput_tokens_per_s": poi["goodput_tokens_per_s"],
             "poisson_slo_attainment": poi["slo_attainment"],
             "poisson_ttft_p95_s": poi["ttft_p95_s"],
+            **({"kv_bytes_per_token":
+                quant["bf16"]["kv_bytes_per_token"]}
+               if "bf16" in quant else {}),
             "tokens_match": bool(match and adv["tokens_match_static"]
                                  and poi["tokens_match_static"]),
         }) + "\n")
+        if "int8" in quant:
+            # second trajectory line for the quantized mode: its own
+            # (arch, backend, kv_dtype=int8) group gates int8 throughput
+            # and bytes/token without polluting the bf16 series
+            f.write(json.dumps({
+                "timestamp": payload["timestamp"],
+                "arch": payload["arch"],
+                "attn_backend": quant["attn_backend"],
+                "kv_dtype": "int8",
+                "tokens_per_s_continuous":
+                    quant["int8"]["tokens_per_s"],
+                "decode_step_ms_p50":
+                    quant["int8"]["decode_step_ms_p50"],
+                "kv_bytes_per_token":
+                    quant["int8"]["kv_bytes_per_token"],
+                "max_logit_err": quant["quant_verify"]["max_logit_err"],
+                "tokens_match": bool(quant["dual_gate_ok"]),
+            }) + "\n")
     print(f"serve_throughput,arch={cfg.name},requests={requests},"
           f"concurrency={slots},families={families},"
           f"static_tok_s={static_m['tokens_per_s']:.1f},"

@@ -230,6 +230,12 @@ class ServeConfig:
                                  # > 0 = long prompts split into page-aligned
                                  # chunks of at most this many tokens that
                                  # interleave with decode steps (Sarathi-style)
+    kv_dtype: str = "bf16"       # paged-KV storage dtype: bf16 (token-exact
+                                 # vs static) or int8 (absmax-quantized pages
+                                 # with per-token-per-head bf16 scales and
+                                 # in-kernel dequant; parity contract becomes
+                                 # bounded logit error + high-margin greedy
+                                 # match, see serving/quant_verify)
 
     def __post_init__(self):
         assert self.page_size > 0 and self.max_slots > 0
@@ -239,6 +245,7 @@ class ServeConfig:
         assert self.attn_backend in ("auto", "reference", "pallas"), \
             self.attn_backend
         assert self.prefill_chunk_tokens >= 0, self.prefill_chunk_tokens
+        assert self.kv_dtype in ("bf16", "int8"), self.kv_dtype
 
     @property
     def chunk_tokens(self) -> int:

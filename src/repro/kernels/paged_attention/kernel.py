@@ -82,9 +82,13 @@ def _page_mask(s, page_idx, pos, *, page_size, window, ring):
     return (k_abs >= 0) & (k_abs <= pos) & (k_abs > pos - window)
 
 
-def _paged_decode_kernel(tables_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
-                         m_scr, l_scr, acc_scr, *, page_size: int,
-                         scale: float, softcap: float, window: int, ring: int):
+def _paged_decode_kernel(tables_ref, pos_ref, q_ref, k_ref, v_ref, *rest,
+                         page_size: int, scale: float, softcap: float,
+                         window: int, ring: int, quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
     b = pl.program_id(0)
     i = pl.program_id(2)
 
@@ -102,6 +106,11 @@ def _paged_decode_kernel(tables_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0, 0].astype(jnp.float32)                  # [G, D]
         k = k_ref[0, :, 0].astype(jnp.float32)               # [ps, D]
         v = v_ref[0, :, 0].astype(jnp.float32)               # [ps, D]
+        if quantized:
+            # in-register dequant: f32(q8) * f32(bf16 per-token scale) — the
+            # HBM gather above moved int8, half the bf16 bytes
+            k = k * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
+            v = v * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
         # scale after the dot, the reference ordering, so the two backends'
         # fp32 scores round identically
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
@@ -120,27 +129,37 @@ def _paged_decode_kernel(tables_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
 
 def paged_decode_fwd(q, k_pages, v_pages, tables, pos, *, scale: float,
                      softcap: float = 0.0, window: int = 0,
-                     interpret: bool = False):
+                     k_scale=None, v_scale=None, interpret: bool = False):
     """q: [B, K, G, D]; k_pages/v_pages: [P, ps, K, D]; tables: [B, n_pages]
     int32 physical page ids; pos: [B] int32 absolute positions.  Returns
     [B, K, G, D].  ``window > 0`` treats the table as a page ring of
-    ``n_pages * ps`` token slots."""
+    ``n_pages * ps`` token slots.  ``k_scale``/``v_scale``: [P, ps, K] bf16
+    per-token-per-head absmax scales when the pool is int8-quantized — the
+    kernel dequantizes in-register after the page DMA."""
     B, K, G, D = q.shape
     ps = k_pages.shape[1]
     n_pages = tables.shape[1]
+    quantized = k_scale is not None
     kernel = functools.partial(
         _paged_decode_kernel, page_size=ps, scale=scale, softcap=softcap,
-        window=window, ring=n_pages * ps)
+        window=window, ring=n_pages * ps, quantized=quantized)
+    page_spec = pl.BlockSpec((1, ps, 1, D),
+                             lambda b, kh, i, tr, pr: (tr[b, i], 0, kh, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, G, D), lambda b, kh, i, tr, pr: (b, kh, 0, 0)),
+        page_spec,
+        page_spec,
+    ]
+    operands = [tables, pos, q, k_pages, v_pages]
+    if quantized:
+        scale_spec = pl.BlockSpec((1, ps, 1),
+                                  lambda b, kh, i, tr, pr: (tr[b, i], 0, kh))
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, K, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, D), lambda b, kh, i, tr, pr: (b, kh, 0, 0)),
-            pl.BlockSpec((1, ps, 1, D),
-                         lambda b, kh, i, tr, pr: (tr[b, i], 0, kh, 0)),
-            pl.BlockSpec((1, ps, 1, D),
-                         lambda b, kh, i, tr, pr: (tr[b, i], 0, kh, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, D),
                                lambda b, kh, i, tr, pr: (b, kh, 0, 0)),
         scratch_shapes=[
@@ -156,12 +175,16 @@ def paged_decode_fwd(q, k_pages, v_pages, tables, pos, *, scale: float,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(tables, pos, q, k_pages, v_pages)
+    )(*operands)
 
 
 def _mla_paged_decode_kernel(tables_ref, pos_ref, q_eff_ref, q_rope_ref,
-                             ckv_ref, krope_ref, ctx_ref, m_scr, l_scr,
-                             acc_scr, *, page_size: int, scale: float):
+                             ckv_ref, krope_ref, *rest, page_size: int,
+                             scale: float, quantized: bool):
+    if quantized:
+        cs_ref, rs_ref, ctx_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        ctx_ref, m_scr, l_scr, acc_scr = rest
     b = pl.program_id(0)
     i = pl.program_id(1)
 
@@ -177,6 +200,12 @@ def _mla_paged_decode_kernel(tables_ref, pos_ref, q_eff_ref, q_rope_ref,
         qr = q_rope_ref[0].astype(jnp.float32)               # [H, R]
         ckv = ckv_ref[0].astype(jnp.float32)                 # [ps, L]
         kr = krope_ref[0].astype(jnp.float32)                # [ps, R]
+        if quantized:
+            # one scale per latent token slot (the latent vector is the
+            # quantization granule); dequantized ckv also feeds the latent
+            # accumulator below, so context picks up the scales too
+            ckv = ckv * cs_ref[0].astype(jnp.float32)[:, None]
+            kr = kr * rs_ref[0].astype(jnp.float32)[:, None]
         s = jax.lax.dot_general(qe, ckv, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         s = s + jax.lax.dot_general(qr, kr, (((1,), (1,)), ((), ())),
@@ -195,25 +224,35 @@ def _mla_paged_decode_kernel(tables_ref, pos_ref, q_eff_ref, q_rope_ref,
 
 
 def mla_paged_decode_fwd(q_eff, q_rope, ckv_pages, krope_pages, tables, pos,
-                         *, scale: float, interpret: bool = False):
+                         *, scale: float, ckv_scale=None, krope_scale=None,
+                         interpret: bool = False):
     """q_eff: [B, H, L] (w_uk-absorbed queries); q_rope: [B, H, R];
     ckv_pages: [P, ps, L]; krope_pages: [P, ps, R]; tables: [B, n_pages];
-    pos: [B].  Returns the latent context [B, H, L]."""
+    pos: [B].  Returns the latent context [B, H, L].  ``ckv_scale``/
+    ``krope_scale``: [P, ps] bf16 per-token absmax scales when the latent
+    pages are int8-quantized."""
     B, H, L = q_eff.shape
     R = q_rope.shape[-1]
     ps = ckv_pages.shape[1]
     n_pages = tables.shape[1]
+    quantized = ckv_scale is not None
     kernel = functools.partial(_mla_paged_decode_kernel, page_size=ps,
-                               scale=scale)
+                               scale=scale, quantized=quantized)
+    in_specs = [
+        pl.BlockSpec((1, H, L), lambda b, i, tr, pr: (b, 0, 0)),
+        pl.BlockSpec((1, H, R), lambda b, i, tr, pr: (b, 0, 0)),
+        pl.BlockSpec((1, ps, L), lambda b, i, tr, pr: (tr[b, i], 0, 0)),
+        pl.BlockSpec((1, ps, R), lambda b, i, tr, pr: (tr[b, i], 0, 0)),
+    ]
+    operands = [tables, pos, q_eff, q_rope, ckv_pages, krope_pages]
+    if quantized:
+        scale_spec = pl.BlockSpec((1, ps), lambda b, i, tr, pr: (tr[b, i], 0))
+        in_specs += [scale_spec, scale_spec]
+        operands += [ckv_scale, krope_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, H, L), lambda b, i, tr, pr: (b, 0, 0)),
-            pl.BlockSpec((1, H, R), lambda b, i, tr, pr: (b, 0, 0)),
-            pl.BlockSpec((1, ps, L), lambda b, i, tr, pr: (tr[b, i], 0, 0)),
-            pl.BlockSpec((1, ps, R), lambda b, i, tr, pr: (tr[b, i], 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, H, L), lambda b, i, tr, pr: (b, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((H,), jnp.float32),
@@ -228,4 +267,4 @@ def mla_paged_decode_fwd(q_eff, q_rope, ckv_pages, krope_pages, tables, pos,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(tables, pos, q_eff, q_rope, ckv_pages, krope_pages)
+    )(*operands)

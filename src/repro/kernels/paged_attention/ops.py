@@ -21,13 +21,15 @@ from .kernel import mla_paged_decode_fwd, paged_decode_fwd
 @partial(jax.jit, static_argnames=("scale", "softcap", "window", "interpret"))
 def paged_attention_decode(q, k_pages, v_pages, tables, pos, *, scale: float,
                            softcap: float = 0.0, window: int = 0,
-                           interpret: bool = None):
+                           k_scale=None, v_scale=None, interpret: bool = None):
     """One-token GQA decode against the paged KV pool.
 
     q: [B, H, D] (the step's roped queries, new token already written to its
     page); k_pages/v_pages: [P, ps, K, D] with H % K == 0; tables: [B,
     n_pages] int32 physical page ids (a ring of ``n_pages`` pages when
     ``window > 0``); pos: [B] int32 absolute positions.  Returns [B, H, D].
+    When the pool is int8, ``k_scale``/``v_scale`` carry the [P, ps, K] bf16
+    absmax scales and the kernel dequantizes in-register.
     """
     B, H, D = q.shape
     K = k_pages.shape[2]
@@ -37,20 +39,24 @@ def paged_attention_decode(q, k_pages, v_pages, tables, pos, *, scale: float,
                          jnp.asarray(tables, jnp.int32),
                          jnp.asarray(pos, jnp.int32), scale=scale,
                          softcap=softcap, window=window,
+                         k_scale=k_scale, v_scale=v_scale,
                          interpret=default_interpret(interpret))
     return o.reshape(B, H, D)
 
 
 @partial(jax.jit, static_argnames=("scale", "interpret"))
 def mla_paged_attention_decode(q_eff, q_rope, ckv_pages, krope_pages, tables,
-                               pos, *, scale: float, interpret: bool = None):
+                               pos, *, scale: float, ckv_scale=None,
+                               krope_scale=None, interpret: bool = None):
     """One-token absorbed-latent MLA decode against the latent pages.
 
     q_eff: [B, H, L] (``w_uk``-absorbed queries); q_rope: [B, H, R] (roped);
     ckv_pages: [P, ps, L]; krope_pages: [P, ps, R]; tables: [B, n_pages];
     pos: [B].  Returns the latent context [B, H, L] — the caller up-projects
-    it with ``w_uv``."""
+    it with ``w_uv``.  ``ckv_scale``/``krope_scale``: [P, ps] bf16 scales
+    when the latent pages are int8-quantized."""
     return mla_paged_decode_fwd(q_eff, q_rope, ckv_pages, krope_pages,
                                 jnp.asarray(tables, jnp.int32),
                                 jnp.asarray(pos, jnp.int32), scale=scale,
+                                ckv_scale=ckv_scale, krope_scale=krope_scale,
                                 interpret=default_interpret(interpret))

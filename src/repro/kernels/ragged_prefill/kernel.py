@@ -75,9 +75,13 @@ def _pv_accumulate(acc_scr, s_scr, seg, v, v_dtype):
 # ------------------------------------------------------------- vanilla GQA
 
 def _ragged_prefill_kernel(tables_ref, start_ref, n_live_ref, q_ref, k_ref,
-                           v_ref, o_ref, s_scr, acc_scr, *, page_size: int,
-                           n_pages: int, q_blk: int, scale: float,
-                           softcap: float, v_dtype):
+                           v_ref, *rest, page_size: int, n_pages: int,
+                           q_blk: int, scale: float, softcap: float, v_dtype,
+                           quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, s_scr, acc_scr = rest
+    else:
+        o_ref, s_scr, acc_scr = rest
     b = pl.program_id(0)
     qb = pl.program_id(2)
     i = pl.program_id(3)
@@ -101,6 +105,8 @@ def _ragged_prefill_kernel(tables_ref, start_ref, n_live_ref, q_ref, k_ref,
         def _():
             q = q_ref[0, 0].astype(jnp.float32).reshape(rows, D)
             k = k_ref[0, :, 0].astype(jnp.float32)               # [ps, D]
+            if quantized:
+                k = k * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
             s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                     preferred_element_type=jnp.float32) * scale
             if softcap:
@@ -123,6 +129,8 @@ def _ragged_prefill_kernel(tables_ref, start_ref, n_live_ref, q_ref, k_ref,
     @pl.when(i >= n_pages)
     def _():
         v = v_ref[0, :, 0].astype(jnp.float32)                   # [ps, D]
+        if quantized:
+            v = v * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
         _pv_accumulate(acc_scr, s_scr, j * page_size, v, v_dtype)
 
     @pl.when(i == 2 * n_pages - 1)
@@ -132,32 +140,48 @@ def _ragged_prefill_kernel(tables_ref, start_ref, n_live_ref, q_ref, k_ref,
 
 def ragged_prefill_fwd(q, k_pages, v_pages, tables, start, n_live, *,
                        scale: float, softcap: float = 0.0, q_blk: int = 128,
-                       interpret: bool = False):
+                       k_scale=None, v_scale=None, interpret: bool = False):
     """q: [B, K, T, G, D] roped chunk queries (T padded to a q_blk multiple);
     k_pages/v_pages: [P, ps, K, D] *post-write* pool; tables: [B, n_pages]
-    int32; start/n_live: [B] int32.  Returns [B, K, T, G, D]."""
+    int32; start/n_live: [B] int32.  Returns [B, K, T, G, D].
+    ``k_scale``/``v_scale``: [P, ps, K] bf16 absmax scales when the pool is
+    int8 (the fresh chunk was quantized on write, so every page — prefix and
+    chunk alike — dequantizes through the same scale pool)."""
     B, K, T, G, D = q.shape
     ps = k_pages.shape[1]
     n_pages = tables.shape[1]
     n_qb = T // q_blk
+    quantized = k_scale is not None
+    # probabilities round to the value dtype before PV (the reference's
+    # ``a.astype(v.dtype)``); the dequantized values are fp32, so quantized
+    # runs keep fp32 probabilities exactly like the reference dequant path
     kernel = functools.partial(
         _ragged_prefill_kernel, page_size=ps, n_pages=n_pages, q_blk=q_blk,
-        scale=scale, softcap=softcap, v_dtype=v_pages.dtype)
+        scale=scale, softcap=softcap,
+        v_dtype=jnp.float32 if quantized else v_pages.dtype,
+        quantized=quantized)
+
+    def _page_map(b, kh, qb, i, tr, st, nl):
+        return (tr[b, jnp.where(i < n_pages, i, i - n_pages)], 0, kh, 0)
+
+    def _scale_map(b, kh, qb, i, tr, st, nl):
+        return (tr[b, jnp.where(i < n_pages, i, i - n_pages)], 0, kh)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, q_blk, G, D),
+                     lambda b, kh, qb, i, tr, st, nl: (b, kh, qb, 0, 0)),
+        pl.BlockSpec((1, ps, 1, D), _page_map),
+        pl.BlockSpec((1, ps, 1, D), _page_map),
+    ]
+    operands = [tables, start, n_live, q, k_pages, v_pages]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, ps, 1), _scale_map),
+                     pl.BlockSpec((1, ps, 1), _scale_map)]
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(B, K, n_qb, 2 * n_pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, q_blk, G, D),
-                         lambda b, kh, qb, i, tr, st, nl: (b, kh, qb, 0, 0)),
-            pl.BlockSpec((1, ps, 1, D),
-                         lambda b, kh, qb, i, tr, st, nl:
-                         (tr[b, jnp.where(i < n_pages, i, i - n_pages)],
-                          0, kh, 0)),
-            pl.BlockSpec((1, ps, 1, D),
-                         lambda b, kh, qb, i, tr, st, nl:
-                         (tr[b, jnp.where(i < n_pages, i, i - n_pages)],
-                          0, kh, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, q_blk, G, D),
             lambda b, kh, qb, i, tr, st, nl: (b, kh, qb, 0, 0)),
@@ -174,17 +198,21 @@ def ragged_prefill_fwd(q, k_pages, v_pages, tables, start, n_live, *,
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
-    )(tables, start, n_live, q, k_pages, v_pages)
+    )(*operands)
 
 
 # ------------------------------------------------------ sliding-window ring
 
 def _windowed_ragged_prefill_kernel(tables_ref, start_ref, n_live_ref, q_ref,
-                                    kn_ref, vn_ref, k_ref, v_ref, o_ref,
-                                    s_scr, acc_scr, *, page_size: int,
-                                    n_ring: int, n_fresh: int, q_blk: int,
-                                    window: int, scale: float, softcap: float,
-                                    v_dtype):
+                                    kn_ref, vn_ref, k_ref, v_ref, *rest,
+                                    page_size: int, n_ring: int, n_fresh: int,
+                                    q_blk: int, window: int, scale: float,
+                                    softcap: float, v_dtype,
+                                    quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, s_scr, acc_scr = rest
+    else:
+        o_ref, s_scr, acc_scr = rest
     b = pl.program_id(0)
     qb = pl.program_id(2)
     i = pl.program_id(3)
@@ -213,6 +241,10 @@ def _windowed_ragged_prefill_kernel(tables_ref, start_ref, n_live_ref, q_ref,
             k_abs = last - ((last % ring_n - idx) % ring_n)
             valid = (k_abs >= 0) & (k_abs > q_abs - window)
             k = k_ref[0, :, 0].astype(jnp.float32)
+            if quantized:
+                # only the resident ring pages are int8; the fresh chunk's
+                # K/V below ride in at model dtype
+                k = k * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
             s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                     preferred_element_type=jnp.float32) * scale
             if softcap:
@@ -243,6 +275,8 @@ def _windowed_ragged_prefill_kernel(tables_ref, start_ref, n_live_ref, q_ref,
     @pl.when(i >= n_kv)
     def _():
         vr = v_ref[0, :, 0].astype(jnp.float32)
+        if quantized:
+            vr = vr * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
         vf = vn_ref[0, :, 0].astype(jnp.float32)
         vsel = jnp.where(j < n_ring, vr, vf)
         _pv_accumulate(acc_scr, s_scr, j * page_size, vsel, v_dtype)
@@ -255,11 +289,14 @@ def _windowed_ragged_prefill_kernel(tables_ref, start_ref, n_live_ref, q_ref,
 def windowed_ragged_prefill_fwd(q, k_new, v_new, k_pages, v_pages, tables,
                                 start, n_live, *, window: int, scale: float,
                                 softcap: float = 0.0, q_blk: int = 128,
+                                k_scale=None, v_scale=None,
                                 interpret: bool = False):
     """q: [B, K, T, G, D]; k_new/v_new: [B, T, K, D] fresh roped chunk K/V
     (T a multiple of the page size); k_pages/v_pages: [P, ps, K, D]
     *pre-write* pool; tables: [B, n_ring] ring tables.  Returns
-    [B, K, T, G, D]."""
+    [B, K, T, G, D].  ``k_scale``/``v_scale``: [P, ps, K] bf16 scales for
+    the int8 ring pages; the fresh chunk stays at model dtype (it is
+    quantized only when written back after the attend)."""
     B, K, T, G, D = q.shape
     ps = k_pages.shape[1]
     Tk = k_new.shape[1]                   # fresh K/V length (un-padded chunk)
@@ -268,30 +305,43 @@ def windowed_ragged_prefill_fwd(q, k_new, v_new, k_pages, v_pages, tables,
     n_fresh = Tk // ps
     n_kv = n_ring + n_fresh
     n_qb = T // q_blk
+    quantized = k_scale is not None
     kernel = functools.partial(
         _windowed_ragged_prefill_kernel, page_size=ps, n_ring=n_ring,
         n_fresh=n_fresh, q_blk=q_blk, window=window, scale=scale,
-        softcap=softcap, v_dtype=v_pages.dtype)
+        softcap=softcap,
+        v_dtype=jnp.float32 if quantized else v_pages.dtype,
+        quantized=quantized)
 
     def _ring_map(b, kh, qb, i, tr, st, nl):
         j = jnp.where(i < n_kv, i, i - n_kv)
         return (tr[b, jnp.minimum(j, n_ring - 1)], 0, kh, 0)
 
+    def _ring_scale_map(b, kh, qb, i, tr, st, nl):
+        j = jnp.where(i < n_kv, i, i - n_kv)
+        return (tr[b, jnp.minimum(j, n_ring - 1)], 0, kh)
+
     def _fresh_map(b, kh, qb, i, tr, st, nl):
         j = jnp.where(i < n_kv, i, i - n_kv)
         return (b, jnp.clip(j - n_ring, 0, n_fresh - 1), kh, 0)
 
+    in_specs = [
+        pl.BlockSpec((1, 1, q_blk, G, D),
+                     lambda b, kh, qb, i, tr, st, nl: (b, kh, qb, 0, 0)),
+        pl.BlockSpec((1, ps, 1, D), _fresh_map),
+        pl.BlockSpec((1, ps, 1, D), _fresh_map),
+        pl.BlockSpec((1, ps, 1, D), _ring_map),
+        pl.BlockSpec((1, ps, 1, D), _ring_map),
+    ]
+    operands = [tables, start, n_live, q, k_new, v_new, k_pages, v_pages]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, ps, 1), _ring_scale_map),
+                     pl.BlockSpec((1, ps, 1), _ring_scale_map)]
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(B, K, n_qb, 2 * n_kv),
-        in_specs=[
-            pl.BlockSpec((1, 1, q_blk, G, D),
-                         lambda b, kh, qb, i, tr, st, nl: (b, kh, qb, 0, 0)),
-            pl.BlockSpec((1, ps, 1, D), _fresh_map),
-            pl.BlockSpec((1, ps, 1, D), _fresh_map),
-            pl.BlockSpec((1, ps, 1, D), _ring_map),
-            pl.BlockSpec((1, ps, 1, D), _ring_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, q_blk, G, D),
             lambda b, kh, qb, i, tr, st, nl: (b, kh, qb, 0, 0)),
@@ -308,16 +358,19 @@ def windowed_ragged_prefill_fwd(q, k_new, v_new, k_pages, v_pages, tables,
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
-    )(tables, start, n_live, q, k_new, v_new, k_pages, v_pages)
+    )(*operands)
 
 
 # ------------------------------------------------------ MLA materialized-K
 
 def _mla_ragged_prefill_kernel(tables_ref, start_ref, n_live_ref, q_ref,
-                               ckv_ref, kr_ref, wuk_ref, wuv_ref, o_ref,
-                               s_scr, acc_scr, *, page_size: int,
-                               n_pages: int, q_blk: int, scale: float,
-                               kv_dtype):
+                               ckv_ref, kr_ref, wuk_ref, wuv_ref, *rest,
+                               page_size: int, n_pages: int, q_blk: int,
+                               scale: float, kv_dtype, quantized: bool):
+    if quantized:
+        cs_ref, rs_ref, o_ref, s_scr, acc_scr = rest
+    else:
+        o_ref, s_scr, acc_scr = rest
     b = pl.program_id(0)
     qb = pl.program_id(2)
     i = pl.program_id(3)
@@ -337,6 +390,9 @@ def _mla_ragged_prefill_kernel(tables_ref, start_ref, n_live_ref, q_ref,
         def _():
             ckv = ckv_ref[0].astype(jnp.float32)                 # [ps, L]
             kr = kr_ref[0].astype(jnp.float32)                   # [ps, R]
+            if quantized:
+                ckv = ckv * cs_ref[0].astype(jnp.float32)[:, None]
+                kr = kr * rs_ref[0].astype(jnp.float32)[:, None]
             wuk = wuk_ref[:, 0].astype(jnp.float32)              # [L, nope]
             # materialize this page's per-head K, rounded to the cache dtype
             # exactly where the reference ``ckv @ wkv_b`` einsum rounds
@@ -365,6 +421,8 @@ def _mla_ragged_prefill_kernel(tables_ref, start_ref, n_live_ref, q_ref,
     @pl.when(i >= n_pages)
     def _():
         ckv = ckv_ref[0].astype(jnp.float32)
+        if quantized:
+            ckv = ckv * cs_ref[0].astype(jnp.float32)[:, None]
         wuv = wuv_ref[:, 0].astype(jnp.float32)                  # [L, vd]
         v = jax.lax.dot_general(
             ckv, wuv, (((1,), (0,)), ((), ())),
@@ -379,36 +437,53 @@ def _mla_ragged_prefill_kernel(tables_ref, start_ref, n_live_ref, q_ref,
 
 def mla_ragged_prefill_fwd(q, ckv_pages, krope_pages, w_uk, w_uv, tables,
                            start, n_live, *, scale: float, q_blk: int = 128,
+                           ckv_scale=None, krope_scale=None,
                            interpret: bool = False):
     """q: [B, H, T, nope+rope] (rope part roped); ckv_pages: [P, ps, L];
     krope_pages: [P, ps, R]; w_uk: [L, H, nope]; w_uv: [L, H, vd]; tables:
-    [B, n_pages].  Returns the attended values [B, H, T, vd]."""
+    [B, n_pages].  Returns the attended values [B, H, T, vd].
+    ``ckv_scale``/``krope_scale``: [P, ps] bf16 scales when the latent pages
+    are int8 — the dequantized latent is fp32, so the in-kernel K/V
+    materialization stays fp32 (``kv_dtype``) exactly like the reference
+    dequant einsum."""
     B, H, T, E = q.shape
     L = ckv_pages.shape[2]
     vd = w_uv.shape[2]
     ps = ckv_pages.shape[1]
     n_pages = tables.shape[1]
     n_qb = T // q_blk
+    quantized = ckv_scale is not None
     kernel = functools.partial(
         _mla_ragged_prefill_kernel, page_size=ps, n_pages=n_pages,
-        q_blk=q_blk, scale=scale, kv_dtype=ckv_pages.dtype)
+        q_blk=q_blk, scale=scale,
+        kv_dtype=jnp.float32 if quantized else ckv_pages.dtype,
+        quantized=quantized)
 
     def _page_map(b, h, qb, i, tr, st, nl):
         return (tr[b, jnp.where(i < n_pages, i, i - n_pages)], 0, 0)
 
+    def _scale_map(b, h, qb, i, tr, st, nl):
+        return (tr[b, jnp.where(i < n_pages, i, i - n_pages)], 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, q_blk, E),
+                     lambda b, h, qb, i, tr, st, nl: (b, h, qb, 0)),
+        pl.BlockSpec((1, ps, L), _page_map),
+        pl.BlockSpec((1, ps, krope_pages.shape[2]), _page_map),
+        pl.BlockSpec((L, 1, w_uk.shape[2]),
+                     lambda b, h, qb, i, tr, st, nl: (0, h, 0)),
+        pl.BlockSpec((L, 1, vd),
+                     lambda b, h, qb, i, tr, st, nl: (0, h, 0)),
+    ]
+    operands = [tables, start, n_live, q, ckv_pages, krope_pages, w_uk, w_uv]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, ps), _scale_map),
+                     pl.BlockSpec((1, ps), _scale_map)]
+        operands += [ckv_scale, krope_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(B, H, n_qb, 2 * n_pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, q_blk, E),
-                         lambda b, h, qb, i, tr, st, nl: (b, h, qb, 0)),
-            pl.BlockSpec((1, ps, L), _page_map),
-            pl.BlockSpec((1, ps, krope_pages.shape[2]), _page_map),
-            pl.BlockSpec((L, 1, w_uk.shape[2]),
-                         lambda b, h, qb, i, tr, st, nl: (0, h, 0)),
-            pl.BlockSpec((L, 1, vd),
-                         lambda b, h, qb, i, tr, st, nl: (0, h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, q_blk, vd),
             lambda b, h, qb, i, tr, st, nl: (b, h, qb, 0)),
@@ -425,4 +500,4 @@ def mla_ragged_prefill_fwd(q, ckv_pages, krope_pages, w_uk, w_uv, tables,
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
-    )(tables, start, n_live, q, ckv_pages, krope_pages, w_uk, w_uv)
+    )(*operands)

@@ -36,7 +36,8 @@ def _pad_q(q, q_blk):
 @partial(jax.jit, static_argnames=("window", "softcap", "q_blk", "interpret"))
 def ragged_prefill_attend(q, k_new, v_new, k_pages, v_pages, tables, start,
                           n_live, *, window: int = 0, softcap: float = 0.0,
-                          q_blk: int = 128, interpret: bool = None):
+                          q_blk: int = 128, k_scale=None, v_scale=None,
+                          interpret: bool = None):
     """Ragged chunk-prefill attend against the paged KV pool.
 
     q: [B, T, H, D] roped chunk queries at per-row offsets ``start`` [B];
@@ -45,7 +46,10 @@ def ragged_prefill_attend(q, k_new, v_new, k_pages, v_pages, tables, start,
     resident; ``k_new``/``v_new`` are ignored).  ``window > 0``: the pool is
     *pre-write*, ``tables`` [B, n_ring] is the page ring, and
     ``k_new``/``v_new`` [B, T, K, D] carry the chunk's fresh roped K/V (T
-    must be a page multiple).  Returns [B, T, H, D]."""
+    must be a page multiple).  Returns [B, T, H, D].  ``k_scale``/
+    ``v_scale``: [P, ps, K] bf16 absmax scales when the pool is int8; the
+    windowed path's fresh K/V stay at model dtype (only resident ring pages
+    are quantized)."""
     B, T, H, D = q.shape
     K = k_pages.shape[2]
     assert H % K == 0, (H, K)
@@ -59,13 +63,18 @@ def ragged_prefill_attend(q, k_new, v_new, k_pages, v_pages, tables, start,
     if window == 0:
         o = ragged_prefill_fwd(qg, k_pages, v_pages, tables, start, n_live,
                                scale=scale, softcap=softcap, q_blk=blk,
+                               k_scale=k_scale, v_scale=v_scale,
                                interpret=default_interpret(interpret))
     else:
-        kn = jnp.asarray(k_new, k_pages.dtype)
-        vn = jnp.asarray(v_new, v_pages.dtype)
+        # never round the fresh chunk to the pool dtype: under int8 the pool
+        # is quantized but the chunk attends at model precision
+        new_dt = k_new.dtype if k_scale is not None else k_pages.dtype
+        kn = jnp.asarray(k_new, new_dt)
+        vn = jnp.asarray(v_new, new_dt)
         o = windowed_ragged_prefill_fwd(
             qg, kn, vn, k_pages, v_pages, tables, start, n_live,
             window=window, scale=scale, softcap=softcap, q_blk=blk,
+            k_scale=k_scale, v_scale=v_scale,
             interpret=default_interpret(interpret))
     return o[:, :, :T0].transpose(0, 2, 1, 3, 4).reshape(B, T0, H, D)
 
@@ -73,6 +82,7 @@ def ragged_prefill_attend(q, k_new, v_new, k_pages, v_pages, tables, start,
 @partial(jax.jit, static_argnames=("nope", "q_blk", "interpret"))
 def mla_ragged_prefill_attend(q, ckv_pages, krope_pages, wkv_b, tables, start,
                               n_live, *, nope: int, q_blk: int = 128,
+                              ckv_scale=None, krope_scale=None,
                               interpret: bool = None):
     """Ragged MLA chunk-prefill attend against the post-write latent pages.
 
@@ -80,7 +90,8 @@ def mla_ragged_prefill_attend(q, ckv_pages, krope_pages, wkv_b, tables, start,
     [P, ps, L]; krope_pages: [P, ps, R]; wkv_b: [L, H, nope + v_head_dim];
     tables: [B, n_pages].  Per-head K/V are materialized page-by-page inside
     the kernel (``ckv @ w_uk`` ++ krope, ``ckv @ w_uv``) with the reference
-    einsum's rounding.  Returns [B, T, H, v_head_dim]."""
+    einsum's rounding.  Returns [B, T, H, v_head_dim].  ``ckv_scale``/
+    ``krope_scale``: [P, ps] bf16 scales when the latent pages are int8."""
     B, T, H, E = q.shape
     scale = 1.0 / math.sqrt(E)
     qg = q.transpose(0, 2, 1, 3)                       # [B, H, T, E]
@@ -91,5 +102,6 @@ def mla_ragged_prefill_attend(q, ckv_pages, krope_pages, wkv_b, tables, start,
         qg, ckv_pages, krope_pages, w_uk, w_uv,
         jnp.asarray(tables, jnp.int32), jnp.asarray(start, jnp.int32),
         jnp.asarray(n_live, jnp.int32), scale=scale, q_blk=blk,
+        ckv_scale=ckv_scale, krope_scale=krope_scale,
         interpret=default_interpret(interpret))
     return o[:, :, :T0].transpose(0, 2, 1, 3)

@@ -96,6 +96,13 @@ def main(argv=None):
                          "reference = XLA gather+attend, pallas = fused "
                          "paged-attention decode kernel (interpret mode on "
                          "CPU); auto picks pallas exactly on TPU")
+    ap.add_argument("--kv-dtype", choices=("bf16", "int8"), default="bf16",
+                    help="paged-KV storage dtype: int8 stores absmax-"
+                         "quantized pages + per-token scale pools and "
+                         "dequantizes inside the attend (half the decode "
+                         "HBM bytes); --verify then checks the bounded-"
+                         "error + high-margin dual gate instead of exact "
+                         "token match")
     ap.add_argument("--prefill-chunk-tokens", type=int, default=0,
                     help="per-step prefill token budget: long prompts split "
                          "into page-aligned chunks that interleave with "
@@ -135,7 +142,8 @@ def main(argv=None):
                        prefix_cache=args.prefix_cache,
                        cache_eviction=args.cache_eviction,
                        attn_backend=args.attn_backend,
-                       prefill_chunk_tokens=args.prefill_chunk_tokens)
+                       prefill_chunk_tokens=args.prefill_chunk_tokens,
+                       kv_dtype=args.kv_dtype)
 
     prompts, budgets = make_prompts(args, cfg.vocab)
 
@@ -151,6 +159,9 @@ def main(argv=None):
     if engine == "static" and args.attn_backend != "auto":
         print("[serve] WARNING: --attn-backend only applies to the "
               "continuous engine; the static path uses contiguous caches")
+    if engine == "static" and args.kv_dtype != "bf16":
+        print("[serve] WARNING: --kv-dtype only applies to the continuous "
+              "engine's paged pool; the static path serves bf16")
     if engine == "static" and (args.trace or args.jax_annotations):
         print("[serve] WARNING: --trace/--jax-annotations only apply to the "
               "continuous engine; no trace will be written")
@@ -216,6 +227,24 @@ def main(argv=None):
         with open(args.metrics_json, "w") as f:
             json.dump(out, f, indent=2, sort_keys=True)
         print(f"[serve] metrics -> {args.metrics_json}")
+
+    if args.verify and args.kv_dtype == "int8" and engine == "continuous":
+        # quantized pages are not token-exact vs the bf16 static baseline;
+        # the contract is the bounded-error + high-margin dual gate
+        from ..serving import dual_gate_verify, format_report
+        report = dual_gate_verify(cfg, scfg, params, prompts, tokens,
+                                  attn_backend=scfg.attn_backend)
+        print(format_report(report))
+        if not report["ok"]:
+            raise SystemExit("[serve] QUANT VERIFY FAILED: max logit err "
+                             f"{report['max_logit_err']:.4f} (tol "
+                             f"{report['tol']:.4f}), "
+                             f"{report['high_margin_mismatches']} high-"
+                             "margin mismatches, "
+                             f"{report['replay_failures']} replay failures")
+        print(f"[serve] verify OK: dual gate passed for {len(tokens)} "
+              "requests (bounded logit error + high-margin greedy match)")
+        return tokens
 
     if args.verify:
         lens = {len(p) for p in prompts}

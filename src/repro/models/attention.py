@@ -222,18 +222,68 @@ def cache_defs(cfg: ArchConfig, batch: int, max_len: int, window: int = 0):
     }
 
 
-def paged_cache_defs(cfg: ArchConfig, num_pages: int, page_size: int):
+def paged_cache_defs(cfg: ArchConfig, num_pages: int, page_size: int,
+                     kv_dtype: str = "bf16"):
     """One layer's share of the paged KV pool: [P, page_size, K, D] per tensor.
 
     Unlike ``cache_defs`` there is no batch dim — requests own disjoint page
-    sets and a per-request page table maps logical pages to physical ones."""
+    sets and a per-request page table maps logical pages to physical ones.
+
+    ``kv_dtype == "int8"`` stores absmax-quantized int8 payloads plus
+    per-token-slot-per-kv-head bf16 scale leaves (``k_scale``/``v_scale``,
+    [P, page_size, K]) that share the payload's page axis — a physical page
+    id addresses payload and scales together, so refcounting, radix sharing
+    and COW forks need no separate scale accounting."""
     hd = cfg.head_dim_
-    return {
+    payload_dt = jnp.int8 if kv_dtype == "int8" else jnp.bfloat16
+    defs = {
         "k": ParamDef((num_pages, page_size, cfg.n_kv_heads, hd),
-                      (None, "seq", "kv_heads", "head_dim"), init="zeros"),
+                      (None, "seq", "kv_heads", "head_dim"),
+                      dtype=payload_dt, init="zeros"),
         "v": ParamDef((num_pages, page_size, cfg.n_kv_heads, hd),
-                      (None, "seq", "kv_heads", "head_dim"), init="zeros"),
+                      (None, "seq", "kv_heads", "head_dim"),
+                      dtype=payload_dt, init="zeros"),
     }
+    if kv_dtype == "int8":
+        defs["k_scale"] = ParamDef((num_pages, page_size, cfg.n_kv_heads),
+                                   (None, "seq", "kv_heads"),
+                                   dtype=jnp.bfloat16, init="zeros")
+        defs["v_scale"] = ParamDef((num_pages, page_size, cfg.n_kv_heads),
+                                   (None, "seq", "kv_heads"),
+                                   dtype=jnp.bfloat16, init="zeros")
+    return defs
+
+
+# ------------------------------------------------- int8 KV quantization
+#
+# The one quantize/dequant rounding contract every path shares (see
+# kernels/README.md): absmax is taken in fp32 over the feature axis per
+# (token slot, kv head); the stored scale is ``bf16(absmax / 127)`` (one
+# round-to-nearest-even); the payload quantizes against the *stored* scale —
+# ``int8(clip(round(x / f32(s)), -127, 127))`` — so the round-trip error is
+# bounded by the stored scale regardless of its precision; a zero-absmax
+# slice stores (q=0, s=0).  Dequant is ``f32(q) * f32(s)`` everywhere: the
+# XLA reference gather, the Pallas kernel bodies, and the tests.
+
+def quantize_int8(x: jax.Array):
+    """Absmax-quantize ``x`` over its last axis.  Returns
+    (q int8 [..., D], s bfloat16 [...])."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    s = (amax / 127.0).astype(jnp.bfloat16)
+    sf = s.astype(jnp.float32)
+    # zero-scale slices (all-zero input, or absmax underflowing bf16) store
+    # q = 0; the safe denominator keeps the division finite either way
+    safe = jnp.where(sf > 0.0, sf, 1.0)[..., None]
+    q = jnp.clip(jnp.round(xf / safe), -127.0, 127.0)
+    q = jnp.where(sf[..., None] > 0.0, q, 0.0).astype(jnp.int8)
+    return q, s
+
+
+def dequant_int8(q: jax.Array, s: jax.Array) -> jax.Array:
+    """Invert ``quantize_int8``: fp32 payload * fp32 scale, broadcast over
+    the feature axis.  q: [..., D] int8; s: [...] bf16.  Returns fp32."""
+    return q.astype(jnp.float32) * s.astype(jnp.float32)[..., None]
 
 
 # --------------------------------------------- shared paged-cache helpers
@@ -333,36 +383,55 @@ def paged_prefill_attention_block(cfg: ArchConfig, p, x, cache, meta, freqs,
     (out [B, T, d], new_cache)."""
     B, T, _ = x.shape
     ps = cache["k"].shape[1]
+    quantized = "k_scale" in cache
     tables, start, n_live = meta["tables"], meta["start"], meta["n_live"]
     q, k, v = qkv(cfg, p, x)
     positions = start[:, None] + jnp.arange(T)[None, :]              # [B, T]
     if freqs is not None:
         q = apply_rope(q, positions, freqs)
         k = apply_rope(k, positions, freqs)
+    wp, wo = meta["write_page"], meta["write_off"]
+
+    def scatter(kx, vx):
+        ck = cache["k"].at[wp, wo].set(kx.astype(cache["k"].dtype))
+        cv = cache["v"].at[wp, wo].set(vx.astype(cache["v"].dtype))
+        return ck, cv
+
+    if quantized:
+        kq, ks = quantize_int8(k)
+        vq, vs = quantize_int8(v)
+        ck, cv = scatter(kq, vq)
+        cks = cache["k_scale"].at[wp, wo].set(ks)
+        cvs = cache["v_scale"].at[wp, wo].set(vs)
     window = cfg.sliding_window
     if window:
         from .cache_spec import window_pages
         ring_tables = tables[:, :min(window_pages(window, ps),
                                      tables.shape[1])]
         # the ring must be read *before* the chunk's writes recycle slots
-        # still holding in-window keys of this chunk's earliest queries
+        # still holding in-window keys of this chunk's earliest queries;
+        # quantized mode passes the pre-write scales alongside (fresh chunk
+        # K/V ride in unquantized — only resident pages are int8)
+        scales = ({"k_scale": cache["k_scale"],
+                   "v_scale": cache["v_scale"]} if quantized else {})
         o = backend.prefill_attend(
             q, k, v, cache["k"], cache["v"], ring_tables, start, n_live,
             window=window, softcap=cfg.attn_logit_softcap, q_block=q_block,
-            unroll=unroll)
-        ck = cache["k"].at[meta["write_page"], meta["write_off"]].set(
-            k.astype(cache["k"].dtype))
-        cv = cache["v"].at[meta["write_page"], meta["write_off"]].set(
-            v.astype(cache["v"].dtype))
+            unroll=unroll, **scales)
+        if not quantized:
+            ck, cv = scatter(k, v)
     else:
-        ck = cache["k"].at[meta["write_page"], meta["write_off"]].set(
-            k.astype(cache["k"].dtype))
-        cv = cache["v"].at[meta["write_page"], meta["write_off"]].set(
-            v.astype(cache["v"].dtype))
+        if not quantized:
+            ck, cv = scatter(k, v)
+        scales = ({"k_scale": cks, "v_scale": cvs} if quantized else {})
         o = backend.prefill_attend(
             q, k, v, ck, cv, tables, start, n_live, window=0,
-            softcap=cfg.attn_logit_softcap, q_block=q_block, unroll=unroll)
-    return jnp.einsum("bshe,hed->bsd", o, p["wo"]), {"k": ck, "v": cv}
+            softcap=cfg.attn_logit_softcap, q_block=q_block, unroll=unroll,
+            **scales)
+    new_cache = {"k": ck, "v": cv}
+    if quantized:
+        new_cache.update(k_scale=cks, v_scale=cvs)
+    return jnp.einsum("bshe,hed->bsd", o, p["wo"]), new_cache
 
 
 def paged_decode_attention_block(cfg: ArchConfig, p, x, cache, meta, freqs,
@@ -379,12 +448,19 @@ def paged_decode_attention_block(cfg: ArchConfig, p, x, cache, meta, freqs,
     recovered from the ring layout), so stale data in partially-filled or
     recycled pages is softmax-zero.  Returns (out [B, d], new_cache)."""
     ps = cache["k"].shape[1]
+    quantized = "k_scale" in cache
     pos = meta["pos"]
     q, k, v = decode_qkv(cfg, p, x, pos, freqs)
-    ck = cache["k"].at[meta["write_page"], meta["write_off"]].set(
-        k.astype(cache["k"].dtype))
-    cv = cache["v"].at[meta["write_page"], meta["write_off"]].set(
-        v.astype(cache["v"].dtype))
+    wp, wo = meta["write_page"], meta["write_off"]
+    scales = {}
+    if quantized:
+        k, ks = quantize_int8(k)
+        v, vs = quantize_int8(v)
+        cks = cache["k_scale"].at[wp, wo].set(ks)
+        cvs = cache["v_scale"].at[wp, wo].set(vs)
+        scales = {"k_scale": cks, "v_scale": cvs}
+    ck = cache["k"].at[wp, wo].set(k.astype(cache["k"].dtype))
+    cv = cache["v"].at[wp, wo].set(v.astype(cache["v"].dtype))
     tables = meta["tables"]
     window = cfg.sliding_window
     if window:
@@ -392,9 +468,12 @@ def paged_decode_attention_block(cfg: ArchConfig, p, x, cache, meta, freqs,
         tables = tables[:, :min(window_pages(window, ps), tables.shape[1])]
     o = backend.decode_attend(q, ck, cv, tables, pos,
                               scale=1.0 / math.sqrt(cfg.head_dim_),
-                              softcap=cfg.attn_logit_softcap, window=window)
+                              softcap=cfg.attn_logit_softcap, window=window,
+                              **scales)
     out = jnp.einsum("bhe,hed->bd", o, p["wo"])
-    return out, {"k": ck, "v": cv}
+    new_cache = {"k": ck, "v": cv}
+    new_cache.update(scales)
+    return out, new_cache
 
 
 def decode_attention_block(cfg: ArchConfig, p, x, cache, pos, freqs, *, window=0):

@@ -184,15 +184,23 @@ class AttentionBackend:
                                                       freqs, backend=self)
 
     # -------- attend cores (override to fuse)
+    #
+    # Every core takes optional scale pools (``k_scale``/``v_scale``
+    # [P, ps, K] bf16, or ``ckv_scale``/``krope_scale`` [P, ps] for MLA).
+    # ``None`` (the default) means the payload pools hold bf16 values and
+    # the core behaves exactly as before; non-None means the payloads are
+    # int8 and must be dequantized ``f32(q) * f32(s)`` before use.
 
     def decode_attend(self, q, k_pages, v_pages, tables, pos, *, scale: float,
-                      softcap: float = 0.0, window: int = 0):
+                      softcap: float = 0.0, window: int = 0,
+                      k_scale=None, v_scale=None):
         """q: [B, H, D]; pools [P, ps, K, D]; tables [B, n] (ring when
         ``window > 0``); pos [B].  Returns [B, H, D]."""
         raise NotImplementedError
 
     def mla_decode_attend(self, q_eff, q_rope, ckv_pages, krope_pages, tables,
-                          pos, *, scale: float):
+                          pos, *, scale: float, ckv_scale=None,
+                          krope_scale=None):
         """Absorbed-latent scores + latent context: q_eff [B, H, L] /
         q_rope [B, H, R] against [P, ps, L] / [P, ps, R] pages.  Returns the
         latent context [B, H, L]."""
@@ -200,7 +208,8 @@ class AttentionBackend:
 
     def prefill_attend(self, q, k, v, k_pages, v_pages, tables, start, n_live,
                        *, window: int = 0, softcap: float = 0.0,
-                       q_block: int = 512, unroll: bool = False):
+                       q_block: int = 512, unroll: bool = False,
+                       k_scale=None, v_scale=None):
         """Ragged multi-token prefill attend against the paged pool.
 
         q: [B, T, H, D] roped chunk queries at per-row offsets ``start``;
@@ -209,12 +218,14 @@ class AttentionBackend:
         and ``k``/``v`` are unused.  ``window > 0``: ``k_pages``/``v_pages``
         are the *pre-write* page ring (``tables`` truncated to the ring
         horizon) and ``k``/``v`` [B, T, K, D] carry the chunk's fresh roped
-        K/V.  Returns [B, T, H, D_v]."""
+        K/V (always unquantized — only resident pages are int8).  Returns
+        [B, T, H, D_v]."""
         raise NotImplementedError
 
     def mla_prefill_attend(self, q, ckv_pages, krope_pages, wkv_b, tables,
                            start, n_live, *, nope: int, q_block: int = 512,
-                           unroll: bool = False):
+                           unroll: bool = False, ckv_scale=None,
+                           krope_scale=None):
         """Ragged MLA prefill attend: materialized-K semantics against the
         post-write latent pages (see ``mla.mla_materialized_prefill_attend``,
         the reference formulation).  q: [B, T, H, nope+rope]; returns
@@ -222,48 +233,92 @@ class AttentionBackend:
         raise NotImplementedError
 
 
+def _gather_dequant(pages, scale_pages, tables):
+    """Materialize the logical fp32 view of an int8 pool: gather payload and
+    scale pages through the same table, dequant ``f32(q) * f32(s)``."""
+    g = attention.gather_pages(pages, tables)
+    return attention.dequant_int8(g, attention.gather_pages(scale_pages,
+                                                            tables))
+
+
 @register_backend
 class ReferenceBackend(AttentionBackend):
-    """Gather+attend via XLA — the parity oracle."""
+    """Gather+attend via XLA — the parity oracle.
+
+    int8 pools are dequantized to fp32 right after the gather, then run
+    through the unchanged fp32 attend pipeline; the only added rounding
+    point vs bf16 is the quantize/dequant round-trip itself, and the output
+    is cast back to the query dtype — the same single output rounding the
+    fused kernels keep."""
 
     name = "reference"
 
     def decode_attend(self, q, k_pages, v_pages, tables, pos, *, scale: float,
-                      softcap: float = 0.0, window: int = 0):
-        kg = attention.gather_pages(k_pages, tables)
-        vg = attention.gather_pages(v_pages, tables)
+                      softcap: float = 0.0, window: int = 0,
+                      k_scale=None, v_scale=None):
+        if k_scale is not None:
+            kg = _gather_dequant(k_pages, k_scale, tables)
+            vg = _gather_dequant(v_pages, v_scale, tables)
+        else:
+            kg = attention.gather_pages(k_pages, tables)
+            vg = attention.gather_pages(v_pages, tables)
         valid = attention.decode_valid_mask(pos, kg.shape[1], window=window)
-        return attention.masked_token_attend(q, kg, vg, valid, scale=scale,
-                                             softcap=softcap)
+        o = attention.masked_token_attend(q, kg, vg, valid, scale=scale,
+                                          softcap=softcap)
+        return o.astype(q.dtype)
 
     def mla_decode_attend(self, q_eff, q_rope, ckv_pages, krope_pages, tables,
-                          pos, *, scale: float):
-        ccg = attention.gather_pages(ckv_pages, tables)
-        crg = attention.gather_pages(krope_pages, tables)
+                          pos, *, scale: float, ckv_scale=None,
+                          krope_scale=None):
+        if ckv_scale is not None:
+            ccg = _gather_dequant(ckv_pages, ckv_scale, tables)
+            crg = _gather_dequant(krope_pages, krope_scale, tables)
+        else:
+            ccg = attention.gather_pages(ckv_pages, tables)
+            crg = attention.gather_pages(krope_pages, tables)
         valid = attention.decode_valid_mask(pos, ccg.shape[1])
-        return mla.mla_latent_attend(q_eff, q_rope, ccg, crg, valid,
-                                     scale=scale)
+        ctx = mla.mla_latent_attend(q_eff, q_rope, ccg, crg, valid,
+                                    scale=scale)
+        return ctx.astype(q_eff.dtype)
 
     def prefill_attend(self, q, k, v, k_pages, v_pages, tables, start, n_live,
                        *, window: int = 0, softcap: float = 0.0,
-                       q_block: int = 512, unroll: bool = False):
+                       q_block: int = 512, unroll: bool = False,
+                       k_scale=None, v_scale=None):
         if window == 0:
-            kg = attention.gather_pages(k_pages, tables)
-            vg = attention.gather_pages(v_pages, tables)
-            return attention.chunked_attention(
+            if k_scale is not None:
+                kg = _gather_dequant(k_pages, k_scale, tables)
+                vg = _gather_dequant(v_pages, v_scale, tables)
+            else:
+                kg = attention.gather_pages(k_pages, tables)
+                vg = attention.gather_pages(v_pages, tables)
+            o = attention.chunked_attention(
                 q, kg, vg, causal=True, q_block=q_block, softcap=softcap,
                 q_offset=start, unroll=unroll)
-        return attention.ring_chunk_attention(
-            q, k, v, attention.gather_pages(k_pages, tables),
-            attention.gather_pages(v_pages, tables), start, n_live,
+            return o.astype(q.dtype)
+        if k_scale is not None:
+            kr = _gather_dequant(k_pages, k_scale, tables)
+            vr = _gather_dequant(v_pages, v_scale, tables)
+            # the fresh chunk K/V stay unquantized; promote to fp32 so the
+            # ring concat and the probability cast are fp32 end to end
+            k, v = k.astype(jnp.float32), v.astype(jnp.float32)
+        else:
+            kr = attention.gather_pages(k_pages, tables)
+            vr = attention.gather_pages(v_pages, tables)
+        o = attention.ring_chunk_attention(
+            q, k, v, kr, vr, start, n_live,
             window=window, softcap=softcap, q_block=q_block, unroll=unroll)
+        return o.astype(q.dtype)
 
     def mla_prefill_attend(self, q, ckv_pages, krope_pages, wkv_b, tables,
                            start, n_live, *, nope: int, q_block: int = 512,
-                           unroll: bool = False):
-        return mla.mla_materialized_prefill_attend(
+                           unroll: bool = False, ckv_scale=None,
+                           krope_scale=None):
+        o = mla.mla_materialized_prefill_attend(
             q, ckv_pages, krope_pages, wkv_b, tables, start, n_live,
-            nope=nope, q_block=q_block, unroll=unroll)
+            nope=nope, q_block=q_block, unroll=unroll,
+            ckv_scale=ckv_scale, krope_scale=krope_scale)
+        return o.astype(q.dtype)
 
 
 @register_backend
@@ -275,26 +330,35 @@ class PallasBackend(ReferenceBackend):
     name = "pallas"
 
     def decode_attend(self, q, k_pages, v_pages, tables, pos, *, scale: float,
-                      softcap: float = 0.0, window: int = 0):
+                      softcap: float = 0.0, window: int = 0,
+                      k_scale=None, v_scale=None):
         return paged_attention_decode(q, k_pages, v_pages, tables, pos,
                                       scale=scale, softcap=softcap,
-                                      window=window)
+                                      window=window, k_scale=k_scale,
+                                      v_scale=v_scale)
 
     def mla_decode_attend(self, q_eff, q_rope, ckv_pages, krope_pages, tables,
-                          pos, *, scale: float):
+                          pos, *, scale: float, ckv_scale=None,
+                          krope_scale=None):
         return mla_paged_attention_decode(q_eff, q_rope, ckv_pages,
                                           krope_pages, tables, pos,
-                                          scale=scale)
+                                          scale=scale, ckv_scale=ckv_scale,
+                                          krope_scale=krope_scale)
 
     def prefill_attend(self, q, k, v, k_pages, v_pages, tables, start, n_live,
                        *, window: int = 0, softcap: float = 0.0,
-                       q_block: int = 512, unroll: bool = False):
+                       q_block: int = 512, unroll: bool = False,
+                       k_scale=None, v_scale=None):
         return ragged_prefill_attend(q, k, v, k_pages, v_pages, tables,
                                      start, n_live, window=window,
-                                     softcap=softcap)
+                                     softcap=softcap, k_scale=k_scale,
+                                     v_scale=v_scale)
 
     def mla_prefill_attend(self, q, ckv_pages, krope_pages, wkv_b, tables,
                            start, n_live, *, nope: int, q_block: int = 512,
-                           unroll: bool = False):
+                           unroll: bool = False, ckv_scale=None,
+                           krope_scale=None):
         return mla_ragged_prefill_attend(q, ckv_pages, krope_pages, wkv_b,
-                                         tables, start, n_live, nope=nope)
+                                         tables, start, n_live, nope=nope,
+                                         ckv_scale=ckv_scale,
+                                         krope_scale=krope_scale)

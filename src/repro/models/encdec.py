@@ -219,9 +219,11 @@ class EncDecLM:
 
     # ------------------------------------------------------- paged serving
 
-    def paged_cache_defs(self, num_pages: int, page_size: int):
+    def paged_cache_defs(self, num_pages: int, page_size: int,
+                         kv_dtype: str = "bf16"):
         """Decoder *self*-attention KV pages, stacked over decoder layers."""
-        per = paged_cache_defs(self.cfg, num_pages, page_size)
+        per = paged_cache_defs(self.cfg, num_pages, page_size,
+                               kv_dtype=kv_dtype)
         return stack_tree(per, self.cfg.n_dec_layers)
 
     def state_slot_defs(self, n_slots: int, max_len: int, enc_len: int):

@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
-from .attention import NEG_INF, chunked_attention, gather_pages
+from .attention import (NEG_INF, chunked_attention, dequant_int8,
+                        gather_pages, quantize_int8)
 from .layers import apply_rope, rmsnorm
 from .params import ParamDef
 
@@ -78,15 +79,29 @@ def mla_cache_defs(cfg: ArchConfig, batch: int, max_len: int):
     }
 
 
-def mla_paged_cache_defs(cfg: ArchConfig, num_pages: int, page_size: int):
+def mla_paged_cache_defs(cfg: ArchConfig, num_pages: int, page_size: int,
+                         kv_dtype: str = "bf16"):
     """One layer's share of the paged latent pool: the absorbed cache payload
-    (rank-``kv_lora`` latent + roped rope-head key) per token slot."""
-    return {
+    (rank-``kv_lora`` latent + roped rope-head key) per token slot.
+
+    ``kv_dtype == "int8"`` quantizes both payloads per token slot (the
+    latent has one shared "kv head", so the scale leaves are [P, page_size]
+    bf16), sharing the page axis exactly as the vanilla KV defs do."""
+    payload_dt = jnp.int8 if kv_dtype == "int8" else jnp.bfloat16
+    defs = {
         "ckv": ParamDef((num_pages, page_size, cfg.kv_lora_rank),
-                        (None, "seq", "lora"), init="zeros"),
+                        (None, "seq", "lora"), dtype=payload_dt,
+                        init="zeros"),
         "krope": ParamDef((num_pages, page_size, cfg.rope_head_dim),
-                          (None, "seq", None), init="zeros"),
+                          (None, "seq", None), dtype=payload_dt,
+                          init="zeros"),
     }
+    if kv_dtype == "int8":
+        defs["ckv_scale"] = ParamDef((num_pages, page_size), (None, "seq"),
+                                     dtype=jnp.bfloat16, init="zeros")
+        defs["krope_scale"] = ParamDef((num_pages, page_size), (None, "seq"),
+                                       dtype=jnp.bfloat16, init="zeros")
+    return defs
 
 
 def mla_paged_prefill_block(cfg: ArchConfig, p, x, cache, meta, freqs,
@@ -114,30 +129,43 @@ def mla_paged_prefill_block(cfg: ArchConfig, p, x, cache, meta, freqs,
     krope = apply_rope(ckv_full[..., cfg.kv_lora_rank:][:, :, None, :],
                        positions, freqs)[:, :, 0, :]
 
-    cc = cache["ckv"].at[meta["write_page"], meta["write_off"]].set(
-        ckv.astype(cache["ckv"].dtype))
-    cr = cache["krope"].at[meta["write_page"], meta["write_off"]].set(
-        krope.astype(cache["krope"].dtype))
+    wp, wo_ = meta["write_page"], meta["write_off"]
+    scales = {}
+    if "ckv_scale" in cache:
+        ckv, cs = quantize_int8(ckv)
+        krope, rs = quantize_int8(krope)
+        scales = {"ckv_scale": cache["ckv_scale"].at[wp, wo_].set(cs),
+                  "krope_scale": cache["krope_scale"].at[wp, wo_].set(rs)}
+    cc = cache["ckv"].at[wp, wo_].set(ckv.astype(cache["ckv"].dtype))
+    cr = cache["krope"].at[wp, wo_].set(krope.astype(cache["krope"].dtype))
 
     qq = jnp.concatenate([q_nope, q_rope], -1)
     o = backend.mla_prefill_attend(qq, cc, cr, p["wkv_b"], tables, start,
                                    n_live, nope=nope, q_block=q_block,
-                                   unroll=unroll)
-    return jnp.einsum("bshe,hed->bsd", o, p["wo"]), {"ckv": cc, "krope": cr}
+                                   unroll=unroll, **scales)
+    new_cache = {"ckv": cc, "krope": cr}
+    new_cache.update(scales)
+    return jnp.einsum("bshe,hed->bsd", o, p["wo"]), new_cache
 
 
 def mla_materialized_prefill_attend(q, ckv_pages, krope_pages, wkv_b, tables,
                                     start, n_live, *, nope: int,
-                                    q_block: int = 512, unroll: bool = False):
+                                    q_block: int = 512, unroll: bool = False,
+                                    ckv_scale=None, krope_scale=None):
     """The reference MLA prefill attend: gather the (post-write) latent
     pages, materialize per-head K/V from them with ``wkv_b`` exactly as
     ``mla_full_block`` does — so a cached prefix or an earlier chunk is read
     as if this call had prefilled it itself — and run the chunked XLA
-    attend.  q: [B, T, H, nope+rope] (rope part already roped).  Returns the
-    attended values [B, T, H, v_head_dim]."""
+    attend.  q: [B, T, H, nope+rope] (rope part already roped).  int8 pages
+    arrive with their per-token-slot scale pools (``ckv_scale`` /
+    ``krope_scale``) and are dequantized to fp32 after the gather.  Returns
+    the attended values [B, T, H, v_head_dim]."""
     rope_d = q.shape[-1] - nope
     ccg = gather_pages(ckv_pages, tables)
     crg = gather_pages(krope_pages, tables)
+    if ckv_scale is not None:
+        ccg = dequant_int8(ccg, gather_pages(ckv_scale, tables))
+        crg = dequant_int8(crg, gather_pages(krope_scale, tables))
     kv = jnp.einsum("bsl,lhe->bshe", ccg, wkv_b)
     k_nope, v = kv[..., :nope], kv[..., nope:]
     k = jnp.concatenate(
@@ -168,19 +196,26 @@ def mla_paged_decode_block(cfg: ArchConfig, p, x, cache, meta, freqs,
     kr_new = apply_rope(ckv_full[..., None, cfg.kv_lora_rank:][:, None],
                         pos[:, None], freqs)[:, 0, 0]
 
-    cc = cache["ckv"].at[meta["write_page"], meta["write_off"]].set(
-        ckv_new.astype(cache["ckv"].dtype))
-    cr = cache["krope"].at[meta["write_page"], meta["write_off"]].set(
-        kr_new.astype(cache["krope"].dtype))
+    wp, wo_ = meta["write_page"], meta["write_off"]
+    scales = {}
+    if "ckv_scale" in cache:
+        ckv_new, cs = quantize_int8(ckv_new)
+        kr_new, rs = quantize_int8(kr_new)
+        scales = {"ckv_scale": cache["ckv_scale"].at[wp, wo_].set(cs),
+                  "krope_scale": cache["krope_scale"].at[wp, wo_].set(rs)}
+    cc = cache["ckv"].at[wp, wo_].set(ckv_new.astype(cache["ckv"].dtype))
+    cr = cache["krope"].at[wp, wo_].set(kr_new.astype(cache["krope"].dtype))
 
     w_uk = p["wkv_b"][..., :nope]                                  # [L,H,nope]
     q_eff = jnp.einsum("bhn,lhn->bhl", q_nope, w_uk)
     ctx = backend.mla_decode_attend(q_eff, q_rope, cc, cr, meta["tables"],
-                                    pos, scale=scale)
+                                    pos, scale=scale, **scales)
     w_uv = p["wkv_b"][..., nope:]                                  # [L, H, v]
     o = jnp.einsum("bhl,lhv->bhv", ctx, w_uv)
     out = jnp.einsum("bhv,hvd->bd", o, p["wo"])
-    return out, {"ckv": cc, "krope": cr}
+    new_cache = {"ckv": cc, "krope": cr}
+    new_cache.update(scales)
+    return out, new_cache
 
 
 def mla_latent_attend(q_eff, q_rope, cc, cr, valid, *, scale: float):

@@ -544,14 +544,18 @@ class DecoderLM:
         still branch on the old gate."""
         return True, self.cache_spec().describe()
 
-    def paged_cache_defs(self, num_pages: int, page_size: int):
+    def paged_cache_defs(self, num_pages: int, page_size: int,
+                         kv_dtype: str = "bf16"):
         """Abstract defs for the layer-stacked paged pool ({} when the whole
-        cache is per-request state slots)."""
+        cache is per-request state slots).  ``kv_dtype == "int8"`` adds the
+        per-page scale leaves alongside the int8 payloads."""
         cfg = self.cfg
         if not self.cache_spec().paged:
             return {}
-        per = (mla_paged_cache_defs(cfg, num_pages, page_size) if cfg.use_mla
-               else paged_cache_defs(cfg, num_pages, page_size))
+        per = (mla_paged_cache_defs(cfg, num_pages, page_size,
+                                    kv_dtype=kv_dtype) if cfg.use_mla
+               else paged_cache_defs(cfg, num_pages, page_size,
+                                     kv_dtype=kv_dtype))
         return stack_tree(per, cfg.n_layers)
 
     def state_slot_defs(self, n_slots: int, max_len: int, enc_len: int = 0):

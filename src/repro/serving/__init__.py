@@ -93,6 +93,8 @@ from __future__ import annotations
 
 from .engine import Engine, RequestResult, generate_static  # noqa: F401
 from .kv_pool import NULL_PAGE, PagedKVPool, StateSlotPool  # noqa: F401
+from .quant_verify import (  # noqa: F401
+    dual_gate_verify, format_report, logit_tol, replay_logits)
 from .radix_cache import MatchResult, RadixCache  # noqa: F401
 from .scheduler import Admission, Request, Scheduler  # noqa: F401
 from .server import ServingLoop, detokenize, stream_request  # noqa: F401

@@ -83,10 +83,21 @@ class PagedKVPool:
             else min(raw, self.horizon_pages) if self.horizon_pages else raw)
         self.total_pages: int = (
             scfg.num_pages or scfg.max_slots * max(self.table_width, 1) + 1)
-        defs = model.paged_cache_defs(self.total_pages, ps)
+        defs = model.paged_cache_defs(self.total_pages, ps,
+                                      kv_dtype=scfg.kv_dtype)
         # zeros init: pages hold only finite values from day one, so masked
         # (zero-weight) reads of stale pages can never produce NaNs
         self.kv: Dict[str, jax.Array] = init_tree(defs, jax.random.PRNGKey(0))
+        # int8 scale leaves share the payload's page axis (axis 1 after layer
+        # stacking): one physical page id addresses payload and scales
+        # together, so ``pages_for``/``table_width``, refcounts, radix
+        # sharing, COW forks, and ring recycling need no separate scale
+        # accounting, and the conservation counters below reconcile
+        # unchanged under int8.  The invariant the whole design rests on:
+        for leaf in jax.tree.leaves(self.kv):
+            assert leaf.shape[1] == self.total_pages, (
+                "paged-cache leaf does not share the pool page axis: "
+                f"{leaf.shape} vs {self.total_pages} pages")
         self._free: List[int] = list(range(self.total_pages - 1, NULL_PAGE, -1))
         self._ref: Dict[int, int] = {}
         # telemetry: conservation counters (allocated == released + live at
@@ -138,6 +149,21 @@ class PagedKVPool:
             return 0
         n = self.pages_needed(self.spec.prefix_tokens + n_prompt_tokens)
         return min(n, self.horizon_pages) if self.horizon_pages else n
+
+    @property
+    def page_nbytes(self) -> int:
+        """Device bytes one physical page occupies across all layers and
+        leaves — int8 pools count payload *and* scale leaves, since a page id
+        owns its slice of both."""
+        return sum(leaf.size // leaf.shape[1] * leaf.dtype.itemsize
+                   for leaf in jax.tree.leaves(self.kv))
+
+    @property
+    def kv_bytes_per_token(self) -> float:
+        """Device bytes one token slot costs (``page_nbytes / page_size``) —
+        the decode read path moves exactly this much per live token, so it is
+        the quantization win the benchmarks gate on."""
+        return self.page_nbytes / self.scfg.page_size
 
     def alloc(self, n: int) -> Optional[List[int]]:
         """Pop ``n`` pages from the free list; None (no partial grab) if short.

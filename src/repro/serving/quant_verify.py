@@ -1,0 +1,187 @@
+"""Dual-gate parity verification for the int8 paged-KV mode.
+
+With ``ServeConfig.kv_dtype == "int8"`` the serving stack is no longer
+token-exact against the bf16 static baseline — quantizing the KV pages
+perturbs every attention read — so the parity contract becomes a *dual
+gate*, checked per request by replaying the engine's exact token sequence
+through teacher-forced single-request paged steps twice (an int8 pool and a
+bf16 pool, same params, same backend) and comparing full logit vectors:
+
+1. **bounded logit error** — ``max |logits_int8 - logits_bf16|`` over every
+   generated position must stay under a per-arch threshold
+   (``LOGIT_TOL``).  This bounds how far quantization can move *any*
+   decision, not just the argmax.
+2. **exact greedy match at high-margin tokens** — wherever the bf16
+   reference's top-1/top-2 logit margin exceeds ``2x`` the observed max
+   error, the engine's emitted token must equal the bf16 greedy token.  A
+   margin above twice the error bound means quantization provably cannot
+   have flipped the argmax, so a mismatch there is a real bug (wrong scale
+   gathered, stale page, backend divergence), never quantization noise.
+   Low-margin positions — where bf16 itself was nearly undecided — are
+   where int8 may legitimately pick the runner-up, and are excluded.
+
+The replay harness doubles as a fidelity check: the int8 replay's greedy
+argmax must reproduce the engine's tokens position-for-position (same
+quantized compute, so exact), which catches teacher-forcing/meta bugs
+independently of quantization error.
+
+Used by ``serve --verify --kv-dtype int8`` and the quantization section of
+``benchmarks/serve_throughput.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from ..configs.base import ArchConfig, ServeConfig
+from ..models.attn_backend import decode_meta, get_backend, prefill_meta
+from ..models.params import init_tree
+from ..models.registry import build_model
+from .kv_pool import PagedKVPool
+
+# per-arch max-abs-logit-error thresholds (reduced configs, random-init
+# params).  Measured headroom: observed errors sit well under half of these
+# across backends and seeds; a regression that doubles the error trips the
+# gate.  MLA gets a wider bound — the latent is quantized once but feeds
+# both K and V materialization, so the error compounds through ``wkv_b``.
+LOGIT_TOL: Dict[str, float] = {
+    "deepseek-v2-236b": 0.5,
+}
+DEFAULT_LOGIT_TOL = 0.25
+
+
+def logit_tol(cfg: ArchConfig) -> float:
+    return LOGIT_TOL.get(cfg.name, DEFAULT_LOGIT_TOL)
+
+
+def replay_logits(cfg: ArchConfig, scfg: ServeConfig, params, prompt:
+                  Sequence[int], gen: Sequence[int], *, kv_dtype: str,
+                  attn_backend: str = "reference") -> np.ndarray:
+    """Teacher-force one request through single-request paged steps.
+
+    Prefills ``prompt`` into a fresh one-request pool of ``kv_dtype`` pages,
+    then decodes feeding the engine's own tokens ``gen[:-1]``, collecting
+    the logits that predicted each ``gen[i]``.  Returns fp32
+    [len(gen), vocab].  The pool geometry (page size, table width, max_len)
+    matches the engine's, so the attend shapes — and therefore the
+    reductions — are identical to the serving run."""
+    if not gen:
+        return np.zeros((0, cfg.vocab), np.float32)
+    sub = dataclasses.replace(scfg, kv_dtype=kv_dtype, max_slots=1,
+                              num_pages=0)
+    model = build_model(cfg, attn_backend=attn_backend)
+    pool = PagedKVPool(cfg, sub)
+    assert pool.spec.paged, (
+        f"{cfg.name}: kv_dtype only applies to paged attention families")
+    need = pool.pages_for(len(prompt) + len(gen))
+    pages = pool.alloc(need)
+    assert pages is not None, "single-request replay pool sized too small"
+    table = pool.new_table()
+    table[:len(pages)] = pages
+    tables = table[None, :]                                   # [1, width]
+    state = init_tree(model.state_slot_defs(1, sub.max_len,
+                                            enc_len=sub.enc_len),
+                      jax.random.PRNGKey(0))
+
+    # pad the prefill to a page multiple like the engine's buckets do (the
+    # windowed kernel requires it); padding rows are masked, logits are read
+    # at the last *live* token, so the width is numerically invisible
+    T = len(prompt)
+    Tp = -(-T // sub.page_size) * sub.page_size
+    meta = prefill_meta(cfg, sub.page_size, tables, np.array([0]),
+                        np.array([0], np.int32), np.array([T], np.int32), Tp)
+    tokens = np.zeros((1, Tp), np.int32)
+    tokens[0, :T] = prompt
+    logits, kv, state = model.prefill_paged(params, pool.kv, state, meta,
+                                            tokens)
+    out = [np.asarray(logits[0], np.float32)]
+    for i, tok in enumerate(gen[:-1]):
+        pos = np.array([T + i], np.int32)
+        meta_d = decode_meta(cfg, sub.page_size, tables, pos)
+        logits, kv, state = model.decode_paged(
+            params, kv, state, meta_d, np.array([tok], np.int32))
+        out.append(np.asarray(logits[0], np.float32))
+    return np.stack(out)
+
+
+def dual_gate_verify(cfg: ArchConfig, scfg: ServeConfig, params,
+                     prompts: Sequence[Sequence[int]],
+                     engine_tokens: Sequence[Sequence[int]], *,
+                     attn_backend: str = "reference",
+                     tol: Optional[float] = None) -> Dict:
+    """Run the dual gate over every request of an int8 engine run.
+
+    ``engine_tokens`` are the greedy tokens the int8 engine emitted.
+    Returns a report dict; ``report["ok"]`` aggregates all three checks
+    (replay fidelity, bounded error, high-margin greedy match)."""
+    tol = logit_tol(cfg) if tol is None else tol
+    backend = get_backend(attn_backend).name
+    per_request: List[Dict] = []
+    max_err_all = 0.0
+    for prompt, gen in zip(prompts, engine_tokens):
+        li = replay_logits(cfg, scfg, params, prompt, gen,
+                           kv_dtype="int8", attn_backend=backend)
+        lb = replay_logits(cfg, scfg, params, prompt, gen,
+                           kv_dtype="bf16", attn_backend=backend)
+        err = (np.max(np.abs(li - lb)) if len(gen) else 0.0)
+        max_err_all = max(max_err_all, float(err))
+        per_request.append({"gen": list(gen), "int8": li, "bf16": lb,
+                            "max_err": float(err)})
+
+    n_high = n_mismatch = n_replay_bad = 0
+    for r in per_request:
+        li, lb, gen = r.pop("int8"), r.pop("bf16"), r["gen"]
+        if not gen:
+            r.update(high_margin=0, mismatches=0, replay_ok=True)
+            continue
+        # fidelity: the int8 replay is the engine's own arithmetic
+        replay_ok = bool(np.array_equal(np.argmax(li, axis=-1), gen))
+        n_replay_bad += not replay_ok
+        # high-margin gate against the *globally* observed error bound: a
+        # single error figure makes "provably cannot flip" uniform across
+        # the run instead of per-request lucky
+        top2 = np.sort(lb, axis=-1)[:, -2:]
+        margin = top2[:, 1] - top2[:, 0]
+        high = margin > 2.0 * max_err_all
+        bf16_greedy = np.argmax(lb, axis=-1)
+        mism = int(np.sum(high & (bf16_greedy != np.asarray(gen))))
+        n_high += int(np.sum(high))
+        n_mismatch += mism
+        r.update(high_margin=int(np.sum(high)), mismatches=mism,
+                 replay_ok=replay_ok)
+
+    report = {
+        "arch": cfg.name, "attn_backend": backend, "tol": tol,
+        "max_logit_err": max_err_all,
+        "n_requests": len(per_request),
+        "n_tokens": sum(len(r["gen"]) for r in per_request),
+        "high_margin_tokens": n_high,
+        "high_margin_mismatches": n_mismatch,
+        "replay_failures": n_replay_bad,
+        "per_request": per_request,
+    }
+    report["ok"] = (max_err_all <= tol and n_mismatch == 0
+                    and n_replay_bad == 0)
+    return report
+
+
+def format_report(report: Dict) -> str:
+    """One human-readable line per gate, for serve --verify output."""
+    lines = [
+        f"[quant-verify] {report['arch']} backend={report['attn_backend']}: "
+        f"{report['n_requests']} requests, {report['n_tokens']} tokens",
+        f"[quant-verify] gate 1 (bounded error): max |dlogit| = "
+        f"{report['max_logit_err']:.4f} vs tol {report['tol']:.4f} -> "
+        f"{'OK' if report['max_logit_err'] <= report['tol'] else 'FAIL'}",
+        f"[quant-verify] gate 2 (high-margin greedy): "
+        f"{report['high_margin_mismatches']} mismatches over "
+        f"{report['high_margin_tokens']} tokens with margin > 2x err -> "
+        f"{'OK' if report['high_margin_mismatches'] == 0 else 'FAIL'}",
+        f"[quant-verify] replay fidelity: "
+        f"{report['replay_failures']} requests diverged from the engine -> "
+        f"{'OK' if report['replay_failures'] == 0 else 'FAIL'}",
+    ]
+    return "\n".join(lines)
