@@ -1,10 +1,10 @@
 """Perf-regression gate over the BENCH_history.jsonl trajectory.
 
-``serve_throughput`` appends one summary line per run *per kv_dtype*; this
-script compares the newest entry of each ``(arch, attn_backend, kv_dtype)``
-group against the *median* of that group's prior entries (median, not mean,
-so one historical outlier cannot poison the baseline) and exits nonzero when
-the newest run regressed:
+``serve_throughput`` appends one summary line per run *per (kv_dtype,
+spec_tokens)*; this script compares the newest entry of each ``(arch,
+attn_backend, kv_dtype, spec_tokens)`` group against the *median* of that
+group's prior entries (median, not mean, so one historical outlier cannot
+poison the baseline) and exits nonzero when the newest run regressed:
 
 * ``tokens_per_s_continuous`` dropped more than 15%, or
 * ``decode_step_ms_p50`` rose more than 25%, or
@@ -17,10 +17,11 @@ the newest run regressed:
   fattened the page format (e.g. widened the int8 scale dtype) and the
   quantization win quietly shrank.
 
-``kv_dtype`` defaults to ``bf16`` for entries that predate the quantized
-mode, so old histories fold into the bf16 group instead of forming a
-phantom one; the int8 series (whose throughput and bytes/token sit on a
-different scale) is gated against its own priors only.
+``kv_dtype`` defaults to ``bf16`` and ``spec_tokens`` to 0 for entries
+that predate those modes, so old histories fold into the baseline group
+instead of forming phantom ones; the int8 and speculative series (whose
+throughput sits on a different scale) are gated against their own priors
+only.
 
 A group with fewer than 3 entries (newest + at least 2 priors) has no
 trustworthy baseline — it is reported but never failed.  ``--warn-only``
@@ -65,18 +66,22 @@ def load_history(path: str) -> List[Dict[str, Any]]:
 def check(entries: List[Dict[str, Any]], max_tok_drop: float,
           max_step_rise: float, max_goodput_drop: float = 0.20,
           max_kv_bytes_rise: float = 0.15) -> List[Dict[str, Any]]:
-    """One verdict row per (arch, attn_backend, kv_dtype) group, newest vs
-    median of priors.  ``status`` is ok / regressed / insufficient-history."""
+    """One verdict row per (arch, attn_backend, kv_dtype, spec_tokens)
+    group, newest vs median of priors.  ``status`` is ok / regressed /
+    insufficient-history."""
     groups: Dict[tuple, List[Dict[str, Any]]] = {}
     for e in entries:                     # file order == append order
         groups.setdefault((e.get("arch"), e.get("attn_backend"),
-                           e.get("kv_dtype", "bf16")), []).append(e)
+                           e.get("kv_dtype", "bf16"),
+                           e.get("spec_tokens", 0)), []).append(e)
 
     rows = []
-    for (arch, backend, kv_dtype), group in sorted(groups.items()):
+    for (arch, backend, kv_dtype, spec_tokens), group in sorted(
+            groups.items()):
         newest, priors = group[-1], group[:-1]
         row: Dict[str, Any] = {
             "arch": arch, "attn_backend": backend, "kv_dtype": kv_dtype,
+            "spec_tokens": spec_tokens,
             "n_entries": len(group), "status": "ok", "problems": [],
         }
         if len(group) < MIN_ENTRIES:
@@ -181,9 +186,9 @@ def main(argv=None) -> int:
     rows = check(entries, args.max_tok_drop, args.max_step_rise,
                  args.max_goodput_drop, args.max_kv_bytes_rise)
     print(f"[check_regression] {len(entries)} history entries, "
-          f"{len(rows)} (arch, attn_backend, kv_dtype) groups")
-    print(f"  {'arch':<24} {'backend':<10} {'kv':<5} {'n':>3} {'tok/s':>16} "
-          f"{'step_ms_p50':>16}  status")
+          f"{len(rows)} (arch, attn_backend, kv_dtype, spec_tokens) groups")
+    print(f"  {'arch':<24} {'backend':<10} {'kv':<5} {'K':>2} {'n':>3} "
+          f"{'tok/s':>16} {'step_ms_p50':>16}  status")
     failed = False
     for r in rows:
         if r["status"] == "insufficient-history":
@@ -194,7 +199,8 @@ def main(argv=None) -> int:
             step = (f"{r['decode_step_ms_p50']['newest']:7.2f}/"
                     f"{r['decode_step_ms_p50']['baseline']:<8.2f}")
         print(f"  {r['arch']:<24} {r['attn_backend']:<10} "
-              f"{r['kv_dtype']:<5} {r['n_entries']:>3} {tok:>16} "
+              f"{r['kv_dtype']:<5} {r['spec_tokens']:>2} "
+              f"{r['n_entries']:>3} {tok:>16} "
               f"{step:>16}  {r['status']}")
         if "poisson_goodput" in r:
             g = r["poisson_goodput"]

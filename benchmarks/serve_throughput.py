@@ -49,9 +49,18 @@ residency at a fixed pool byte budget, and the dual-gate parity stats
 (bounded max-abs logit error + exact greedy match at high-margin tokens,
 see ``serving.quant_verify``).
 
-Emits BENCH_serve.json and appends one summary line per kv_dtype to
-BENCH_history.jsonl (the perf trajectory across runs; ``kv_dtype`` keeps
-the bf16 and int8 series in separate regression-gate groups).
+A sixth section (``speculation``) serves a greedy-repetitive workload
+(periodic prompts whose continuation the n-gram prompt-lookup proposer
+nails) and an adversarial-random one (i.i.d. tokens, accept rate ~0)
+with and without ``speculate_tokens``, reporting decode tokens/s both
+ways, draft accept rate, and exact token match vs the non-speculative
+engine — the win to look for is the repetitive speedup with the
+adversarial overhead bounded.
+
+Emits BENCH_serve.json and appends one summary line per (kv_dtype,
+spec_tokens) to BENCH_history.jsonl (the perf trajectory across runs;
+``kv_dtype`` and ``spec_tokens`` keep the bf16 / int8 / speculative
+series in separate regression-gate groups).
 
   PYTHONPATH=src python -m benchmarks.serve_throughput [--requests 16]
 """
@@ -423,6 +432,107 @@ def quantization(arch: str = "qwen2-0.5b", requests: int = 8,
     return out
 
 
+def speculation(arch: str = "qwen2-0.5b", requests: int = 1, slots: int = 1,
+                gen: int = 64, spec_tokens: int = 4, seed: int = 0,
+                attn_backend: str = "auto"):
+    """Speculative-decoding section: n-gram drafts + small-q verify.
+
+    Two workloads bracket the proposer's range, both decoded with
+    ``speculate_tokens`` on and off (same params, same backend, warmed):
+
+    * ``repetitive`` — periodic prompts (a short token motif repeated), the
+      greedy continuation keeps the period, so prompt lookup drafts the
+      right tokens nearly every step: the best case the ISSUE acceptance
+      bar reads (``decode speedup >= 1.5``);
+    * ``adversarial`` — i.i.d. uniform-random prompts: trailing n-grams of
+      the *prompt* almost never recur, so early drafts are empty/rejected
+      and the section bounds speculation overhead (``speedup >= 0.95``).
+
+    The section pins the regime speculation actually targets: the
+    latency-bound single stream (``requests = slots = 1``).  Speculation
+    trades extra verify FLOPs for fewer sequential steps, so it wins where
+    a decode step's cost is dominated by per-step fixed work (dispatch,
+    gather, host scheduling) rather than per-row math; at batch >= 4 on a
+    compute-bound host each verify row costs as much as a decode row and
+    the win collapses toward 1x — batched throughput serving is already
+    covered by the other sections.  Speculation also only changes the
+    *decode* loop, so the headline ``speedup`` is decode-phase-attributed:
+    with one admission wave (``requests <= slots``) every request decodes
+    from one batched prefill, and ``decode_tokens_per_s`` divides
+    post-first-token tokens by the window from the earliest first token to
+    the last finish (arrival-relative stamps share an epoch —
+    ``run_offline`` queues all requests up front).  Whole-run
+    ``tokens_per_s`` is reported alongside (``speedup_total``) but dilutes
+    the win with prefill/admission time.
+
+    Both runs are exact-token-checked against the non-speculative engine —
+    greedy accept means speculation may only change launch count, never
+    tokens."""
+    import dataclasses as _dc
+
+    from repro.configs import ServeConfig, get_arch, reduced
+    from repro.serving import Engine
+
+    cfg = _dc.replace(reduced(get_arch(arch)), remat="none")
+    rng = np.random.RandomState(seed)
+    ps = 16
+    motif = rng.randint(1, cfg.vocab, size=6).tolist()
+    workloads = {
+        "repetitive": [motif * 4 + rng.randint(
+            1, cfg.vocab, size=2).tolist() for _ in range(requests)],
+        "adversarial": [rng.randint(1, cfg.vocab, size=26).tolist()
+                        for _ in range(requests)],
+    }
+    max_len = ((26 + gen + ps - 1) // ps) * ps
+    base = ServeConfig(page_size=ps, max_slots=slots, max_len=max_len,
+                       attn_backend=attn_backend)
+    spec = dataclasses.replace(base, speculate_tokens=spec_tokens)
+
+    eng = Engine(cfg, base, seed=seed)
+    params = eng.params
+    if not Engine(cfg, spec, params).spec_k:
+        return {"arch": cfg.name, "skipped":
+                "speculation needs a paged non-enc-dec cache family"}
+    # warm every jit shape (incl. the small-q verify step) for both configs
+    for prompts in workloads.values():
+        Engine(cfg, base, params).run_offline(prompts, gen)
+        Engine(cfg, spec, params).run_offline(prompts, gen)
+
+    out = {"arch": cfg.name, "spec_tokens": spec_tokens,
+           "attn_backend": "", "requests": requests}
+    def _decode_tok_s(res):
+        # post-first-token tokens over the concurrent decode window
+        window = (max(r.finish_s for r in res)
+                  - min(r.ttft_s for r in res))
+        return sum(len(r.tokens) - 1 for r in res) / max(window, 1e-9)
+
+    for name, prompts in workloads.items():
+        res_b, m_b = Engine(cfg, base, params).run_offline(prompts, gen)
+        res_s, m_s = Engine(cfg, spec, params).run_offline(prompts, gen)
+        match = ([r.tokens for r in res_s] == [r.tokens for r in res_b])
+        out["attn_backend"] = m_s["attn_backend"]
+        dec_b, dec_s = _decode_tok_s(res_b), _decode_tok_s(res_s)
+        out[name] = {
+            "tokens_per_s_base": m_b["tokens_per_s"],
+            "tokens_per_s_spec": m_s["tokens_per_s"],
+            "decode_tokens_per_s_base": dec_b,
+            "decode_tokens_per_s_spec": dec_s,
+            "speedup": dec_s / max(dec_b, 1e-9),
+            "speedup_total": (m_s["tokens_per_s"]
+                              / max(m_b["tokens_per_s"], 1e-9)),
+            "spec_proposed": m_s["spec_proposed"],
+            "spec_accepted": m_s["spec_accepted"],
+            "accept_rate": m_s["spec_accept_rate"],
+            "tokens_match": match,
+        }
+        print(f"serve_throughput,speculation,{name},K={spec_tokens},"
+              f"decode_tok_s={dec_b:.1f}->{dec_s:.1f}"
+              f" (x{out[name]['speedup']:.2f}),"
+              f"total x{out[name]['speedup_total']:.2f},"
+              f"accept_rate={m_s['spec_accept_rate']:.2f},match={match}")
+    return out
+
+
 # one reduced arch per cache family (see src/repro/models/cache_spec.py)
 FAMILY_MATRIX = (
     ("paged_kv", "qwen2-0.5b"),
@@ -582,6 +692,10 @@ def run(arch: str = "qwen2-0.5b", requests: int = 16, slots: int = 4,
             attn_backend=attn_backend),
         "quantization": quantization(
             arch=arch, slots=slots, seed=seed, attn_backend=attn_backend),
+        # speculation keeps its own single-stream defaults (see docstring):
+        # the latency regime it targets, not the batched-throughput one
+        "speculation": speculation(
+            arch=arch, seed=seed, attn_backend=attn_backend),
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
     }
     path = os.path.join(os.path.dirname(os.path.dirname(
@@ -593,16 +707,19 @@ def run(arch: str = "qwen2-0.5b", requests: int = 16, slots: int = 4,
     adv = payload["chunked_prefill"]
     poi = payload["poisson_openloop"]
     quant = payload["quantization"]
+    spec = payload["speculation"]
     with open(os.path.join(os.path.dirname(path), "BENCH_history.jsonl"),
               "a") as f:
-        # kv_dtype is part of every line so check_regression groups never
-        # mix dtypes — an int8 run must not drag down the bf16 baseline
+        # kv_dtype and spec_tokens are part of every line so
+        # check_regression groups never mix modes — an int8 or speculative
+        # run must not drag down the bf16 non-speculative baseline
         # (or vice versa)
         f.write(json.dumps({
             "timestamp": payload["timestamp"],
             "arch": payload["arch"],
             "attn_backend": payload["attn_backend"],
             "kv_dtype": "bf16",
+            "spec_tokens": 0,
             "tokens_per_s_static": static_m["tokens_per_s"],
             "tokens_per_s_continuous": cont_m["tokens_per_s"],
             "tokens_per_s_prefix_cache": cache_m["tokens_per_s"],
@@ -631,6 +748,7 @@ def run(arch: str = "qwen2-0.5b", requests: int = 16, slots: int = 4,
                 "arch": payload["arch"],
                 "attn_backend": quant["attn_backend"],
                 "kv_dtype": "int8",
+                "spec_tokens": 0,
                 "tokens_per_s_continuous":
                     quant["int8"]["tokens_per_s"],
                 "decode_step_ms_p50":
@@ -639,6 +757,28 @@ def run(arch: str = "qwen2-0.5b", requests: int = 16, slots: int = 4,
                     quant["int8"]["kv_bytes_per_token"],
                 "max_logit_err": quant["quant_verify"]["max_logit_err"],
                 "tokens_match": bool(quant["dual_gate_ok"]),
+            }) + "\n")
+        if "repetitive" in spec:
+            # third trajectory line for the speculative mode: its own
+            # (arch, backend, kv_dtype, spec_tokens=K) group gates the
+            # repetitive-workload speedup and the adversarial overhead
+            f.write(json.dumps({
+                "timestamp": payload["timestamp"],
+                "arch": payload["arch"],
+                "attn_backend": spec["attn_backend"],
+                "kv_dtype": "bf16",
+                "spec_tokens": spec["spec_tokens"],
+                "tokens_per_s_continuous":
+                    spec["repetitive"]["tokens_per_s_spec"],
+                "spec_speedup_repetitive":
+                    spec["repetitive"]["speedup"],
+                "spec_speedup_adversarial":
+                    spec["adversarial"]["speedup"],
+                "spec_accept_rate_repetitive":
+                    spec["repetitive"]["accept_rate"],
+                "tokens_match":
+                    bool(spec["repetitive"]["tokens_match"]
+                         and spec["adversarial"]["tokens_match"]),
             }) + "\n")
     print(f"serve_throughput,arch={cfg.name},requests={requests},"
           f"concurrency={slots},families={families},"

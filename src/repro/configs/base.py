@@ -236,6 +236,12 @@ class ServeConfig:
                                  # in-kernel dequant; parity contract becomes
                                  # bounded logit error + high-margin greedy
                                  # match, see serving/quant_verify)
+    speculate_tokens: int = 0    # n-gram speculative decoding: draft length K
+                                 # per verify step (0 = off).  Each step checks
+                                 # K drafted tokens plus the usual next token
+                                 # in one fixed-shape launch; accepted tokens
+                                 # stay token-exact vs the non-speculative
+                                 # greedy stream (serving/speculate)
 
     def __post_init__(self):
         assert self.page_size > 0 and self.max_slots > 0
@@ -246,6 +252,8 @@ class ServeConfig:
             self.attn_backend
         assert self.prefill_chunk_tokens >= 0, self.prefill_chunk_tokens
         assert self.kv_dtype in ("bf16", "int8"), self.kv_dtype
+        assert 0 <= self.speculate_tokens < self.page_size, \
+            "speculate_tokens must fit inside one page (windowed-ring slack)"
 
     @property
     def chunk_tokens(self) -> int:

@@ -2,8 +2,12 @@
 
 The parity oracle is the ``reference`` attention backend
 (``repro.models.attn_backend``) — today's gather+attend XLA code — which the
-``pallas`` backend must match token-for-token under greedy decode.
+``pallas`` backend must match token-for-token under greedy decode.  The
+``*_verify`` entry points are the small-q speculative-decoding twins of the
+decode kernels (Q = 1 + K queries per row, per-query causal mask).
 """
-from .ops import mla_paged_attention_decode, paged_attention_decode
+from .ops import (mla_paged_attention_decode, mla_paged_attention_verify,
+                  paged_attention_decode, paged_attention_verify)
 
-__all__ = ["paged_attention_decode", "mla_paged_attention_decode"]
+__all__ = ["paged_attention_decode", "mla_paged_attention_decode",
+           "paged_attention_verify", "mla_paged_attention_verify"]

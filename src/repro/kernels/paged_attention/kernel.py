@@ -26,6 +26,15 @@ Two kernel bodies cover every paged decode family in ``models.cache_spec``:
 Pages whose first token already lies past ``pos`` are skipped via ``pl.when``
 (a null-page read would be masked anyway, but skipping saves the DMA wait);
 fully-masked pages are absorbed by the -inf-guarded online-softmax update.
+
+Each decode body has a small-q *verify* twin (``_paged_verify_kernel`` /
+``_mla_paged_verify_kernel``) for speculative decoding: the q block carries
+``Q = 1 + K`` query tokens per row (last emitted token + draft), a third
+scalar-prefetch operand ``n_q`` gives each row's live query count, and the
+mask becomes per-query causal — query ``j`` sits at absolute position
+``pos + j``, so flattened row ``j*G + g`` runs exactly the decode body's ops
+at that position and ``Q == 1`` reproduces the decode kernel bit-for-bit.
+Dead rows (``j >= n_q``) stay fully masked and finish as exact zeros.
 """
 from __future__ import annotations
 
@@ -178,6 +187,109 @@ def paged_decode_fwd(q, k_pages, v_pages, tables, pos, *, scale: float,
     )(*operands)
 
 
+def _paged_verify_kernel(tables_ref, pos_ref, nq_ref, q_ref, k_ref, v_ref,
+                         *rest, page_size: int, scale: float, softcap: float,
+                         window: int, ring: int, quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _():
+        _init(m_scr, l_scr, acc_scr)
+
+    pos = pos_ref[b]
+    n_q = nq_ref[b]
+    # vanilla: pages strictly past the last live query's position hold no
+    # attendable token; ring: every resident page can hold in-window tokens
+    live = (i * page_size <= pos + n_q - 1) if window == 0 \
+        else (i * page_size < ring)
+
+    @pl.when(live)
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32)                  # [Q, G, D]
+        Q, G, D = q.shape
+        q = q.reshape(Q * G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)               # [ps, D]
+        v = v_ref[0, :, 0].astype(jnp.float32)               # [ps, D]
+        if quantized:
+            k = k * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
+            v = v * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        # flattened row j*G + g is query j of head group g, at absolute
+        # position pos + j — the decode mask evaluated per row
+        qi = jax.lax.broadcasted_iota(jnp.int32, (Q, G), 0).reshape(Q * G, 1)
+        valid = _page_mask(s, i, pos + qi, page_size=page_size,
+                           window=window, ring=ring)
+        valid = valid & (qi < n_q)
+        _online_softmax_update(jnp.where(valid, s, NEG_INF), v,
+                               m_scr, l_scr, acc_scr)
+
+    @pl.when(i == pl.num_programs(2) - 1)
+    def _():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-20)[:, None]).reshape(
+                           o_ref.shape[2:]).astype(o_ref.dtype)
+
+
+def paged_verify_fwd(q, k_pages, v_pages, tables, pos, n_q, *, scale: float,
+                     softcap: float = 0.0, window: int = 0,
+                     k_scale=None, v_scale=None, interpret: bool = False):
+    """Small-q speculative verify: q [B, K, Q, G, D] — per row the last
+    emitted token plus its draft, padded to Q; pos [B] base positions; n_q
+    [B] live query counts (1 + draft length).  Same page-table / ring /
+    int8-scale contract as ``paged_decode_fwd``; pages are swept once per
+    row with all Q queries' masks evaluated against them.  Returns
+    [B, K, Q, G, D]; dead query rows (j >= n_q) are exact zeros."""
+    B, K, Q, G, D = q.shape
+    ps = k_pages.shape[1]
+    n_pages = tables.shape[1]
+    quantized = k_scale is not None
+    kernel = functools.partial(
+        _paged_verify_kernel, page_size=ps, scale=scale, softcap=softcap,
+        window=window, ring=n_pages * ps, quantized=quantized)
+    page_spec = pl.BlockSpec(
+        (1, ps, 1, D), lambda b, kh, i, tr, pr, nr: (tr[b, i], 0, kh, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, Q, G, D),
+                     lambda b, kh, i, tr, pr, nr: (b, kh, 0, 0, 0)),
+        page_spec,
+        page_spec,
+    ]
+    operands = [tables, pos, n_q, q, k_pages, v_pages]
+    if quantized:
+        scale_spec = pl.BlockSpec(
+            (1, ps, 1), lambda b, kh, i, tr, pr, nr: (tr[b, i], 0, kh))
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale, v_scale]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, K, n_pages),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, Q, G, D),
+                               lambda b, kh, i, tr, pr, nr: (b, kh, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Q * G,), jnp.float32),
+            pltpu.VMEM((Q * G,), jnp.float32),
+            pltpu.VMEM((Q * G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, Q, G, D), q.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(*operands)
+
+
 def _mla_paged_decode_kernel(tables_ref, pos_ref, q_eff_ref, q_rope_ref,
                              ckv_ref, krope_ref, *rest, page_size: int,
                              scale: float, quantized: bool):
@@ -264,6 +376,101 @@ def mla_paged_decode_fwd(q_eff, q_rope, ckv_pages, krope_pages, tables, pos,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, H, L), q_eff.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(*operands)
+
+
+def _mla_paged_verify_kernel(tables_ref, pos_ref, nq_ref, q_eff_ref,
+                             q_rope_ref, ckv_ref, krope_ref, *rest,
+                             page_size: int, scale: float, quantized: bool):
+    if quantized:
+        cs_ref, rs_ref, ctx_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        ctx_ref, m_scr, l_scr, acc_scr = rest
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _():
+        _init(m_scr, l_scr, acc_scr)
+
+    pos = pos_ref[b]
+    n_q = nq_ref[b]
+
+    @pl.when(i * page_size <= pos + n_q - 1)
+    def _():
+        qe = q_eff_ref[0].astype(jnp.float32)                # [Q, H, L]
+        Q, H, L = qe.shape
+        qe = qe.reshape(Q * H, L)
+        qr = q_rope_ref[0].astype(jnp.float32).reshape(Q * H, -1)
+        ckv = ckv_ref[0].astype(jnp.float32)                 # [ps, L]
+        kr = krope_ref[0].astype(jnp.float32)                # [ps, R]
+        if quantized:
+            ckv = ckv * cs_ref[0].astype(jnp.float32)[:, None]
+            kr = kr * rs_ref[0].astype(jnp.float32)[:, None]
+        s = jax.lax.dot_general(qe, ckv, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s + jax.lax.dot_general(qr, kr, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        s = s * scale                                        # [Q*H, ps]
+        qi = jax.lax.broadcasted_iota(jnp.int32, (Q, H), 0).reshape(Q * H, 1)
+        valid = _page_mask(s, i, pos + qi, page_size=page_size, window=0,
+                           ring=0)
+        valid = valid & (qi < n_q)
+        _online_softmax_update(jnp.where(valid, s, NEG_INF), ckv,
+                               m_scr, l_scr, acc_scr)
+
+    @pl.when(i == pl.num_programs(1) - 1)
+    def _():
+        ctx_ref[0] = (acc_scr[...]
+                      / jnp.maximum(l_scr[...], 1e-20)[:, None]).reshape(
+                          ctx_ref.shape[1:]).astype(ctx_ref.dtype)
+
+
+def mla_paged_verify_fwd(q_eff, q_rope, ckv_pages, krope_pages, tables, pos,
+                         n_q, *, scale: float, ckv_scale=None,
+                         krope_scale=None, interpret: bool = False):
+    """Small-q absorbed-latent verify: q_eff [B, Q, H, L] / q_rope
+    [B, Q, H, R] against the latent pages, with pos/n_q as in
+    ``paged_verify_fwd``.  Returns the latent context [B, Q, H, L]; dead
+    query rows are exact zeros."""
+    B, Q, H, L = q_eff.shape
+    R = q_rope.shape[-1]
+    ps = ckv_pages.shape[1]
+    n_pages = tables.shape[1]
+    quantized = ckv_scale is not None
+    kernel = functools.partial(_mla_paged_verify_kernel, page_size=ps,
+                               scale=scale, quantized=quantized)
+    in_specs = [
+        pl.BlockSpec((1, Q, H, L), lambda b, i, tr, pr, nr: (b, 0, 0, 0)),
+        pl.BlockSpec((1, Q, H, R), lambda b, i, tr, pr, nr: (b, 0, 0, 0)),
+        pl.BlockSpec((1, ps, L), lambda b, i, tr, pr, nr: (tr[b, i], 0, 0)),
+        pl.BlockSpec((1, ps, R), lambda b, i, tr, pr, nr: (tr[b, i], 0, 0)),
+    ]
+    operands = [tables, pos, n_q, q_eff, q_rope, ckv_pages, krope_pages]
+    if quantized:
+        scale_spec = pl.BlockSpec((1, ps),
+                                  lambda b, i, tr, pr, nr: (tr[b, i], 0))
+        in_specs += [scale_spec, scale_spec]
+        operands += [ckv_scale, krope_scale]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, n_pages),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, Q, H, L),
+                               lambda b, i, tr, pr, nr: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Q * H,), jnp.float32),
+            pltpu.VMEM((Q * H,), jnp.float32),
+            pltpu.VMEM((Q * H, L), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Q, H, L), q_eff.dtype),
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,

@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from .. import default_interpret
-from .kernel import mla_paged_decode_fwd, paged_decode_fwd
+from .kernel import (mla_paged_decode_fwd, mla_paged_verify_fwd,
+                     paged_decode_fwd, paged_verify_fwd)
 
 
 @partial(jax.jit, static_argnames=("scale", "softcap", "window", "interpret"))
@@ -59,4 +60,48 @@ def mla_paged_attention_decode(q_eff, q_rope, ckv_pages, krope_pages, tables,
                                 jnp.asarray(tables, jnp.int32),
                                 jnp.asarray(pos, jnp.int32), scale=scale,
                                 ckv_scale=ckv_scale, krope_scale=krope_scale,
+                                interpret=default_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("scale", "softcap", "window", "interpret"))
+def paged_attention_verify(q, k_pages, v_pages, tables, pos, n_q, *,
+                           scale: float, softcap: float = 0.0,
+                           window: int = 0, k_scale=None, v_scale=None,
+                           interpret: bool = None):
+    """Small-q GQA verify against the paged KV pool (speculative decoding).
+
+    q: [B, Q, H, D] — per row the last emitted token plus its draft, roped
+    at positions ``pos + j`` and already written to their pages; pos: [B]
+    base positions; n_q: [B] live query counts (1 + draft length).  Pool /
+    table / ring / int8-scale layout as ``paged_attention_decode``.  Returns
+    [B, Q, H, D]; dead query rows (j >= n_q) are exact zeros."""
+    B, Q, H, D = q.shape
+    K = k_pages.shape[2]
+    assert H % K == 0, (H, K)
+    qg = q.reshape(B, Q, K, H // K, D).transpose(0, 2, 1, 3, 4)
+    o = paged_verify_fwd(qg, k_pages, v_pages,
+                         jnp.asarray(tables, jnp.int32),
+                         jnp.asarray(pos, jnp.int32),
+                         jnp.asarray(n_q, jnp.int32), scale=scale,
+                         softcap=softcap, window=window,
+                         k_scale=k_scale, v_scale=v_scale,
+                         interpret=default_interpret(interpret))
+    return o.transpose(0, 2, 1, 3, 4).reshape(B, Q, H, D)
+
+
+@partial(jax.jit, static_argnames=("scale", "interpret"))
+def mla_paged_attention_verify(q_eff, q_rope, ckv_pages, krope_pages, tables,
+                               pos, n_q, *, scale: float, ckv_scale=None,
+                               krope_scale=None, interpret: bool = None):
+    """Small-q absorbed-latent MLA verify against the latent pages.
+
+    q_eff: [B, Q, H, L]; q_rope: [B, Q, H, R]; pos/n_q as in
+    ``paged_attention_verify``.  Returns the latent context [B, Q, H, L]
+    (dead query rows exact zeros) — the caller up-projects with ``w_uv``."""
+    return mla_paged_verify_fwd(q_eff, q_rope, ckv_pages, krope_pages,
+                                jnp.asarray(tables, jnp.int32),
+                                jnp.asarray(pos, jnp.int32),
+                                jnp.asarray(n_q, jnp.int32), scale=scale,
+                                ckv_scale=ckv_scale,
+                                krope_scale=krope_scale,
                                 interpret=default_interpret(interpret))

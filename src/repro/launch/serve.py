@@ -108,6 +108,12 @@ def main(argv=None):
                          "into page-aligned chunks that interleave with "
                          "decode steps (0 = one monolithic prefill per "
                          "admission)")
+    ap.add_argument("--speculate-tokens", type=int, default=0, metavar="K",
+                    help="speculative decoding: draft up to K tokens per "
+                         "slot from the request's own history (n-gram "
+                         "prompt lookup) and verify them in one small-q "
+                         "step; greedy accept keeps tokens identical to "
+                         "non-speculative decode (0 = off)")
     ap.add_argument("--max-len", type=int, default=0,
                     help="per-request length cap (0 -> fitted to workload)")
     ap.add_argument("--overlap", action="store_true",
@@ -143,7 +149,8 @@ def main(argv=None):
                        cache_eviction=args.cache_eviction,
                        attn_backend=args.attn_backend,
                        prefill_chunk_tokens=args.prefill_chunk_tokens,
-                       kv_dtype=args.kv_dtype)
+                       kv_dtype=args.kv_dtype,
+                       speculate_tokens=args.speculate_tokens)
 
     prompts, budgets = make_prompts(args, cfg.vocab)
 
@@ -165,6 +172,9 @@ def main(argv=None):
     if engine == "static" and (args.trace or args.jax_annotations):
         print("[serve] WARNING: --trace/--jax-annotations only apply to the "
               "continuous engine; no trace will be written")
+    if engine == "static" and args.speculate_tokens:
+        print("[serve] WARNING: --speculate-tokens only applies to the "
+              "continuous engine; the static path decodes one token a step")
     eng = None
     if engine == "continuous":
         tracer = Tracer(jax_annotations=args.jax_annotations)
@@ -183,6 +193,15 @@ def main(argv=None):
                   f"staged, {eng.metrics.value('engine.overlap_used')} used, "
                   f"{eng.metrics.value('engine.overlap_dropped')} dropped "
                   f"(host meta build hidden behind device steps)")
+        if args.speculate_tokens and not eng.spec_k:
+            print(f"[serve] WARNING: speculation disabled for {cfg.name}: "
+                  f"cache family {eng.spec.describe()} has no paged small-q "
+                  f"verify step; serving non-speculatively")
+        elif eng.spec_k:
+            print(f"[serve] speculation: K={eng.spec_k}, "
+                  f"{metrics['spec_proposed']} drafted, "
+                  f"{metrics['spec_accepted']} accepted "
+                  f"(accept rate {metrics['spec_accept_rate']:.2f})")
         if args.prefill_chunk_tokens:
             print(f"[serve] chunked prefill: budget "
                   f"{scfg.chunk_tokens} tokens, "

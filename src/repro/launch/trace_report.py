@@ -29,8 +29,11 @@ from typing import Any, Dict, List
 from ..serving.telemetry import ENGINE_PID, HOST_TID, REQUEST_PID, \
     percentile, validate_trace
 
-# engine phases in display order; anything else lands in "other"
-PHASES = ("prefill", "prefill_chunk", "restore", "decode")
+# engine phases in display order; anything else lands in "other".
+# "verify" is the speculative small-q decode step (draft + bonus token in
+# one launch) — it *serves* decode-ready slots, so the stall computation
+# below exempts it exactly like plain decode
+PHASES = ("prefill", "prefill_chunk", "restore", "decode", "verify")
 # overlapped host-pipeline phases (ENGINE_PID, tid=HOST_TID), Engine.pump()
 HOST_PHASES = ("dispatch", "stage", "collect")
 
@@ -65,7 +68,8 @@ def phase_breakdown(trace: Dict[str, Any]) -> Dict[str, Any]:
             counts[name] += 1
         else:
             other += dur
-        if name != "decode" and e.get("args", {}).get("decode_waiting"):
+        if name not in ("decode", "verify") \
+                and e.get("args", {}).get("decode_waiting"):
             stall += dur
     wall = (hi - lo) if spans else 0.0
     stepped = sum(per.values()) + other

@@ -316,6 +316,27 @@ def decode_valid_mask(pos: jax.Array, n: int, *, window: int = 0) -> jax.Array:
         & (k_abs > pos[:, None] - window)
 
 
+def verify_valid_mask(pos: jax.Array, n_q: jax.Array, Q: int, n: int, *,
+                      window: int = 0) -> jax.Array:
+    """[B, Q, n] validity of a gathered view at a small-q verify step.
+
+    Query j of row b sits at absolute position ``pos[b] + j``; its row of the
+    mask is ``decode_valid_mask`` evaluated at that position (absolute-causal,
+    or ring-recovered for ``window > 0`` with ring length ``n``).  Dead query
+    rows (``j >= n_q[b]``) are all-False."""
+    qpos = pos[:, None] + jnp.arange(Q)[None, :]                  # [B, Q]
+    live = jnp.arange(Q)[None, :] < n_q[:, None]
+    idx = jnp.arange(n)
+    if not window:
+        valid = idx[None, None, :] <= qpos[:, :, None]
+    else:
+        k_abs = qpos[:, :, None] \
+            - (((qpos % n)[:, :, None] - idx[None, None, :]) % n)
+        valid = (k_abs >= 0) & (k_abs <= qpos[:, :, None]) \
+            & (k_abs > qpos[:, :, None] - window)
+    return valid & live[:, :, None]
+
+
 def decode_qkv(cfg: ArchConfig, p, x, pos, freqs):
     """Project + rope one decode token.  x: [B, d]; pos: [B].  Returns
     (q [B, H, D], k [B, K, D], v [B, K, D])."""
@@ -355,6 +376,33 @@ def masked_token_attend(q, kg, vg, valid, *, scale: float,
     return o.astype(vg.dtype).reshape(B, H, D)
 
 
+def masked_multi_token_attend(q, kg, vg, valid, *, scale: float,
+                              softcap: float = 0.0):
+    """``masked_token_attend`` with a small query axis (speculative verify).
+
+    q: [B, Q, H, D]; kg, vg: [B, S, K, D]; valid: [B, Q, S] per-query masks.
+    Each query row runs the exact per-row ops of the one-token attend (fp32
+    scores, masked softmax, fp32 PV sum, single output cast), so ``Q == 1``
+    reproduces it bit-for-bit.  Rows whose mask is all-False (dead / padded
+    queries) return exact zeros — matching the fused kernel's zero-init
+    accumulator — so backends agree on every row, live or dead.  Returns
+    [B, Q, H, D]."""
+    B, Q, H, D = q.shape
+    K = kg.shape[2]
+    qg = q.reshape(B, Q, K, H // K, D)
+    s = jnp.einsum("bqkgd,bskd->bqkgs", qg, kg,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1)
+    any_valid = jnp.any(valid, axis=-1)                           # [B, Q]
+    a = jnp.where(any_valid[:, :, None, None, None], a, 0.0)
+    o = jnp.einsum("bqkgs,bskd->bqkgd", a, vg,
+                   preferred_element_type=jnp.float32)
+    return o.astype(vg.dtype).reshape(B, Q, H, D)
+
+
 # --------------------------------------------------- paged attention blocks
 #
 # Family framing shared by every backend: QKV + RoPE, page-table scatter,
@@ -382,7 +430,6 @@ def paged_prefill_attention_block(cfg: ArchConfig, p, x, cache, meta, freqs,
     (reference gather+attend or the fused ragged-prefill kernel).  Returns
     (out [B, T, d], new_cache)."""
     B, T, _ = x.shape
-    ps = cache["k"].shape[1]
     quantized = "k_scale" in cache
     tables, start, n_live = meta["tables"], meta["start"], meta["n_live"]
     q, k, v = qkv(cfg, p, x)
@@ -405,9 +452,9 @@ def paged_prefill_attention_block(cfg: ArchConfig, p, x, cache, meta, freqs,
         cvs = cache["v_scale"].at[wp, wo].set(vs)
     window = cfg.sliding_window
     if window:
-        from .cache_spec import window_pages
-        ring_tables = tables[:, :min(window_pages(window, ps),
-                                     tables.shape[1])]
+        # ring modulus contract: the ring is the full table width the engine
+        # passes (>= window_pages; may carry slack pages for speculation)
+        ring_tables = tables
         # the ring must be read *before* the chunk's writes recycle slots
         # still holding in-window keys of this chunk's earliest queries;
         # quantized mode passes the pre-write scales alongside (fresh chunk
@@ -447,7 +494,6 @@ def paged_decode_attention_block(cfg: ArchConfig, p, x, cache, meta, freqs,
     positions > pos masked (window layers: masked by absolute position
     recovered from the ring layout), so stale data in partially-filled or
     recycled pages is softmax-zero.  Returns (out [B, d], new_cache)."""
-    ps = cache["k"].shape[1]
     quantized = "k_scale" in cache
     pos = meta["pos"]
     q, k, v = decode_qkv(cfg, p, x, pos, freqs)
@@ -463,14 +509,54 @@ def paged_decode_attention_block(cfg: ArchConfig, p, x, cache, meta, freqs,
     cv = cache["v"].at[wp, wo].set(v.astype(cache["v"].dtype))
     tables = meta["tables"]
     window = cfg.sliding_window
-    if window:
-        from .cache_spec import window_pages
-        tables = tables[:, :min(window_pages(window, ps), tables.shape[1])]
     o = backend.decode_attend(q, ck, cv, tables, pos,
                               scale=1.0 / math.sqrt(cfg.head_dim_),
                               softcap=cfg.attn_logit_softcap, window=window,
                               **scales)
     out = jnp.einsum("bhe,hed->bd", o, p["wo"])
+    new_cache = {"k": ck, "v": cv}
+    new_cache.update(scales)
+    return out, new_cache
+
+
+def paged_verify_attention_block(cfg: ArchConfig, p, x, cache, meta, freqs,
+                                 backend):
+    """Small-q speculative verify step against the paged KV pool.
+
+    x: [B, Q, d] — per slot the last emitted token plus its draft, padded to
+    the fixed width Q; meta: the flat metadata from
+    ``attn_backend.verify_meta``.  Write-all-then-attend: every query token's
+    K/V scatters into its page first (dead rows to the null page), then each
+    query attends the post-write pool under the per-query causal mask
+    ``token_pos <= pos + j`` (ring rule for windowed families) and
+    ``j < n_q`` — so a rejected draft's K/V is invisible to every query that
+    survives the accept decision and gets overwritten by the next step's
+    writes at the same positions.  Per token the projections, rope, scatter
+    and attend are the exact per-row ops of the decode block, which is what
+    keeps accepted tokens bit-identical to the non-speculative stream.
+    Returns (out [B, Q, d], new_cache)."""
+    quantized = "k_scale" in cache
+    pos, Q = meta["pos"], x.shape[1]
+    q, k, v = qkv(cfg, p, x)
+    positions = pos[:, None] + jnp.arange(Q)[None, :]             # [B, Q]
+    if freqs is not None:
+        q = apply_rope(q, positions, freqs)
+        k = apply_rope(k, positions, freqs)
+    wp, wo = meta["write_page"], meta["write_off"]
+    scales = {}
+    if quantized:
+        k, ks = quantize_int8(k)
+        v, vs = quantize_int8(v)
+        cks = cache["k_scale"].at[wp, wo].set(ks)
+        cvs = cache["v_scale"].at[wp, wo].set(vs)
+        scales = {"k_scale": cks, "v_scale": cvs}
+    ck = cache["k"].at[wp, wo].set(k.astype(cache["k"].dtype))
+    cv = cache["v"].at[wp, wo].set(v.astype(cache["v"].dtype))
+    o = backend.verify_attend(q, ck, cv, meta["tables"], pos, meta["n_q"],
+                              scale=1.0 / math.sqrt(cfg.head_dim_),
+                              softcap=cfg.attn_logit_softcap,
+                              window=cfg.sliding_window, **scales)
+    out = jnp.einsum("bqhe,hed->bqd", o, p["wo"])
     new_cache = {"k": ck, "v": cv}
     new_cache.update(scales)
     return out, new_cache

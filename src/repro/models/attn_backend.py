@@ -43,7 +43,9 @@ import numpy as np
 from ..configs.base import ArchConfig
 from . import attention, mla
 from ..kernels.paged_attention import (mla_paged_attention_decode,
-                                       paged_attention_decode)
+                                       mla_paged_attention_verify,
+                                       paged_attention_decode,
+                                       paged_attention_verify)
 from ..kernels.ragged_prefill import (mla_ragged_prefill_attend,
                                       ragged_prefill_attend)
 
@@ -99,9 +101,11 @@ def decode_meta(cfg: ArchConfig, page_size: int, tables, pos):
     B = tables.shape[0]
     col = pos // page_size
     if cfg.sliding_window:
-        from .cache_spec import window_pages
-        col = col % min(window_pages(cfg.sliding_window, page_size),
-                        tables.shape[1])
+        # ring modulus contract: the ring IS the table width the engine
+        # passes (>= window_pages; the pool may add slack pages, e.g. for
+        # speculative verify rollback) — write targets and every attend
+        # core's recovered-position mask use the same modulus
+        col = col % tables.shape[1]
     xp = jnp if isinstance(tables, jax.Array) else np
     # live paged rows always have col < table width; the clamp covers rows
     # whose table is a null placeholder (state-slot families, idle slots)
@@ -137,8 +141,8 @@ def prefill_meta(cfg: ArchConfig, page_size: int, tables, slots, start,
     live = xp.arange(Th)[None, :] < n_live[:, None]
     col = positions // page_size
     if cfg.sliding_window:
-        from .cache_spec import window_pages
-        R = min(window_pages(cfg.sliding_window, page_size), tables.shape[1])
+        # ring modulus = table width (see decode_meta ring contract)
+        R = tables.shape[1]
         live = live & (positions >= (start + n_live)[:, None]
                        - R * page_size)
         col = col % R
@@ -146,6 +150,32 @@ def prefill_meta(cfg: ArchConfig, page_size: int, tables, slots, start,
     page = tables[xp.arange(B)[:, None], col]
     return {"tables": tables, "slots": slots, "start": start,
             "n_tail": n_tail, "n_live": n_live,
+            "write_page": xp.where(live, page, 0),
+            "write_off": positions % page_size}
+
+
+# ---------------------------------------------------- flat verify metadata
+
+def verify_meta(cfg: ArchConfig, page_size: int, tables, pos, n_q, Q: int):
+    """Flat metadata for a small-q speculative *verify* step.
+
+    Row ``b`` carries ``n_q[b]`` live queries (the last emitted token plus
+    its draft) at absolute positions ``pos[b] .. pos[b] + n_q[b] - 1``; the
+    step is padded to the fixed width ``Q = speculate_tokens + 1``.  Write
+    targets follow the decode ring contract (modulus = table width); dead
+    query rows (``j >= n_q[b]``) are routed to the reserved null page so
+    their garbage K/V never lands in an owned page.  Works on numpy (engine
+    host path) and jnp arrays alike."""
+    xp = jnp if isinstance(tables, jax.Array) else np
+    B = tables.shape[0]
+    positions = pos[:, None] + xp.arange(Q)[None, :]              # [B, Q]
+    live = xp.arange(Q)[None, :] < n_q[:, None]
+    col = positions // page_size
+    if cfg.sliding_window:
+        col = col % tables.shape[1]
+    col = xp.minimum(col, tables.shape[1] - 1)
+    page = tables[xp.arange(B)[:, None], col]
+    return {"tables": tables, "pos": pos, "n_q": n_q,
             "write_page": xp.where(live, page, 0),
             "write_off": positions % page_size}
 
@@ -183,6 +213,20 @@ class AttentionBackend:
         return attention.paged_decode_attention_block(cfg, p, x, cache, meta,
                                                       freqs, backend=self)
 
+    def paged_verify(self, cfg: ArchConfig, p, x, cache, meta, freqs):
+        """Small-q speculative verify against the paged pool: ``x`` is
+        [B, Q, d] (last emitted token + draft, padded to Q), ``meta`` is the
+        flat metadata from ``verify_meta``.  All Q tokens' K/V scatter into
+        their pages first, then every query attends the post-write pool
+        under the per-query causal mask — rejected drafts stay invisible to
+        surviving queries and are overwritten by the next step's writes.
+        Returns (out [B, Q, d], new_cache)."""
+        if cfg.use_mla:
+            return mla.mla_paged_verify_block(cfg, p, x, cache, meta, freqs,
+                                              backend=self)
+        return attention.paged_verify_attention_block(cfg, p, x, cache, meta,
+                                                      freqs, backend=self)
+
     # -------- attend cores (override to fuse)
     #
     # Every core takes optional scale pools (``k_scale``/``v_scale``
@@ -204,6 +248,24 @@ class AttentionBackend:
         """Absorbed-latent scores + latent context: q_eff [B, H, L] /
         q_rope [B, H, R] against [P, ps, L] / [P, ps, R] pages.  Returns the
         latent context [B, H, L]."""
+        raise NotImplementedError
+
+    def verify_attend(self, q, k_pages, v_pages, tables, pos, n_q, *,
+                      scale: float, softcap: float = 0.0, window: int = 0,
+                      k_scale=None, v_scale=None):
+        """Small-q verify attend: q [B, Q, H, D] (query j of row b sits at
+        absolute position ``pos[b] + j``) against the *post-write* pool.
+        Mask: token position <= pos + j (ring-recovered when ``window > 0``)
+        and j < n_q[b]; dead query rows return exact zeros on every backend.
+        Returns [B, Q, H, D]."""
+        raise NotImplementedError
+
+    def mla_verify_attend(self, q_eff, q_rope, ckv_pages, krope_pages,
+                          tables, pos, n_q, *, scale: float, ckv_scale=None,
+                          krope_scale=None):
+        """Small-q absorbed-latent verify attend: q_eff [B, Q, H, L] /
+        q_rope [B, Q, H, R] against the post-write latent pages, masked as
+        ``verify_attend``.  Returns the latent context [B, Q, H, L]."""
         raise NotImplementedError
 
     def prefill_attend(self, q, k, v, k_pages, v_pages, tables, start, n_live,
@@ -281,6 +343,36 @@ class ReferenceBackend(AttentionBackend):
                                     scale=scale)
         return ctx.astype(q_eff.dtype)
 
+    def verify_attend(self, q, k_pages, v_pages, tables, pos, n_q, *,
+                      scale: float, softcap: float = 0.0, window: int = 0,
+                      k_scale=None, v_scale=None):
+        if k_scale is not None:
+            kg = _gather_dequant(k_pages, k_scale, tables)
+            vg = _gather_dequant(v_pages, v_scale, tables)
+        else:
+            kg = attention.gather_pages(k_pages, tables)
+            vg = attention.gather_pages(v_pages, tables)
+        valid = attention.verify_valid_mask(pos, n_q, q.shape[1],
+                                            kg.shape[1], window=window)
+        o = attention.masked_multi_token_attend(q, kg, vg, valid,
+                                                scale=scale, softcap=softcap)
+        return o.astype(q.dtype)
+
+    def mla_verify_attend(self, q_eff, q_rope, ckv_pages, krope_pages,
+                          tables, pos, n_q, *, scale: float, ckv_scale=None,
+                          krope_scale=None):
+        if ckv_scale is not None:
+            ccg = _gather_dequant(ckv_pages, ckv_scale, tables)
+            crg = _gather_dequant(krope_pages, krope_scale, tables)
+        else:
+            ccg = attention.gather_pages(ckv_pages, tables)
+            crg = attention.gather_pages(krope_pages, tables)
+        valid = attention.verify_valid_mask(pos, n_q, q_eff.shape[1],
+                                            ccg.shape[1])
+        ctx = mla.mla_latent_verify_attend(q_eff, q_rope, ccg, crg, valid,
+                                           scale=scale)
+        return ctx.astype(q_eff.dtype)
+
     def prefill_attend(self, q, k, v, k_pages, v_pages, tables, start, n_live,
                        *, window: int = 0, softcap: float = 0.0,
                        q_block: int = 512, unroll: bool = False,
@@ -342,6 +434,22 @@ class PallasBackend(ReferenceBackend):
                           krope_scale=None):
         return mla_paged_attention_decode(q_eff, q_rope, ckv_pages,
                                           krope_pages, tables, pos,
+                                          scale=scale, ckv_scale=ckv_scale,
+                                          krope_scale=krope_scale)
+
+    def verify_attend(self, q, k_pages, v_pages, tables, pos, n_q, *,
+                      scale: float, softcap: float = 0.0, window: int = 0,
+                      k_scale=None, v_scale=None):
+        return paged_attention_verify(q, k_pages, v_pages, tables, pos, n_q,
+                                      scale=scale, softcap=softcap,
+                                      window=window, k_scale=k_scale,
+                                      v_scale=v_scale)
+
+    def mla_verify_attend(self, q_eff, q_rope, ckv_pages, krope_pages,
+                          tables, pos, n_q, *, scale: float, ckv_scale=None,
+                          krope_scale=None):
+        return mla_paged_attention_verify(q_eff, q_rope, ckv_pages,
+                                          krope_pages, tables, pos, n_q,
                                           scale=scale, ckv_scale=ckv_scale,
                                           krope_scale=krope_scale)
 

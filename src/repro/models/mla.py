@@ -238,6 +238,75 @@ def mla_latent_attend(q_eff, q_rope, cc, cr, valid, *, scale: float):
     return ctx.astype(cc.dtype)
 
 
+def mla_latent_verify_attend(q_eff, q_rope, cc, cr, valid, *, scale: float):
+    """``mla_latent_attend`` with a small query axis (speculative verify).
+
+    q_eff: [B, Q, H, L]; q_rope: [B, Q, H, R]; valid: [B, Q, S] per-query
+    masks (``attention.verify_valid_mask``).  Per query row the ops are the
+    exact per-row ops of the one-token attend, so ``Q == 1`` reproduces it
+    bit-for-bit; all-False rows (dead / padded queries) return exact zeros,
+    matching the fused verify kernel's zero-init accumulator.  Returns the
+    latent context [B, Q, H, L]."""
+    s = jnp.einsum("bqhl,bsl->bqhs", q_eff, cc,
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bqhr,bsr->bqhs", q_rope, cr,
+                       preferred_element_type=jnp.float32)
+    s = s * scale
+    s = jnp.where(valid[:, :, None, :], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1)
+    any_valid = jnp.any(valid, axis=-1)                            # [B, Q]
+    a = jnp.where(any_valid[:, :, None, None], a, 0.0)
+    ctx = jnp.einsum("bqhs,bsl->bqhl", a, cc,
+                     preferred_element_type=jnp.float32)
+    return ctx.astype(cc.dtype)
+
+
+def mla_paged_verify_block(cfg: ArchConfig, p, x, cache, meta, freqs,
+                           backend):
+    """Small-q speculative verify against the latent pages (the verify twin
+    of ``mla_paged_decode_block``).  x: [B, Q, d] — last emitted token plus
+    draft, padded to Q; ``meta`` from ``attn_backend.verify_meta``.
+    Write-all-then-attend: every query's latent scatters first (dead rows to
+    the null page), then the absorbed attend masks per query — see
+    ``attention.paged_verify_attention_block`` for the rollback contract.
+    Returns (out [B, Q, d], new_cache)."""
+    Q = x.shape[1]
+    nope, rope_d = cfg.nope_head_dim, cfg.rope_head_dim
+    pos = meta["pos"]
+    scale = 1.0 / math.sqrt(nope + rope_d)
+    positions = pos[:, None] + jnp.arange(Q)[None, :]              # [B, Q]
+
+    q = _queries(cfg, p, x)                                        # [B,Q,H,·]
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, freqs)
+
+    ckv_full = x @ p["wkv_a"]
+    ckv_new = rmsnorm(ckv_full[..., :cfg.kv_lora_rank], p["kv_norm"])
+    kr_new = apply_rope(ckv_full[..., cfg.kv_lora_rank:][:, :, None, :],
+                        positions, freqs)[:, :, 0, :]
+
+    wp, wo_ = meta["write_page"], meta["write_off"]
+    scales = {}
+    if "ckv_scale" in cache:
+        ckv_new, cs = quantize_int8(ckv_new)
+        kr_new, rs = quantize_int8(kr_new)
+        scales = {"ckv_scale": cache["ckv_scale"].at[wp, wo_].set(cs),
+                  "krope_scale": cache["krope_scale"].at[wp, wo_].set(rs)}
+    cc = cache["ckv"].at[wp, wo_].set(ckv_new.astype(cache["ckv"].dtype))
+    cr = cache["krope"].at[wp, wo_].set(kr_new.astype(cache["krope"].dtype))
+
+    w_uk = p["wkv_b"][..., :nope]                                  # [L,H,nope]
+    q_eff = jnp.einsum("bqhn,lhn->bqhl", q_nope, w_uk)
+    ctx = backend.mla_verify_attend(q_eff, q_rope, cc, cr, meta["tables"],
+                                    pos, meta["n_q"], scale=scale, **scales)
+    w_uv = p["wkv_b"][..., nope:]                                  # [L, H, v]
+    o = jnp.einsum("bqhl,lhv->bqhv", ctx, w_uv)
+    out = jnp.einsum("bqhv,hvd->bqd", o, p["wo"])
+    new_cache = {"ckv": cc, "krope": cr}
+    new_cache.update(scales)
+    return out, new_cache
+
+
 def mla_decode_block(cfg: ArchConfig, p, x, cache, pos, freqs):
     """Absorbed one-token decode.  x: [B, d]."""
     B = x.shape[0]

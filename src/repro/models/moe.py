@@ -47,11 +47,17 @@ def capacity(cfg: ArchConfig, tokens_per_group: int) -> int:
     return min(tokens_per_group, max(8, round_up(c, 8)))
 
 
-def moe_apply(cfg: ArchConfig, p, x, *, mesh=None) -> Tuple[jax.Array, jax.Array]:
-    """x: [G, S, D] (groups route independently).  Returns (out, aux_loss)."""
+def moe_apply(cfg: ArchConfig, p, x, *, mesh=None,
+              cap: Optional[int] = None) -> Tuple[jax.Array, jax.Array]:
+    """x: [G, S, D] (groups route independently).  Returns (out, aux_loss).
+
+    ``cap`` overrides the expert capacity; ``cap == S`` guarantees no token
+    is ever dropped, making each token's output independent of its
+    co-batched neighbors — the speculative verify step relies on this to
+    stay bit-identical to the (never-dropping, small-batch) decode step."""
     G, S, D = x.shape
     E, K = cfg.n_experts, cfg.top_k
-    C = capacity(cfg, S)
+    C = capacity(cfg, S) if cap is None else cap
     act = act_fn(cfg.act)
 
     logits = (x.astype(jnp.float32) @ p["router"])                 # [G,S,E] fp32

@@ -118,6 +118,12 @@ def make_serve_step(cfg: ArchConfig, mesh: Optional[Mesh], kind: str,
          (see repro.serving; {} stands in for an absent pool).  ``meta`` is
          the flat per-step metadata pytree from ``attn_backend.decode_meta``
          (page-table rows, positions, precomputed write targets).
+       kind='verify_paged': step(params, kv, state, meta, tokens)
+         -> (next_tokens [B, Q], new_kv, new_state) — small-q speculative
+         verify: ``tokens`` is [B, Q] (last emitted token + draft per slot)
+         and ``meta`` comes from ``attn_backend.verify_meta``; row j of the
+         output is the greedy next token after position pos + j, from which
+         the engine computes the accepted draft prefix.
        kind='prefill_paged': step(params, kv, state, meta, tokens, extras)
          -> (logits, new_kv, new_state) — batched chunk prefill straight
          into the pools.  ``meta`` is the flat per-step metadata pytree from
@@ -141,6 +147,13 @@ def make_serve_step(cfg: ArchConfig, mesh: Optional[Mesh], kind: str,
     if kind == "decode_paged":
         def step(params, kv, state, meta, tokens):
             logits, kv, state = model.decode_paged(params, kv, state, meta,
+                                                   tokens, mesh)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt, kv, state
+        return step
+    if kind == "verify_paged":
+        def step(params, kv, state, meta, tokens):
+            logits, kv, state = model.verify_paged(params, kv, state, meta,
                                                    tokens, mesh)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             return nxt, kv, state

@@ -575,6 +575,10 @@ class DecoderLM:
         return self.attn_backend.paged_decode(self.cfg, p["attn"], h, c, meta,
                                               freqs)
 
+    def _paged_attn_verify(self, p, h, c, meta, freqs):
+        return self.attn_backend.paged_verify(self.cfg, p["attn"], h, c, meta,
+                                              freqs)
+
     def _paged_attn_prefill(self, p, h, c, meta, freqs):
         cfg = self.cfg
         return self.attn_backend.paged_prefill(
@@ -630,6 +634,80 @@ class DecoderLM:
                     return dense_step(x, p, c)
                 x, nhead = _scan_blocks(dbody, x, params["dense_blocks"], head,
                                         unroll=cfg.unroll)
+
+                def mbody(x, pc):
+                    p, c = pc
+                    return moe_step(x, p, c)
+                x, ntail = _scan_blocks(mbody, x, params["blocks"], tail,
+                                        unroll=cfg.unroll)
+                new_kv = jax.tree.map(
+                    lambda a, b: jnp.concatenate([a, b]), nhead, ntail)
+            else:
+                def mbody(x, pc):
+                    p, c = pc
+                    return moe_step(x, p, c)
+                x, new_kv = _scan_blocks(mbody, x, params["blocks"], kv,
+                                         unroll=cfg.unroll)
+        else:
+            def dbody(x, pc):
+                p, c = pc
+                return dense_step(x, p, c)
+            x, new_kv = _scan_blocks(dbody, x, params["blocks"], kv,
+                                     unroll=cfg.unroll)
+
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = lm_logits(cfg, params["embed"], x)
+        return logits, new_kv, state
+
+    def verify_paged(self, params, kv, state, meta, tokens, mesh=None):
+        """Small-q speculative verify step — ``decode_paged`` over
+        ``Q = 1 + speculate_tokens`` candidate tokens per slot.
+
+        tokens: [B, Q] int32 — per slot the last emitted token followed by
+        its draft, zero-padded to Q; meta: flat metadata from
+        ``attn_backend.verify_meta`` (per-row base positions and live query
+        counts).  Every per-token op (embed, norms, attention framing, MLP /
+        MoE, logits) is the exact per-row computation of the decode step, so
+        row ``j`` of the returned logits equals the decode step's logits at
+        position ``pos + j`` bit-for-bit — which is what lets the engine
+        accept drafted tokens without changing the greedy stream.  The MoE
+        path routes each slot's Q tokens as one group at full capacity
+        (``cap=Q``) so capacity dropping can never couple tokens.  Returns
+        (logits [B, Q, V], new_kv, state).  Speculation is gated to paged
+        decoder-only families (``serving.speculate.speculation_k``), so the
+        state-slot route of ``decode_paged`` has no verify twin."""
+        cfg = self.cfg
+        assert cfg.family not in ("ssm", "hybrid"), \
+            "speculative verify requires a paged cache family"
+        x = embed_tokens(params["embed"], tokens)              # [B, Q, d]
+        freqs = self._freqs()
+
+        def dense_step(x, p, c):
+            h = apply_norm(cfg, p["ln1"], x)
+            a, c2 = self._paged_attn_verify(p, h, c, meta, freqs)
+            x = x + a
+            x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x))
+            return x, c2
+
+        def moe_step(x, p, c):
+            h = apply_norm(cfg, p["ln1"], x)
+            a, c2 = self._paged_attn_verify(p, h, c, meta, freqs)
+            x = x + a
+            m, _ = moe_apply(cfg, p["moe"], apply_norm(cfg, p["ln2"], x),
+                             mesh=mesh, cap=x.shape[1])
+            return x + m, c2
+
+        if cfg.is_moe:
+            k = cfg.first_k_dense
+            if k:
+                head = jax.tree.map(lambda a: a[:k], kv)
+                tail = jax.tree.map(lambda a: a[k:], kv)
+
+                def dbody(x, pc):
+                    p, c = pc
+                    return dense_step(x, p, c)
+                x, nhead = _scan_blocks(dbody, x, params["dense_blocks"],
+                                        head, unroll=cfg.unroll)
 
                 def mbody(x, pc):
                     p, c = pc

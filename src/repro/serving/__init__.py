@@ -40,6 +40,15 @@ story, built from the three standard pieces of a modern LLM-serving stack:
     batch padded together, slowest member gates the batch) kept for
     verification and benchmark comparison.
 
+``speculate``
+    Weight-free speculative decoding: an n-gram prompt-lookup proposer
+    drafts K tokens per decode-ready slot from the request's own history;
+    the engine verifies draft + next token in one fixed-shape small-q step
+    (``DecoderLM.verify_paged``) and accepts the longest draft prefix the
+    verify argmax reproduces — emitted tokens stay token-for-token
+    identical to non-speculative greedy decode
+    (``ServeConfig.speculate_tokens``).
+
 ``server``
     Async streaming front-end: ``ServingLoop`` drives the engine's
     overlapped pipeline (``Engine.pump()`` — host plan for step N+1 staged
@@ -98,5 +107,7 @@ from .quant_verify import (  # noqa: F401
 from .radix_cache import MatchResult, RadixCache  # noqa: F401
 from .scheduler import Admission, Request, Scheduler  # noqa: F401
 from .server import ServingLoop, detokenize, stream_request  # noqa: F401
+from .speculate import (  # noqa: F401
+    NgramProposer, accept_length, speculation_k)
 from .telemetry import (  # noqa: F401
     MetricsRegistry, Tracer, percentile, shared_metrics, validate_trace)

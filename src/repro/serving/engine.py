@@ -84,13 +84,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig, ServeConfig
-from ..models.attn_backend import decode_meta, prefill_meta, resolve_backend
+from ..models.attn_backend import (
+    decode_meta, prefill_meta, resolve_backend, verify_meta)
 from ..models.params import init_tree
 from ..models.registry import build_model, init_cache, init_params
 from ..models.steps import make_serve_step
 from .kv_pool import NULL_PAGE, PagedKVPool, StateSlotPool
 from .radix_cache import RadixCache
 from .scheduler import Admission, Request, Scheduler
+from .speculate import NgramProposer, accept_length, speculation_k
 from .telemetry import MetricsRegistry, Tracer, shared_metrics
 
 
@@ -125,7 +127,7 @@ class _Pending:
     """One dispatched-but-not-collected engine step: the device is (or may
     be) still computing ``out_dev``; ``finish`` blocks on it and runs the
     host-side bookkeeping."""
-    kind: str                         # prefill | prefill_chunk | restore | decode
+    kind: str       # prefill | prefill_chunk | restore | decode | verify
     payload: Any                      # scheduler action payload
     rows: Any                         # prefill row tuples / decode active list
     out_dev: Any                      # device logits / next-token array
@@ -138,11 +140,13 @@ class _Pending:
 class _StagedDecode:
     """A pre-built host plan for the *next* decode step, computed while the
     current step runs on device.  ``fp`` is the exact post-step fingerprint
-    (slot, rid, pos, owned pages) the plan assumed; dispatch uses the plan
-    only when reality still matches, so a used plan is bit-identical to a
-    replan."""
+    (slot, rid, pos, owned pages, draft len) the plan assumed; dispatch uses
+    the plan only when reality still matches, so a used plan is bit-identical
+    to a replan.  Only plain decode steps stage (a verify step's draft is
+    unknowable a step ahead), so the staged draft length is always 0 — the
+    field keeps the fingerprint honest if that ever changes."""
     active: Tuple[int, ...]
-    fp: Tuple[Tuple[int, int, int, int], ...]
+    fp: Tuple[Tuple[int, int, int, int, int], ...]
     meta: Dict[str, Any]              # decode_meta, already device-resident
 
 
@@ -153,15 +157,18 @@ def _copy_page_fn(kv, src, dst):
 
 @functools.lru_cache(maxsize=None)
 def _paged_steps(cfg: ArchConfig, mesh=None, attn_backend: str = "reference"):
-    """Jitted (prefill_paged, decode_paged, copy_page) steps, cached per
-    (config, attention backend) so every Engine instance reuses
+    """Jitted (prefill_paged, decode_paged, verify_paged, copy_page) steps,
+    cached per (config, attention backend) so every Engine instance reuses
     compilations.  The kv and state pool arguments are donated; callers
-    always rebind them."""
+    always rebind them.  The verify step is built lazily on first use so
+    non-speculative engines never trace it."""
     return (jax.jit(make_serve_step(cfg, mesh, "prefill_paged", attn_backend),
                     donate_argnums=(1, 2)),
             jax.jit(make_serve_step(cfg, mesh, "prefill_paged_cont",
                                     attn_backend), donate_argnums=(1, 2)),
             jax.jit(make_serve_step(cfg, mesh, "decode_paged", attn_backend),
+                    donate_argnums=(1, 2)),
+            jax.jit(make_serve_step(cfg, mesh, "verify_paged", attn_backend),
                     donate_argnums=(1, 2)),
             jax.jit(_copy_page_fn, donate_argnums=(0,)))
 
@@ -224,8 +231,12 @@ class Engine:
                                metrics=self.metrics, tracer=self.tracer)
         self._next_rid = 0
         self.attn_backend = resolve_backend(self.scfg.attn_backend)
-        self._prefill, self._prefill_cont, self._decode, self._copy = \
-            _paged_steps(cfg, mesh, self.attn_backend)
+        (self._prefill, self._prefill_cont, self._decode, self._verify,
+         self._copy) = _paged_steps(cfg, mesh, self.attn_backend)
+        # speculative decoding: draft length after the family gate (paged
+        # non-enc-dec only) and the weight-free prompt-lookup proposer
+        self.spec_k = speculation_k(cfg, self.spec, self.scfg)
+        self.proposer = NgramProposer(self.spec_k) if self.spec_k else None
         # engine step counters (previously ad-hoc instance fields)
         self._m_prefill_steps = self.metrics.counter(
             "engine.prefill_steps", "prefill calls (admissions + chunks)")
@@ -246,6 +257,18 @@ class Engine:
             "engine.prefill_actual_tokens", "real prompt tokens prefilled")
         self._h_decode_step = self.metrics.histogram(
             "engine.decode_step_s", "fixed-shape decode step wall time")
+        # speculative-decoding accounting: drafts proposed vs accepted, plus
+        # the per-step acceptance-rate distribution (accepted / proposed for
+        # each slot-step with a non-empty draft)
+        self._m_spec_proposed = self.metrics.counter(
+            "engine.spec_proposed", "draft tokens proposed by the n-gram "
+            "speculator")
+        self._m_spec_accepted = self.metrics.counter(
+            "engine.spec_accepted", "draft tokens accepted by the verify "
+            "step (emitted without their own decode launch)")
+        self._h_accept = self.metrics.histogram(
+            "engine.spec_accept_rate", "per slot-step draft acceptance rate "
+            "(accepted / proposed, non-empty drafts only)")
         # decode-stall bookkeeping: wall time decode-ready slots spend parked
         # behind non-decode steps (the head-of-line cost chunking bounds)
         self._h_stall = self.metrics.histogram(
@@ -441,6 +464,13 @@ class Engine:
         metrics["state_restores"] = self._m_restores.value
         # decode hot-loop visibility: which attention backend served this run
         metrics["attn_backend"] = self.attn_backend
+        if self.spec_k:
+            metrics["spec_tokens"] = self.spec_k
+            metrics["spec_proposed"] = self._m_spec_proposed.value
+            metrics["spec_accepted"] = self._m_spec_accepted.value
+            metrics["spec_accept_rate"] = (
+                self._m_spec_accepted.value
+                / max(self._m_spec_proposed.value, 1))
         if self.radix is not None:
             metrics["cache_pages"] = len(self.radix.cached_pages)
             metrics["cache_evictions"] = self.radix.evictions
@@ -483,6 +513,11 @@ class Engine:
         elif kind == "restore":
             self._run_restore(payload, t0)
             rows, out = None, None
+        elif self.spec_k:
+            # speculation on: every decode-ready step runs as a small-q
+            # verify step (with an empty draft it degenerates to decode)
+            kind = "verify"
+            rows, out = payload, self._launch_verify(payload)
         else:
             rows, out = payload, self._launch_decode(payload)
         return _Pending(kind=kind, payload=payload, rows=rows, out_dev=out,
@@ -495,6 +530,8 @@ class Engine:
         t_c0 = time.perf_counter()
         if pending.kind == "decode":
             self._collect_decode(pending)
+        elif pending.kind == "verify":
+            self._collect_verify(pending)
         elif pending.kind in ("prefill", "prefill_chunk"):
             self._collect_prefill(pending)
         t1 = time.perf_counter()
@@ -503,7 +540,8 @@ class Engine:
                               decode_waiting=pending.waiting)
         if overlap:
             self.tracer.host_span("collect", t_c0, t1, kind=pending.kind)
-        if pending.kind == "decode":
+        if pending.kind in ("decode", "verify"):
+            # verify steps *serve* decode-ready slots: both flush the stall
             self._h_stall.observe(self._stall_accum)
             self._stall_accum = 0.0
         elif pending.waiting:
@@ -536,7 +574,7 @@ class Engine:
             active=tuple(active),
             fp=tuple((i, self.sched.slots[i].req.rid,
                       self.sched.slots[i].pos + 1,
-                      len(self.sched.slots[i].pages)) for i in active),
+                      len(self.sched.slots[i].pages), 0) for i in active),
             meta=self._decode_plan(active, pos_offset=1))
         self._m_overlap_staged.inc()
         return True
@@ -732,7 +770,7 @@ class Engine:
             st, self._staged = self._staged, None
             fp = tuple(
                 (i, self.sched.slots[i].req.rid, self.sched.slots[i].pos,
-                 len(self.sched.slots[i].pages)) for i in active)
+                 len(self.sched.slots[i].pages), 0) for i in active)
             if tuple(active) == st.active and fp == st.fp:
                 meta = st.meta
                 self._m_overlap_used.inc()
@@ -765,6 +803,103 @@ class Engine:
                 self.on_token(slot.req.rid, len(slot.req.generated) - 1,
                               tok, now)
             self._maybe_retire(i, now)
+
+    # ------------------------------------------------------------- speculate
+
+    def _verify_plan(self, active: List[int],
+                     drafts: Dict[int, List[int]]) -> Dict[str, Any]:
+        """Fixed-shape verify-step metadata: like ``_decode_plan`` but with
+        per-row live query counts (1 + draft length) and per-query write
+        targets for all Q = spec_k + 1 positions.  Idle rows keep pos=0,
+        n_q=1 and a NULL_PAGE table, so their single query writes to the
+        reserved sink page exactly as an idle decode row does."""
+        B = self.scfg.max_slots
+        Q = self.spec_k + 1
+        maxp = max(self.pool.table_width, 1)
+        pos = np.zeros((B,), np.int32)
+        n_q = np.ones((B,), np.int32)
+        tables = np.full((B, maxp), NULL_PAGE, np.int32)
+        for i in active:
+            slot = self.sched.slots[i]
+            pos[i] = slot.pos
+            n_q[i] = 1 + len(drafts[i])
+            tables[i] = slot.table
+        return {k: jnp.asarray(v) for k, v in verify_meta(
+            self.cfg, self.scfg.page_size, tables, pos, n_q, Q).items()}
+
+    def _launch_verify(self, active: List[int]):
+        """Launch one fixed-shape speculative verify step: draft up to
+        ``spec_k`` tokens per row from the request's own history (prompt +
+        generation), then run draft + carried token through the small-q
+        verify step in one device call.  Rows whose proposer finds nothing
+        run with an empty draft — the step degenerates to a decode step for
+        them.  Drafts are clamped so the furthest K/V write (pos + draft
+        len) stays inside both the token budget and the page horizon.
+        Returns (device [B, Q] next-token array, launch time, drafts)."""
+        B = self.scfg.max_slots
+        Q = self.spec_k + 1
+        tokens = np.zeros((B, Q), np.int32)
+        drafts: Dict[int, List[int]] = {}
+        prefix = self.pool.spec.prefix_tokens
+        for i in active:
+            req = self.sched.slots[i].req
+            # a draft token beyond the remaining budget could never be
+            # emitted (the bonus token fills the last budget slot), and its
+            # K/V write must stay under the max_len page horizon
+            kmax = min(self.spec_k,
+                       req.max_new - len(req.generated) - 1,
+                       prefix + self.scfg.max_len - 1
+                       - self.sched.slots[i].pos)
+            draft = self.proposer.propose(
+                req.prompt + req.generated)[:max(kmax, 0)]
+            drafts[i] = draft
+            tokens[i, 0] = req.generated[-1]
+            tokens[i, 1:1 + len(draft)] = draft
+            if draft:
+                self._m_spec_proposed.inc(len(draft))
+        meta = self._verify_plan(active, drafts)
+        state = self.states.state if self.states is not None else {}
+        t_launch = time.perf_counter()
+        with self.tracer.annotate("verify_step"):
+            nxt, self.pool.kv, state = self._verify(
+                self.params, self.pool.kv, state, meta, jnp.asarray(tokens))
+        if self.states is not None:
+            self.states.state = state
+        return nxt, t_launch, drafts
+
+    def _collect_verify(self, pending: _Pending) -> None:
+        """Collect half of a verify step: block on the [B, Q] greedy tokens,
+        accept each row's longest draft prefix the argmax reproduced, and
+        emit accepted + bonus tokens — the identical stream a sequence of
+        one-token decode steps would have produced.  EOS or budget reached
+        mid-emit stops the emission there (trailing accepted tokens are
+        discarded exactly as decode would never have produced them)."""
+        nxt_dev, t_launch, drafts = pending.out_dev
+        nxt = np.asarray(nxt_dev)                # blocks: device step done
+        now = time.perf_counter()
+        self._h_decode_step.observe(now - t_launch)
+        for i in pending.rows:
+            slot = self.sched.slots[i]
+            req = slot.req
+            draft = drafts[i]
+            a = accept_length(draft, nxt[i, :len(draft)]) if draft else 0
+            if draft:
+                self._m_spec_accepted.inc(a)
+                self._h_accept.observe(a / len(draft))
+            for j in range(a + 1):
+                tok = int(nxt[i, j])
+                slot.pos += 1
+                req.generated.append(tok)
+                if self.on_token is not None:
+                    self.on_token(req.rid, len(req.generated) - 1, tok, now)
+                done = len(req.generated) >= req.max_new
+                if self.scfg.eos_id >= 0 and tok == self.scfg.eos_id:
+                    done = True
+                if done:
+                    req.t_finish = now
+                    self.sched.retire(i)
+                    self.tracer.on_finished(req.rid, now, len(req.generated))
+                    break
 
     def _maybe_retire(self, slot_idx: int, now: float) -> None:
         req = self.sched.slots[slot_idx].req

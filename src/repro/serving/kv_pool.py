@@ -75,6 +75,14 @@ class PagedKVPool:
         ps = scfg.page_size
         self.horizon_pages: Optional[int] = (
             window_pages(self.spec.window, ps) if self.spec.window else None)
+        if self.horizon_pages is not None and scfg.speculate_tokens:
+            # speculative verify writes up to K draft tokens past pos before
+            # accept/rollback; one slack page keeps a rejected draft's write
+            # from recycling a slot that is still inside the window after
+            # rollback (safe because K < page_size, asserted by ServeConfig —
+            # the recycled slot's recovered position is already out of window
+            # for every post-rollback query)
+            self.horizon_pages += 1
         # widest table any request can need: full prompt+generation (plus the
         # vlm image prefix), capped at the ring horizon for windowed families
         raw = -(-(self.spec.prefix_tokens + scfg.max_len) // ps)

@@ -60,6 +60,7 @@ import numpy as np
 from ..configs.base import ServeConfig
 from .kv_pool import PagedKVPool, StateSlotPool
 from .radix_cache import RadixCache, RadixNode
+from .speculate import speculation_k
 from .telemetry import MetricsRegistry, Tracer
 
 
@@ -162,6 +163,10 @@ class Scheduler:
         self.chunk: int = (scfg.chunk_tokens
                            if pool.spec.paged and not pool.spec.prefix_tokens
                            else 0)
+        # speculative decoding widens the per-step write horizon: a verify
+        # step may write K/V at positions pos .. pos + spec_k, so page
+        # growth must cover the whole span (same gate as the engine)
+        self.spec_k = speculation_k(pool.cfg, pool.spec, scfg)
         self._last_was_prefill = False
 
     # ------------------------------------------------------------- inventory
@@ -489,10 +494,14 @@ class Scheduler:
 
     def _grow_pages(self) -> None:
         """Before a decode step, every live slot must own the page its next
-        write lands in.  Ring-horizon slots recycle in place (their next
-        table entry already points at the page that aged out of the window).
-        When the pool runs dry, LRU-evict unlocked cache nodes first, then
-        preempt youngest-first."""
+        write lands in — and with speculation on, every page any of the up
+        to ``spec_k + 1`` verify-step writes (positions pos .. pos + spec_k)
+        lands in, since an accepted draft advances the cursor several
+        positions in one step (it may cross a page boundary mid-step).
+        Ring-horizon slots recycle in place (their next table entry already
+        points at the page that aged out of the window).  When the pool runs
+        dry, LRU-evict unlocked cache nodes first, then preempt
+        youngest-first."""
         if not self.pool.spec.paged:
             return                         # state-slot families never grow
         ps = self.scfg.page_size
@@ -505,16 +514,17 @@ class Scheduler:
             if slot.prefilling:
                 continue                   # all prompt pages bound at admission;
                                            # the decode page can wait its turn
-            if len(slot.pages) >= cap:
-                continue                   # ring horizon: recycle in place
-            if slot.pos % ps != 0 or slot.pos // ps < len(slot.pages):
-                continue                   # current page still has room
-            while True:
+            # last page index this step's writes can reach; past the ring
+            # horizon the table entries recycle in place instead of growing
+            need_to = min((slot.pos + self.spec_k) // ps, cap - 1)
+            while len(slot.pages) <= need_to:
+                if self.slots[i] is not slot:
+                    break                  # preemption below evicted *us*
                 pages = self.pool.alloc(1)
                 if pages is not None:
                     slot.table[len(slot.pages)] = pages[0]
                     slot.pages.extend(pages)
-                    break
+                    continue
                 if self.radix is not None and self.radix.make_room(1):
                     continue                   # eviction freed a page
                 victims = [j for j in self.active_slots() if j != i]
