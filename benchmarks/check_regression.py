@@ -12,6 +12,10 @@ poison the baseline) and exits nonzero when the newest run regressed:
   dropped more than 20% — gated only when the newest entry *and* every
   prior in the group carry the key, so histories that predate the Poisson
   section never fail on it, or
+* ``overload_goodput_tokens_per_s`` (the 1.5x-overload section with
+  admission control on) dropped more than 20% — same whole-group rule; a
+  drop means the engine got slower under pressure or the admission
+  estimator started shedding servable work, or
 * ``kv_bytes_per_token`` rose more than 15% — same whole-group-carries-it
   rule.  Bytes/token is a *pool layout* property, so any rise means someone
   fattened the page format (e.g. widened the int8 scale dtype) and the
@@ -125,6 +129,30 @@ def check(entries: List[Dict[str, Any]], max_tok_drop: float,
                     f"{(1 - good_now / good_base) * 100:.1f}% below the "
                     f"median-of-priors {good_base:.1f} "
                     f"(threshold {max_goodput_drop * 100:.0f}%)")
+        # Goodput under 1.5x overload with admission control on: same
+        # whole-group-carries-it rule (entries from before the overload
+        # section lack it).  A drop means either the engine got slower
+        # under pressure or the admission estimator started shedding work
+        # it could have served.
+        ovl_key = "overload_goodput_tokens_per_s"
+        if ovl_key in newest and all(ovl_key in p for p in priors):
+            ovl_base = _median([p[ovl_key] for p in priors])
+            ovl_now = newest[ovl_key]
+            row["overload_goodput"] = {
+                "baseline": ovl_base, "newest": ovl_now,
+                "ratio": ovl_now / max(ovl_base, 1e-12)}
+            if ovl_now < ovl_base * (1.0 - max_goodput_drop):
+                row["problems"].append(
+                    f"overload_goodput_tokens_per_s {ovl_now:.1f} is "
+                    f"{(1 - ovl_now / ovl_base) * 100:.1f}% below the "
+                    f"median-of-priors {ovl_base:.1f} "
+                    f"(threshold {max_goodput_drop * 100:.0f}%)")
+        if newest.get("overload_accounting_ok") is False:
+            row["problems"].append(
+                "newest run reports overload_accounting_ok=false — a "
+                "submission ended in neither finished/shed/"
+                "deadline_exceeded, or a shed lacked a backoff hint "
+                "(fault-tolerance contract, not perf)")
         # KV bytes/token (pool page layout): only gate when the whole group
         # carries the key (entries from before the quantized-KV mode lack it)
         kb_key = "kv_bytes_per_token"
@@ -205,6 +233,11 @@ def main(argv=None) -> int:
         if "poisson_goodput" in r:
             g = r["poisson_goodput"]
             print(f"    poisson goodput tok/s: {g['newest']:.1f} vs "
+                  f"median-of-priors {g['baseline']:.1f} "
+                  f"(ratio {g['ratio']:.2f})")
+        if "overload_goodput" in r:
+            g = r["overload_goodput"]
+            print(f"    overload goodput tok/s: {g['newest']:.1f} vs "
                   f"median-of-priors {g['baseline']:.1f} "
                   f"(ratio {g['ratio']:.2f})")
         if "kv_bytes_per_token" in r:

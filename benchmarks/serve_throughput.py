@@ -318,6 +318,149 @@ def poisson_openloop(arch: str = "qwen2-0.5b", requests: int = 16,
     return out
 
 
+def overload(arch: str = "qwen2-0.5b", requests: int = 16,
+             slots: int = 4, gen: int = 8, prompt_lo: int = 4,
+             prompt_hi: int = 24, rate_scale: float = 1.5,
+             deadline_scale: float = 3.0, seed: int = 0,
+             attn_backend: str = "auto"):
+    """Overload section: deadline goodput at 1.5x the calibrated rate,
+    with vs without admission control.
+
+    The open-loop Poisson workload is offered at ``rate_scale`` x the warm
+    closed-loop request rate — past saturation, so a queue *must* build —
+    with per-request total deadlines at ``deadline_scale`` x the warm p50
+    latency.  Served twice with identical arrivals:
+
+    * **admission off**: every request is accepted; late ones burn slots
+      and pages producing tokens that count for nothing;
+    * **admission on** (``ServeConfig.admission_control``): requests whose
+      calibrated queue-wait estimate blows the deadline are shed at the
+      door with a ``retry_after_s`` backoff hint, and expired requests are
+      evicted mid-flight.
+
+    Reports **goodput** (tokens from deadline-meeting requests per second),
+    shed rate, deadline attainment, and the terminal accounting the
+    fault-tolerance contract requires: every submission ends in
+    ``finished`` / ``shed`` / ``deadline_exceeded`` (``unaccounted`` must
+    be 0).  ``overload_goodput_tokens_per_s`` (admission on) lands in the
+    history; `check_regression` gates a >20% drop."""
+    import asyncio
+    import dataclasses as _dc
+
+    from repro.configs import ServeConfig, get_arch, reduced
+    from repro.serving import Engine, ServingLoop
+
+    cfg = _dc.replace(reduced(get_arch(arch)), remat="none")
+    rng = np.random.RandomState(seed)
+    ps = 16
+    max_len = ((prompt_hi + gen + ps - 1) // ps) * ps
+    base = ServeConfig(page_size=ps, max_slots=slots, max_len=max_len,
+                       attn_backend=attn_backend)
+    prompts = [rng.randint(1, cfg.vocab, size=int(
+        rng.randint(prompt_lo, prompt_hi + 1))).tolist()
+        for _ in range(requests)]
+    budgets = [gen] * requests
+
+    # warm the jit shapes and calibrate: deadlines and the offered rate are
+    # machine-relative, absolute numbers would be meaningless on CI
+    warm_eng = Engine(cfg, base, seed=seed)
+    params = warm_eng.params
+    _, warm = warm_eng.run_offline(prompts, budgets)
+    deadline_s = deadline_scale * max(warm["latency_p50_s"], 1e-3)
+    offered_rate = rate_scale * max(warm["requests_per_s"], 1e-9)
+    arrivals = np.cumsum(rng.exponential(1.0 / offered_rate, size=requests))
+
+    def serve_once(admission: bool):
+        scfg = dataclasses.replace(base, admission_control=admission)
+        eng = Engine(cfg, scfg, params)
+        serving = ServingLoop(eng, overlap=True)
+
+        async def client(i: int, t0: float):
+            delay = t0 + arrivals[i] - time.perf_counter()
+            if delay > 0:
+                await asyncio.sleep(delay)
+            t_submit = time.perf_counter()
+            rid, q = serving.submit(prompts[i], budgets[i],
+                                    deadline_s=deadline_s)
+            toks = []
+            while True:
+                ev = await q.get()
+                if ev["type"] == "token":
+                    toks.append(ev["token"])
+                    continue
+                serving.forget(rid)
+                err = ev.get("error", "") if ev["type"] == "error" else ""
+                if ev["type"] == "done":
+                    terminal = "finished"
+                elif "shed" in err:
+                    terminal = "shed"
+                elif "deadline_exceeded" in err:
+                    terminal = "deadline_exceeded"
+                else:
+                    terminal = f"other:{err}"
+                return {"i": i, "tokens": toks, "terminal": terminal,
+                        "retry_after_s": float(ev.get("retry_after_s", 0.0)),
+                        "latency_s": time.perf_counter() - t_submit}
+
+        async def drive():
+            await serving.start()
+            t0 = time.perf_counter()
+            rows = await asyncio.gather(*[client(i, t0)
+                                          for i in range(requests)])
+            wall = time.perf_counter() - t0
+            await serving.stop()
+            return rows, wall
+
+        rows, wall = asyncio.run(drive())
+        met = [r for r in rows
+               if r["terminal"] == "finished" and r["latency_s"] <= deadline_s]
+        sheds = [r for r in rows if r["terminal"] == "shed"]
+        evicted = [r for r in rows if r["terminal"] == "deadline_exceeded"]
+        finished = [r for r in rows if r["terminal"] == "finished"]
+        unaccounted = requests - len(finished) - len(sheds) - len(evicted)
+        return {
+            "wall_s": wall,
+            "tokens_per_s": sum(len(r["tokens"]) for r in rows)
+            / max(wall, 1e-9),
+            "goodput_tokens_per_s": sum(len(r["tokens"]) for r in met)
+            / max(wall, 1e-9),
+            "deadline_attainment": len(met) / max(requests, 1),
+            "shed_rate": len(sheds) / max(requests, 1),
+            "evicted_rate": len(evicted) / max(requests, 1),
+            "unaccounted": unaccounted,
+            "sheds_with_backoff_hint": sum(
+                r["retry_after_s"] > 0 for r in sheds),
+            "deadline_evictions": eng.metrics.value(
+                "engine.deadline_evictions"),
+            "shed_total": len(sheds),
+        }
+
+    out = {
+        "arch": cfg.name,
+        "requests": requests,
+        "offered_rate_req_s": float(offered_rate),
+        "deadline_s": float(deadline_s),
+        "without_admission": serve_once(False),
+        "with_admission": serve_once(True),
+    }
+    w, wo = out["with_admission"], out["without_admission"]
+    out["goodput_ratio"] = (w["goodput_tokens_per_s"]
+                            / max(wo["goodput_tokens_per_s"], 1e-9))
+    out["terminal_accounting_ok"] = (
+        w["unaccounted"] == 0 and wo["unaccounted"] == 0
+        and w["sheds_with_backoff_hint"] == w["shed_total"])
+    print(f"serve_throughput,overload,rate={offered_rate:.2f}req/s,"
+          f"deadline_ms={deadline_s*1e3:.0f},"
+          f"goodput_tok_s={wo['goodput_tokens_per_s']:.1f}"
+          f"->{w['goodput_tokens_per_s']:.1f}"
+          f" (x{out['goodput_ratio']:.2f}),"
+          f"shed_rate={w['shed_rate']:.2f},"
+          f"attainment={wo['deadline_attainment']:.2f}"
+          f"->{w['deadline_attainment']:.2f},"
+          f"accounting_ok={out['terminal_accounting_ok']}")
+    return out
+
+
 def quantization(arch: str = "qwen2-0.5b", requests: int = 8,
                  slots: int = 4, gen: int = 8, prompt_lo: int = 8,
                  prompt_hi: int = 24, pool_budget_mib: float = 64.0,
@@ -690,6 +833,9 @@ def run(arch: str = "qwen2-0.5b", requests: int = 16, slots: int = 4,
         "poisson_openloop": poisson_openloop(
             arch=arch, requests=requests, slots=slots, seed=seed,
             attn_backend=attn_backend),
+        "overload": overload(
+            arch=arch, requests=requests, slots=slots, seed=seed,
+            attn_backend=attn_backend),
         "quantization": quantization(
             arch=arch, slots=slots, seed=seed, attn_backend=attn_backend),
         # speculation keeps its own single-stream defaults (see docstring):
@@ -706,6 +852,7 @@ def run(arch: str = "qwen2-0.5b", requests: int = 16, slots: int = 4,
     # regressions show as a series instead of a silent overwrite
     adv = payload["chunked_prefill"]
     poi = payload["poisson_openloop"]
+    ovl = payload["overload"]
     quant = payload["quantization"]
     spec = payload["speculation"]
     with open(os.path.join(os.path.dirname(path), "BENCH_history.jsonl"),
@@ -733,6 +880,12 @@ def run(arch: str = "qwen2-0.5b", requests: int = 16, slots: int = 4,
             "poisson_goodput_tokens_per_s": poi["goodput_tokens_per_s"],
             "poisson_slo_attainment": poi["slo_attainment"],
             "poisson_ttft_p95_s": poi["ttft_p95_s"],
+            "overload_goodput_tokens_per_s":
+                ovl["with_admission"]["goodput_tokens_per_s"],
+            "overload_shed_rate": ovl["with_admission"]["shed_rate"],
+            "overload_deadline_attainment":
+                ovl["with_admission"]["deadline_attainment"],
+            "overload_accounting_ok": ovl["terminal_accounting_ok"],
             **({"kv_bytes_per_token":
                 quant["bf16"]["kv_bytes_per_token"]}
                if "bf16" in quant else {}),

@@ -242,6 +242,13 @@ class ServeConfig:
                                  # in one fixed-shape launch; accepted tokens
                                  # stay token-exact vs the non-speculative
                                  # greedy stream (serving/speculate)
+    admission_control: bool = False  # deadline-aware shedding + mid-flight
+                                 # deadline eviction (serving/admission).  Off:
+                                 # deadlines attached to requests are inert
+                                 # metadata, nothing is shed or evicted
+    default_deadline_s: float = 0.0   # default total deadline applied to
+                                 # requests that don't carry one (0 = none)
+    default_ttft_deadline_s: float = 0.0  # default TTFT deadline (0 = none)
 
     def __post_init__(self):
         assert self.page_size > 0 and self.max_slots > 0
@@ -254,6 +261,8 @@ class ServeConfig:
         assert self.kv_dtype in ("bf16", "int8"), self.kv_dtype
         assert 0 <= self.speculate_tokens < self.page_size, \
             "speculate_tokens must fit inside one page (windowed-ring slack)"
+        assert self.default_deadline_s >= 0, self.default_deadline_s
+        assert self.default_ttft_deadline_s >= 0, self.default_ttft_deadline_s
 
     @property
     def chunk_tokens(self) -> int:

@@ -16,6 +16,18 @@
 ``--verify`` additionally replays every request through the static
 single-request baseline and checks the greedy tokens agree per request.
 
+Chaos mode (``--inject``) runs the same workload under a deterministic
+fault plan (see ``serving.faults``) and — with ``--verify`` — checks the
+**exact-survivor contract**: every non-targeted request's tokens are
+byte-identical to the fault-free static baseline, targeted requests fail
+terminally with the expected error (their partial tokens a strict prefix
+of the baseline), every planned fault actually fired, and the page pool
+balances after drain::
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
+      --requests 6 --mixed --gen 8 --verify \
+      --inject "nan_logits:rid=2,at=3;pool_pressure:at=2,pages=8,steps=3"
+
 Observability (continuous engine only)::
 
   # Chrome-trace JSON for Perfetto + full metrics-registry snapshot
@@ -133,6 +145,13 @@ def main(argv=None):
                     help="wrap jitted prefill/decode steps in jax.profiler "
                          "TraceAnnotations (visible when a jax profiler "
                          "trace is also being captured)")
+    ap.add_argument("--inject", metavar="SPEC", default="",
+                    help="deterministic fault plan, e.g. "
+                         "'nan_logits:rid=2,at=3;step_error:rid=0,at=2'; "
+                         "kinds: nan_logits, step_error, pool_pressure, "
+                         "client_disconnect, detok_stall (continuous engine "
+                         "only; combine with --verify for the exact-survivor "
+                         "chaos check)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -175,11 +194,18 @@ def main(argv=None):
     if engine == "static" and args.speculate_tokens:
         print("[serve] WARNING: --speculate-tokens only applies to the "
               "continuous engine; the static path decodes one token a step")
+    plan = None
+    if args.inject:
+        if engine != "continuous":
+            raise SystemExit("[serve] --inject requires the continuous "
+                             "engine (faults target its seams)")
+        from ..serving import FaultPlan
+        plan = FaultPlan.parse(args.inject, seed=args.seed)
     eng = None
     if engine == "continuous":
         tracer = Tracer(jax_annotations=args.jax_annotations)
         eng = Engine(cfg, scfg, seed=args.seed,   # init_params inside
-                     tracer=tracer)
+                     tracer=tracer, faults=plan)
         params = eng.params
         results, metrics = eng.run_offline(prompts, budgets,
                                            overlap=args.overlap)
@@ -246,6 +272,56 @@ def main(argv=None):
         with open(args.metrics_json, "w") as f:
             json.dump(out, f, indent=2, sort_keys=True)
         print(f"[serve] metrics -> {args.metrics_json}")
+
+    if plan is not None:
+        fired = [f.describe() for f in plan.faults if f.fired]
+        print(f"[serve] chaos: {len(fired)}/{len(plan.faults)} planned "
+              f"faults fired; quarantined="
+              f"{eng.metrics.value('engine.quarantined')} cancelled="
+              f"{eng.metrics.value('engine.cancelled')} pages_scrubbed="
+              f"{eng.metrics.value('pool.pages_scrubbed')}")
+
+    if args.verify and plan is not None:
+        if args.kv_dtype == "int8":
+            raise SystemExit("[serve] --inject --verify needs the token-"
+                             "exact bf16 path; int8 verify is a bounded-"
+                             "error gate")
+        expected = {}      # rid -> substring expected in the terminal error
+        for f in plan.faults:
+            if f.kind in ("nan_logits", "step_error") and f.rid >= 0:
+                expected[f.rid] = f.kind
+            elif f.kind == "client_disconnect" and f.rid >= 0:
+                expected[f.rid] = "cancelled"
+        ref, _ = generate_static(cfg, params, prompts, budgets, scfg,
+                                 batch_size=1, seed=args.seed)
+        bad = []
+        for why in plan.unfired():     # already human-readable descriptions
+            bad.append(f"planned fault never fired: {why}")
+        for i, res in enumerate(results):
+            if i in expected:
+                if not res.failed or expected[i] not in (res.error or ""):
+                    bad.append(f"request {i}: expected terminal "
+                               f"{expected[i]!r}, got error={res.error!r}")
+                elif res.tokens != ref[i][:len(res.tokens)]:
+                    bad.append(f"request {i}: partial tokens are not a "
+                               f"prefix of the clean baseline")
+            elif res.failed:
+                bad.append(f"request {i}: survivor failed: {res.error!r}")
+            elif res.tokens != ref[i]:
+                bad.append(f"request {i}: survivor tokens diverge from the "
+                           f"fault-free baseline")
+        if not eng.pool.conservation_ok():
+            bad.append("page-pool conservation violated after drain")
+        if bad:
+            for why in bad:
+                print(f"[serve] CHAOS VERIFY FAILED: {why}")
+            raise SystemExit(f"[serve] CHAOS VERIFY FAILED "
+                             f"({len(bad)} violations)")
+        n_surv = len(results) - len(expected)
+        print(f"[serve] chaos verify OK: {n_surv} survivors byte-identical "
+              f"to the fault-free baseline, {len(expected)} targeted "
+              f"requests quarantined with clean terminals, pool conserved")
+        return tokens
 
     if args.verify and args.kv_dtype == "int8" and engine == "continuous":
         # quantized pages are not token-exact vs the bf16 static baseline;

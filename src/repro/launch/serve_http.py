@@ -19,7 +19,19 @@ API (deliberately tiny, stdlib-only on both ends):
   pages free at the next engine iteration.
 * ``GET /metrics`` — full metrics-registry snapshot as JSON (every serving
   layer: pool, radix cache, scheduler, engine, overlap counters).
-* ``GET /health`` — liveness + live-slot/queue-depth gauges.
+* ``GET /health`` — the real health state machine (``starting → healthy →
+  degraded/draining → drained`` with transition history) plus live-slot and
+  queue-depth gauges.  Load balancers key off ``state``.
+* ``POST /drain`` — begin a graceful drain: new work is shed with a 503,
+  in-flight requests run to completion, ``/health`` reports ``drained``
+  once the engine is idle.
+
+Overload behaviour (``--admission-control``): requests may carry
+``deadline_s`` / ``ttft_deadline_s``; when the predicted queue wait blows
+the deadline (or the server is draining) the request is refused **before**
+its SSE stream opens — 503 with a JSON body ``{"error": "overloaded",
+"reason": ..., "retry_after_s": ...}`` and a ``Retry-After`` header whose
+value is a jittered backoff hint (so a retrying fleet decorrelates).
 
 The HTTP layer is hand-rolled over ``asyncio.start_server`` (request line +
 headers + Content-Length body; no chunked uploads, no keep-alive) so the
@@ -44,10 +56,12 @@ from ..serving import Engine, ServingLoop, Tracer, generate_static
 MAX_BODY = 1 << 20      # 1 MiB request-body cap
 
 
-def _json_response(payload: Any, status: str = "200 OK") -> bytes:
+def _json_response(payload: Any, status: str = "200 OK",
+                   headers: Optional[Dict[str, str]] = None) -> bytes:
     body = json.dumps(payload).encode()
+    extra = "".join(f"{k}: {v}\r\n" for k, v in (headers or {}).items())
     return (f"HTTP/1.1 {status}\r\nContent-Type: application/json\r\n"
-            f"Content-Length: {len(body)}\r\nConnection: close\r\n\r\n"
+            f"Content-Length: {len(body)}\r\n{extra}Connection: close\r\n\r\n"
             ).encode() + body
 
 
@@ -99,10 +113,15 @@ class HttpFrontend:
                     self.serving.engine.metrics_snapshot()))
             elif method == "GET" and path == "/health":
                 m = self.serving.engine.metrics
-                writer.write(_json_response({
-                    "ok": True,
-                    "slots_live": m.value("sched.slots_live"),
-                    "queue_depth": m.value("sched.queue_depth")}))
+                payload = self.serving.engine.health.to_dict()
+                payload.update(
+                    slots_live=m.value("sched.slots_live"),
+                    queue_depth=m.value("sched.queue_depth"))
+                writer.write(_json_response(payload))
+            elif method == "POST" and path == "/drain":
+                self.serving.drain()
+                writer.write(_json_response(
+                    self.serving.engine.health.to_dict()))
             else:
                 writer.write(_json_response({"error": "not found"},
                                             "404 Not Found"))
@@ -123,11 +142,27 @@ class HttpFrontend:
             payload = json.loads(body or b"{}")
             prompt = [int(t) for t in payload["prompt"]]
             max_new = int(payload.get("max_new_tokens", self.default_max_new))
+            deadline_s = payload.get("deadline_s")
+            ttft_deadline_s = payload.get("ttft_deadline_s")
+            deadline_s = float(deadline_s) if deadline_s is not None else None
+            ttft_deadline_s = (float(ttft_deadline_s)
+                               if ttft_deadline_s is not None else None)
         except (KeyError, TypeError, ValueError) as e:
             writer.write(_json_response({"error": f"bad request: {e}"},
                                         "400 Bad Request"))
             return
-        rid, q = self.serving.submit(prompt, max_new)
+        shed = self.serving.admission_check(deadline_s, ttft_deadline_s)
+        if shed is not None:
+            reason, retry_after = shed
+            writer.write(_json_response(
+                {"error": "overloaded", "reason": reason,
+                 "retry_after_s": retry_after},
+                "503 Service Unavailable",
+                headers={"Retry-After": f"{retry_after:.3f}"}))
+            return
+        rid, q = self.serving.submit(prompt, max_new,
+                                     deadline_s=deadline_s,
+                                     ttft_deadline_s=ttft_deadline_s)
         self.n_streams += 1
         writer.write(SSE_HEADER)
         try:
@@ -146,30 +181,71 @@ class HttpFrontend:
 # --------------------------------------------------------------- smoke mode
 
 
-async def _sse_client(host: str, port: int, prompt, max_new: int
-                      ) -> Dict[str, Any]:
-    """Minimal stdlib SSE client: POST /generate, collect every event."""
+async def _sse_client(host: str, port: int, prompt, max_new: int,
+                      deadline_s: Optional[float] = None,
+                      ttft_deadline_s: Optional[float] = None,
+                      disconnect_after: int = 0) -> Dict[str, Any]:
+    """Minimal stdlib SSE client: POST /generate, collect every event.
+
+    Understands the 503 shed path (returns ``status``, ``retry_after`` and
+    the JSON body instead of a stream) and can abandon the connection after
+    ``disconnect_after`` tokens to exercise mid-stream client disconnects.
+    """
     reader, writer = await asyncio.open_connection(host, port)
-    body = json.dumps({"prompt": prompt, "max_new_tokens": max_new}).encode()
+    req: Dict[str, Any] = {"prompt": prompt, "max_new_tokens": max_new}
+    if deadline_s is not None:
+        req["deadline_s"] = deadline_s
+    if ttft_deadline_s is not None:
+        req["ttft_deadline_s"] = ttft_deadline_s
+    body = json.dumps(req).encode()
     writer.write((f"POST /generate HTTP/1.1\r\nHost: {host}\r\n"
                   f"Content-Type: application/json\r\n"
                   f"Content-Length: {len(body)}\r\n\r\n").encode() + body)
     await writer.drain()
-    events = []
     t_submit = time.perf_counter()
+
+    status_line = await reader.readline()
+    status = int(status_line.split()[1]) if status_line else 0
+    retry_after = None
+    n_header_body = 0
+    while True:                          # response headers
+        h = await reader.readline()
+        if h in (b"\r\n", b"\n", b""):
+            break
+        k, _, v = h.decode("latin1").partition(":")
+        k = k.strip().lower()
+        if k == "retry-after":
+            retry_after = float(v.strip())
+        elif k == "content-length":
+            n_header_body = int(v.strip())
+    if status != 200:                    # shed / error: JSON body, no stream
+        raw = await reader.readexactly(n_header_body) if n_header_body else b""
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionResetError, BrokenPipeError):
+            pass
+        return {"status": status, "retry_after": retry_after,
+                "body": json.loads(raw or b"{}"), "events": [],
+                "streamed": [], "final": {"type": "shed"},
+                "client_ttft_s": time.perf_counter() - t_submit}
+
+    events = []
     t_first = None
     while True:
         line = await reader.readline()
         if not line:
             raise RuntimeError("server closed the stream mid-request")
         if not line.startswith(b"data: "):
-            continue                     # headers / keep-alive blank lines
+            continue                     # keep-alive blank lines
         ev = json.loads(line[6:])
         if ev["type"] == "token" and t_first is None:
             t_first = time.perf_counter()
         events.append(ev)
         if ev["type"] in ("done", "error"):
             break
+        if disconnect_after and len(events) >= disconnect_after:
+            break                        # abandon mid-stream (hard close)
     writer.close()
     try:
         await writer.wait_closed()
@@ -177,21 +253,126 @@ async def _sse_client(host: str, port: int, prompt, max_new: int
         pass
     streamed = [e["token"] for e in events if e["type"] == "token"]
     final = events[-1]
-    return {"events": events, "streamed": streamed, "final": final,
+    return {"status": status, "retry_after": retry_after, "events": events,
+            "streamed": streamed, "final": final,
             "client_ttft_s": (t_first or time.perf_counter()) - t_submit}
+
+
+async def _http_json(host: str, port: int, method: str, path: str
+                     ) -> Tuple[int, Dict[str, Any]]:
+    """One non-streaming request (GET /health, POST /drain, ...)."""
+    reader, writer = await asyncio.open_connection(host, port)
+    writer.write((f"{method} {path} HTTP/1.1\r\nHost: {host}\r\n"
+                  f"Content-Length: 0\r\n\r\n").encode())
+    await writer.drain()
+    status_line = await reader.readline()
+    status = int(status_line.split()[1]) if status_line else 0
+    n_body = 0
+    while True:
+        h = await reader.readline()
+        if h in (b"\r\n", b"\n", b""):
+            break
+        k, _, v = h.decode("latin1").partition(":")
+        if k.strip().lower() == "content-length":
+            n_body = int(v.strip())
+    raw = await reader.readexactly(n_body) if n_body else b""
+    writer.close()
+    try:
+        await writer.wait_closed()
+    except (ConnectionResetError, BrokenPipeError):
+        pass
+    return status, json.loads(raw or b"{}")
+
+
+async def _overload_smoke(host: str, port: int, args, cfg,
+                          service_hint_s: float) -> int:
+    """Burst 3N deadline-carrying clients (≈2× what the calibrated slots
+    can absorb) and assert the overload contract: nobody hangs, every
+    client reaches a terminal state, and at least one shed carries a 503
+    with a positive Retry-After backoff hint."""
+    rng = np.random.RandomState(args.seed + 1)
+    n = 3 * args.smoke
+    deadline_s = max(1.2 * service_hint_s, 0.05)
+    prompts = [rng.randint(1, cfg.vocab,
+                           size=int(rng.randint(4, args.prompt_len + 1))
+                           ).tolist() for _ in range(n)]
+    outs = await asyncio.wait_for(
+        asyncio.gather(*[_sse_client(host, port, p, args.gen,
+                                     deadline_s=deadline_s)
+                         for p in prompts]),
+        timeout=120.0)               # the no-hang assertion
+    done = [o for o in outs if o["final"]["type"] == "done"]
+    shed_503 = [o for o in outs if o["status"] == 503]
+    # engine-side sheds / deadline evictions surface as stream errors
+    errs = [o for o in outs if o["final"]["type"] == "error"]
+    bad = []
+    for o in shed_503:
+        if o["retry_after"] is None or o["retry_after"] <= 0:
+            bad.append(f"503 without positive Retry-After: {o['body']}")
+        elif o["body"].get("reason") not in ("overloaded", "draining"):
+            bad.append(f"503 with unexpected reason: {o['body']}")
+    if not shed_503:
+        bad.append(f"2x-overload burst of {n} produced no front-door 503 "
+                   f"(deadline {deadline_s:.3f}s)")
+    if len(done) + len(shed_503) + len(errs) != n:
+        bad.append("some client reached no terminal state")
+    print(f"[serve_http] overload: {n} burst clients, deadline "
+          f"{deadline_s * 1e3:.0f} ms -> {len(done)} served, "
+          f"{len(shed_503)} shed at front door (503), {len(errs)} failed "
+          f"in-engine")
+    for why in bad:
+        print(f"[serve_http] OVERLOAD SMOKE FAILED: {why}", file=sys.stderr)
+    return 1 if bad else 0
+
+
+async def _drain_smoke(host: str, port: int) -> int:
+    """Drive the health machine through a graceful drain over HTTP and
+    assert healthy → draining → drained plus 503s for late arrivals."""
+    bad = []
+    _, health = await _http_json(host, port, "GET", "/health")
+    if health.get("state") != "healthy":
+        bad.append(f"pre-drain state {health.get('state')!r} != 'healthy'")
+    _, health = await _http_json(host, port, "POST", "/drain")
+    if health.get("state") not in ("draining", "drained"):
+        bad.append(f"post-drain state {health.get('state')!r}")
+    late = await _sse_client(host, port, [1, 2, 3], 4)
+    if late["status"] != 503 or late["body"].get("reason") != "draining":
+        bad.append(f"late submit not shed with 503/draining: "
+                   f"status={late['status']} body={late.get('body')}")
+    deadline = time.perf_counter() + 10.0
+    while time.perf_counter() < deadline:
+        _, health = await _http_json(host, port, "GET", "/health")
+        if health.get("state") == "drained":
+            break
+        await asyncio.sleep(0.05)
+    if health.get("state") != "drained":
+        bad.append(f"never reached 'drained' (stuck at {health.get('state')!r})")
+    hist = health.get("history", [])
+    for a, b in (("healthy", "draining"), ("draining", "drained")):
+        if a in hist and b in hist and hist.index(a) < hist.index(b):
+            continue
+        bad.append(f"history missing transition {a} -> {b}: {hist}")
+    print(f"[serve_http] drain: health history {' -> '.join(hist)}")
+    for why in bad:
+        print(f"[serve_http] DRAIN SMOKE FAILED: {why}", file=sys.stderr)
+    return 1 if bad else 0
 
 
 async def _smoke(frontend: HttpFrontend, host: str, port: int, args,
                  cfg, scfg) -> int:
     """Stream ``--smoke N`` requests through real HTTP and verify the
-    streamed tokens byte-for-byte against the static baseline."""
+    streamed tokens byte-for-byte against the static baseline.  With
+    ``--overload`` a 2x burst phase follows; a graceful-drain phase always
+    runs last (it leaves the server refusing work)."""
     rng = np.random.RandomState(args.seed)
     prompts = [rng.randint(1, cfg.vocab,
                            size=int(rng.randint(4, args.prompt_len + 1))
                            ).tolist()
                for _ in range(args.smoke)]
+    t0 = time.perf_counter()
     outs = await asyncio.gather(*[
         _sse_client(host, port, p, args.gen) for p in prompts])
+    elapsed_s = time.perf_counter() - t0
     ref, _ = generate_static(cfg, frontend.serving.engine.params, prompts,
                              args.gen, scfg, batch_size=1, seed=args.seed)
     bad = []
@@ -216,7 +397,13 @@ async def _smoke(frontend: HttpFrontend, host: str, port: int, args,
         return 1
     print(f"[serve_http] smoke verify OK: streamed tokens exact vs "
           f"single-request static baseline for all {len(outs)} requests")
-    return 0
+    rc = 0
+    if args.overload:
+        # phase-1 wall time for N concurrent clients ≈ one admission wave's
+        # service time — the deadline calibration for the burst
+        rc |= await _overload_smoke(host, port, args, cfg, elapsed_s)
+    rc |= await _drain_smoke(host, port)
+    return rc
 
 
 # --------------------------------------------------------------------- main
@@ -233,7 +420,9 @@ def build_engine(args) -> Tuple[Engine, Any, ServeConfig]:
     scfg = ServeConfig(page_size=ps, max_slots=args.slots, max_len=max_len,
                        prefix_cache=args.prefix_cache,
                        attn_backend=args.attn_backend,
-                       prefill_chunk_tokens=args.prefill_chunk_tokens)
+                       prefill_chunk_tokens=args.prefill_chunk_tokens,
+                       admission_control=(args.admission_control
+                                          or args.overload))
     tracer = Tracer()
     eng = Engine(cfg, scfg, seed=args.seed, tracer=tracer)
     return eng, cfg, scfg
@@ -265,7 +454,17 @@ def main(argv=None) -> int:
                     help="bounded collect-queue size (the backpressure knob)")
     ap.add_argument("--smoke", type=int, default=0, metavar="N",
                     help="self-test: stream N requests through HTTP, verify "
-                         "tokens vs the static baseline, exit")
+                         "tokens vs the static baseline, then drive a "
+                         "graceful drain; exit")
+    ap.add_argument("--admission-control", action="store_true",
+                    help="enable deadline-aware admission shedding "
+                         "(503 + Retry-After)")
+    ap.add_argument("--overload", action="store_true",
+                    help="with --smoke: add a 2x burst phase asserting the "
+                         "shed contract (implies --admission-control)")
+    ap.add_argument("--watchdog-s", type=float, default=0.0,
+                    help="fail pending streams if the engine makes no "
+                         "progress for this long (0 = off)")
     ap.add_argument("--trace", metavar="PATH", default="",
                     help="write the lifecycle trace (incl. host-pipeline "
                          "dispatch/stage/collect spans) on exit")
@@ -276,7 +475,8 @@ def main(argv=None) -> int:
 
     eng, cfg, scfg = build_engine(args)
     serving = ServingLoop(eng, overlap=not args.no_overlap,
-                          collect_queue_size=args.queue_size)
+                          collect_queue_size=args.queue_size,
+                          watchdog_s=args.watchdog_s)
     frontend = HttpFrontend(serving, default_max_new=args.gen)
     port = args.port if not args.smoke else (args.port if args.port != 8080
                                              else 0)
@@ -288,7 +488,7 @@ def main(argv=None) -> int:
         print(f"[serve_http] {cfg.name} on http://{args.host}:{bound} "
               f"(slots={scfg.max_slots}, max_len={scfg.max_len}, "
               f"overlap={'off' if args.no_overlap else 'on'}) — "
-              f"POST /generate, GET /metrics, GET /health")
+              f"POST /generate, GET /metrics, GET /health, POST /drain")
         rc = 0
         try:
             if args.smoke:

@@ -12,7 +12,10 @@ and prints:
   (non-decode steps that ran while decode-ready slots were parked behind
   them, i.e. step spans carrying ``decode_waiting=True``);
 * a per-request table (TTFT, total latency, TPOT, tokens, prefill chunks,
-  preemptions) read from each request's terminal ``finished`` instant.
+  preemptions) read from each request's terminal ``finished`` instant;
+* a failure summary — terminal errors (quarantine, cancel, deadline) and
+  rejections (admission sheds, no_budget) counted by cause — when any
+  request did not finish cleanly.
 
 ``--validate`` additionally runs the well-formedness checker
 (``telemetry.validate_trace``: monotonic finite timestamps, proper span
@@ -104,6 +107,25 @@ def request_rows(trace: Dict[str, Any]) -> List[Dict[str, Any]]:
     return rows
 
 
+def failure_summary(trace: Dict[str, Any]) -> Dict[str, int]:
+    """Terminal failures by cause: ``finished`` instants carrying an
+    ``error`` arg (quarantine/cancel/deadline) and ``rejected`` instants by
+    reason (admission sheds, no_budget, deadline_exceeded in queue)."""
+    counts: Dict[str, int] = {}
+    for e in trace.get("traceEvents", []):
+        if e.get("ph") != "i" or e.get("pid") != REQUEST_PID:
+            continue
+        args = e.get("args", {})
+        if e.get("name") == "finished" and args.get("error"):
+            key = f"failed:{args['error']}"
+        elif e.get("name") == "rejected":
+            key = f"rejected:{args.get('reason', 'unknown')}"
+        else:
+            continue
+        counts[key] = counts.get(key, 0) + 1
+    return counts
+
+
 def report(trace: Dict[str, Any]) -> str:
     out = []
     bd = phase_breakdown(trace)
@@ -151,6 +173,14 @@ def report(trace: Dict[str, Any]) -> str:
                 f"{r.get('n_tokens', 0):>5} "
                 f"{r.get('n_prefill_chunks', 0):>6} "
                 f"{r.get('n_preemptions', 0):>7}")
+
+    failures = failure_summary(trace)
+    if failures:
+        total = sum(failures.values())
+        detail = ", ".join(f"{k}={v}" for k, v in sorted(failures.items()))
+        out.append("")
+        out.append(f"failures: {total} requests did not finish cleanly "
+                   f"({detail})")
     return "\n".join(out)
 
 

@@ -113,17 +113,21 @@ def make_serve_step(cfg: ArchConfig, mesh: Optional[Mesh], kind: str,
        kind='prefill_at': step(params, batch, last_idx) -> (logits, cache)
          (logits read at per-row position ``last_idx`` — bucketed prompts)
        kind='decode_paged': step(params, kv, state, meta, tokens)
-         -> (next_tokens, new_kv, new_state) — slot-indexed continuous-
+         -> (next_tokens, ok, new_kv, new_state) — slot-indexed continuous-
          batching decode against the paged pool and/or state-slot pool
          (see repro.serving; {} stands in for an absent pool).  ``meta`` is
          the flat per-step metadata pytree from ``attn_backend.decode_meta``
-         (page-table rows, positions, precomputed write targets).
+         (page-table rows, positions, precomputed write targets).  ``ok`` is
+         a per-row bool: True iff every logit in that row is finite — the
+         engine's NaN/inf quarantine guard, computed in-jit so the argmax
+         result never has to leave the device alongside raw logits.
        kind='verify_paged': step(params, kv, state, meta, tokens)
-         -> (next_tokens [B, Q], new_kv, new_state) — small-q speculative
-         verify: ``tokens`` is [B, Q] (last emitted token + draft per slot)
-         and ``meta`` comes from ``attn_backend.verify_meta``; row j of the
-         output is the greedy next token after position pos + j, from which
-         the engine computes the accepted draft prefix.
+         -> (next_tokens [B, Q], ok [B], new_kv, new_state) — small-q
+         speculative verify: ``tokens`` is [B, Q] (last emitted token +
+         draft per slot) and ``meta`` comes from ``attn_backend.verify_meta``;
+         row j of the output is the greedy next token after position pos + j,
+         from which the engine computes the accepted draft prefix.  ``ok``
+         reduces finiteness over both the Q and vocab axes.
        kind='prefill_paged': step(params, kv, state, meta, tokens, extras)
          -> (logits, new_kv, new_state) — batched chunk prefill straight
          into the pools.  ``meta`` is the flat per-step metadata pytree from
@@ -149,14 +153,16 @@ def make_serve_step(cfg: ArchConfig, mesh: Optional[Mesh], kind: str,
             logits, kv, state = model.decode_paged(params, kv, state, meta,
                                                    tokens, mesh)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            return nxt, kv, state
+            ok = jnp.isfinite(logits).all(axis=-1)
+            return nxt, ok, kv, state
         return step
     if kind == "verify_paged":
         def step(params, kv, state, meta, tokens):
             logits, kv, state = model.verify_paged(params, kv, state, meta,
                                                    tokens, mesh)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            return nxt, kv, state
+            ok = jnp.isfinite(logits).all(axis=(-2, -1))
+            return nxt, ok, kv, state
         return step
     if kind == "prefill_paged":
         def step(params, kv, state, meta, tokens, extras):

@@ -58,6 +58,20 @@ story, built from the three standard pieces of a modern LLM-serving stack:
     the engine; a slow *client* only buffers its own stream).  The HTTP/SSE
     layer over it lives in ``launch.serve_http``.
 
+``faults`` / ``admission``
+    Fault tolerance.  ``faults`` is a deterministic fault-injection harness
+    (seeded ``FaultPlan`` parsed from ``kind:k=v,...`` specs) wired into the
+    engine's seams — poisoned logits, raised step errors, page-pool
+    pressure, client disconnects, detokenizer stalls — with the
+    **exact-survivor contract**: the engine quarantines only the offending
+    request (terminal error, pages scrubbed then released) and every
+    survivor's tokens stay byte-identical to a fault-free run
+    (``launch.serve --inject ... --verify``).  ``admission`` adds
+    deadline-aware admission control (EWMA-calibrated queue-wait estimate,
+    shed with jittered Retry-After hints), mid-flight deadline eviction,
+    and the ``starting → healthy → degraded/draining → drained`` health
+    state machine behind ``GET /health``.
+
 ``telemetry``
     Observability layer threaded through all of the above: a typed metrics
     registry (counters / gauges / histograms, optional labels) shared by
@@ -100,7 +114,10 @@ token-addressable prompt pages: plain KV and MLA); elsewhere
 """
 from __future__ import annotations
 
+from .admission import AdmissionController, HealthState  # noqa: F401
 from .engine import Engine, RequestResult, generate_static  # noqa: F401
+from .faults import (  # noqa: F401
+    FAULT_KINDS, Fault, FaultInjector, FaultPlan, RequestFault)
 from .kv_pool import NULL_PAGE, PagedKVPool, StateSlotPool  # noqa: F401
 from .quant_verify import (  # noqa: F401
     dual_gate_verify, format_report, logit_tol, replay_logits)

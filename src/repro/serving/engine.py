@@ -89,6 +89,8 @@ from ..models.attn_backend import (
 from ..models.params import init_tree
 from ..models.registry import build_model, init_cache, init_params
 from ..models.steps import make_serve_step
+from .admission import AdmissionController, HealthState
+from .faults import FaultInjector, FaultPlan, RequestFault
 from .kv_pool import NULL_PAGE, PagedKVPool, StateSlotPool
 from .radix_cache import RadixCache
 from .scheduler import Admission, Request, Scheduler
@@ -115,7 +117,10 @@ class RequestResult:
     tpot_s: float = 0.0               # time per output token after the first
     n_prefill_chunks: int = 0         # prefill calls run (incl. replays)
     preempted: bool = False
-    error: str = ""                   # nonempty: rejected/cancelled, no tokens
+    error: str = ""                   # nonempty: rejected/cancelled/shed/
+                                      # quarantined; tokens hold whatever the
+                                      # request produced before the terminal
+    retry_after_s: float = 0.0        # backoff hint for shed requests
 
     @property
     def failed(self) -> bool:
@@ -155,13 +160,33 @@ def _copy_page_fn(kv, src, dst):
     return jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), kv)
 
 
+def _zero_pages_fn(kv, pages):
+    """Zero physical pages ``pages`` across every layer (quarantine scrub).
+    ``pages`` is a fixed-width int32 vector padded with NULL_PAGE — zeroing
+    the reserved sink page is harmless, so one compiled shape covers every
+    scrub."""
+    return jax.tree.map(
+        lambda a: a.at[:, pages].set(jnp.zeros((), a.dtype)), kv)
+
+
+def _poison_pages_fn(kv, pages):
+    """NaN-fill the floating leaves of ``pages`` (fault injection only).
+    int8 payload leaves can't hold NaN and are left alone — their bf16
+    scale leaves carry the poison through dequant instead."""
+    def poison(a):
+        if not jnp.issubdtype(a.dtype, jnp.floating):
+            return a
+        return a.at[:, pages].set(jnp.asarray(jnp.nan, a.dtype))
+    return jax.tree.map(poison, kv)
+
+
 @functools.lru_cache(maxsize=None)
 def _paged_steps(cfg: ArchConfig, mesh=None, attn_backend: str = "reference"):
-    """Jitted (prefill_paged, decode_paged, verify_paged, copy_page) steps,
-    cached per (config, attention backend) so every Engine instance reuses
-    compilations.  The kv and state pool arguments are donated; callers
-    always rebind them.  The verify step is built lazily on first use so
-    non-speculative engines never trace it."""
+    """Jitted (prefill_paged, decode_paged, verify_paged, copy_page,
+    zero_pages, poison_pages) steps, cached per (config, attention backend)
+    so every Engine instance reuses compilations.  The kv and state pool
+    arguments are donated; callers always rebind them.  The verify step is
+    built lazily on first use so non-speculative engines never trace it."""
     return (jax.jit(make_serve_step(cfg, mesh, "prefill_paged", attn_backend),
                     donate_argnums=(1, 2)),
             jax.jit(make_serve_step(cfg, mesh, "prefill_paged_cont",
@@ -170,7 +195,9 @@ def _paged_steps(cfg: ArchConfig, mesh=None, attn_backend: str = "reference"):
                     donate_argnums=(1, 2)),
             jax.jit(make_serve_step(cfg, mesh, "verify_paged", attn_backend),
                     donate_argnums=(1, 2)),
-            jax.jit(_copy_page_fn, donate_argnums=(0,)))
+            jax.jit(_copy_page_fn, donate_argnums=(0,)),
+            jax.jit(_zero_pages_fn, donate_argnums=(0,)),
+            jax.jit(_poison_pages_fn, donate_argnums=(0,)))
 
 
 def _synthetic_frontend(cfg: ArchConfig, scfg: ServeConfig, seed: int,
@@ -201,7 +228,8 @@ class Engine:
     def __init__(self, cfg: ArchConfig, scfg: Optional[ServeConfig] = None,
                  params=None, *, mesh=None, seed: int = 0,
                  tracer: Optional[Tracer] = None,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 faults: Optional[FaultPlan] = None):
         self.cfg = cfg
         self.scfg = scfg or ServeConfig()
         self.model = build_model(cfg)
@@ -232,7 +260,16 @@ class Engine:
         self._next_rid = 0
         self.attn_backend = resolve_backend(self.scfg.attn_backend)
         (self._prefill, self._prefill_cont, self._decode, self._verify,
-         self._copy) = _paged_steps(cfg, mesh, self.attn_backend)
+         self._copy, self._zero, self._poison) = _paged_steps(
+             cfg, mesh, self.attn_backend)
+        # fault tolerance: optional chaos injector, health lifecycle, and
+        # deadline-aware admission control (serving/{faults,admission})
+        self.injector = FaultInjector(faults, self.metrics) \
+            if faults is not None else None
+        self.health = HealthState(self.metrics)
+        self.admission = AdmissionController(
+            self.scfg.max_slots, metrics=self.metrics, seed=seed) \
+            if self.scfg.admission_control else None
         # speculative decoding: draft length after the family gate (paged
         # non-enc-dec only) and the weight-free prompt-lookup proposer
         self.spec_k = speculation_k(cfg, self.spec, self.scfg)
@@ -291,6 +328,20 @@ class Engine:
         self._m_reject_budget = self.metrics.counter(
             "sched.rejections", "admission attempts blocked, by reason",
             labels=("reason",)).labels(reason="no_budget")
+        # fault-tolerance accounting: quarantines (NaN logits / step errors),
+        # client cancels, deadline evictions, and admission sheds
+        self._m_quarantined = self.metrics.counter(
+            "engine.quarantined", "requests terminal-failed mid-flight by "
+            "the per-step fault guard (nan_logits | step_error)")
+        self._m_cancelled = self.metrics.counter(
+            "engine.cancelled", "requests cancelled by the client "
+            "(disconnects), queued or live")
+        self._m_deadline_evict = self.metrics.counter(
+            "engine.deadline_evictions", "requests expired by the deadline "
+            "sweep (queued or mid-flight)")
+        self._m_shed = self.metrics.counter(
+            "admission.shed", "Requests shed at admission, by reason.",
+            labels=("reason",))
         # streaming hook: called as each token is *collected* (host side).
         # A preemption replay re-fires earlier indexes with identical tokens
         # (greedy determinism); stream consumers dedup by index.
@@ -304,7 +355,9 @@ class Engine:
     # ----------------------------------------------------------- public API
 
     def add_request(self, prompt: Sequence[int], max_new_tokens: int = 16,
-                    rid: Optional[int] = None) -> int:
+                    rid: Optional[int] = None, *,
+                    deadline_s: Optional[float] = None,
+                    ttft_deadline_s: Optional[float] = None) -> int:
         """Queue a prompt; returns the request id.
 
         A request with no token budget under ``max_len`` (prompt too long,
@@ -314,7 +367,16 @@ class Engine:
         tokens, ``error`` set) instead of raising mid-batch and stranding
         already-admitted requests.  The only submission-time exception is a
         ``rid`` collision with an in-flight request — accepting it would
-        corrupt tracer and result bookkeeping, so that raises immediately."""
+        corrupt tracer and result bookkeeping, so that raises immediately.
+
+        ``deadline_s`` / ``ttft_deadline_s`` are relative QoS budgets
+        (seconds from now; ``ServeConfig.default_*`` fill absent ones).
+        With ``ServeConfig.admission_control`` on, a request whose deadline
+        the calibrated queue model can't meet is *shed* at the door —
+        failed result with ``error="shed: overloaded"`` and a jittered
+        ``retry_after_s`` backoff hint — and admitted requests that blow
+        their deadline mid-flight are evicted by the scheduler sweep.  A
+        draining engine sheds every new request with reason ``draining``."""
         if rid is None:
             rid = self._next_rid
         elif rid in self._inflight:
@@ -335,8 +397,36 @@ class Engine:
             self.sched.finished.append(req)
             self.tracer.on_rejected(rid, now, "no_budget")
             return rid
-        req = Request(rid=rid, prompt=prompt, max_new=max_new, arrival=now)
+        if deadline_s is None and self.scfg.default_deadline_s > 0:
+            deadline_s = self.scfg.default_deadline_s
+        if ttft_deadline_s is None and self.scfg.default_ttft_deadline_s > 0:
+            ttft_deadline_s = self.scfg.default_ttft_deadline_s
+        if self.health.draining:
+            return self._shed(rid, prompt, now, "draining")
+        if self.admission is not None:
+            reason = self.admission.check(len(self.sched.queue),
+                                          deadline_s, ttft_deadline_s)
+            if reason is not None:
+                return self._shed(rid, prompt, now, reason)
+        req = Request(rid=rid, prompt=prompt, max_new=max_new, arrival=now,
+                      deadline=now + deadline_s if deadline_s else None,
+                      ttft_deadline=(now + ttft_deadline_s
+                                     if ttft_deadline_s else None))
         self.sched.add(req)
+        return rid
+
+    def _shed(self, rid: int, prompt: List[int], now: float,
+              reason: str) -> int:
+        """Refuse a request at the door: failed result, backoff hint, and a
+        ``rejected`` tracer terminal — the engine never does work for it."""
+        retry = (self.admission.retry_after_s(len(self.sched.queue))
+                 if self.admission is not None else 1.0)
+        self._m_shed.labels(reason=reason).inc()
+        req = Request(rid=rid, prompt=prompt, max_new=0, arrival=now,
+                      error=f"shed: {reason}", retry_after_s=retry)
+        req.t_finish = now
+        self.sched.finished.append(req)
+        self.tracer.on_rejected(rid, now, reason)
         return rid
 
     def cancel(self, rid: int) -> bool:
@@ -352,6 +442,7 @@ class Engine:
                 req.error = "cancelled"
                 req.t_finish = now
                 self.sched.finished.append(req)
+                self._m_cancelled.inc()
                 self.tracer.on_rejected(rid, now, "cancelled")
                 return True
         for i, slot in enumerate(self.sched.slots):
@@ -359,15 +450,30 @@ class Engine:
                 self._drop_staged()           # slot set is about to change
                 slot.req.error = "cancelled"
                 slot.req.t_finish = now
+                # retire -> _unbind drops *every* page reference the slot
+                # holds — including the not-yet-published tail pages of a
+                # mid-chunked-prefill slot (n_filled < len(prompt)); the
+                # radix cache keeps only the pages it already co-owns
                 self.sched.retire(i)
-                self.tracer.on_finished(rid, now, len(slot.req.generated))
+                self._m_cancelled.inc()
+                self.tracer.on_finished(rid, now, len(slot.req.generated),
+                                        error="cancelled")
                 return True
         return False
 
     def step(self) -> bool:
         """Run one scheduler action (a prefill, a continuation chunk, a
-        restore, or a decode) synchronously. False when idle."""
-        pending = self._dispatch_next()
+        restore, or a decode) synchronously. False when idle.
+
+        A :class:`RequestFault` raised at the pre-launch seam (injected
+        step error) quarantines only the offending request — the donated
+        kv/state buffers were not touched yet, so the surviving slots
+        simply run on the next step, token streams intact."""
+        try:
+            pending = self._dispatch_next()
+        except RequestFault as e:
+            self._quarantine_rid(e.rid, e.kind)
+            return True
         if pending is None:
             return False
         self._finish_step(pending)
@@ -379,7 +485,11 @@ class Engine:
         Token-for-token identical to ``step()`` (a staged plan is used only
         when it fingerprints equal to a replan); the win is host time hidden
         behind device time.  False when idle."""
-        pending = self._dispatch_next()
+        try:
+            pending = self._dispatch_next()
+        except RequestFault as e:
+            self._quarantine_rid(e.rid, e.kind)
+            return True
         if pending is None:
             return False
         self.tracer.host_span("dispatch", pending.t0, pending.t_dispatched,
@@ -404,7 +514,7 @@ class Engine:
                       if req.t_first is not None else 0.0),
                 n_preemptions=req.n_preemptions,
                 cached_tokens=req.cached_tokens,
-                error=req.error)
+                error=req.error, retry_after_s=req.retry_after_s)
             if rec is not None and rec.t_finish is not None:
                 # per-request timing from the lifecycle tracer (one source
                 # of truth for spans, results, and the trace report)
@@ -416,6 +526,9 @@ class Engine:
                     / max(len(req.generated) - 1, 1)
                 res.n_prefill_chunks = rec.n_chunks
                 res.preempted = rec.n_preemptions > 0
+            if self.admission is not None and not res.failed:
+                # calibrate the queue model on what actually served
+                self.admission.observe_result(res.ttft, res.latency)
             self._inflight.discard(req.rid)
             out.append(res)
         self.sched.finished.clear()
@@ -436,6 +549,7 @@ class Engine:
         # time (or a stale staged plan) into this run's accounting
         self._stall_accum = 0.0
         self._staged = None
+        self.health.mark_healthy()
         t0 = time.perf_counter()
         for p, m in zip(prompts, budgets):
             self.add_request(p, m)
@@ -494,9 +608,24 @@ class Engine:
         is asynchronous).  ``None`` on drain — trailing stall time
         accumulated behind non-decode steps is flushed there so it cannot
         leak into a later run on a reused engine."""
-        action = self.sched.next_action()
+        if self.injector is not None:
+            self.injector.on_tick(self)
+        if self.admission is not None:
+            self._evict_deadlines()
+        try:
+            action = self.sched.next_action()
+        except RuntimeError:
+            # injected pool pressure can manufacture a scheduler deadlock the
+            # real pool would never see; give the hostage pages back and
+            # retry once before treating it as genuine exhaustion
+            if self.injector is None \
+                    or not self.injector.release_pressure(self):
+                raise
+            action = self.sched.next_action()
         if action is None:
             self._drop_staged()
+            if self.injector is not None:
+                self.injector.on_drain(self)
             if self._stall_accum:
                 self._h_stall.observe(self._stall_accum)
                 self._stall_accum = 0.0
@@ -517,8 +646,12 @@ class Engine:
             # speculation on: every decode-ready step runs as a small-q
             # verify step (with an empty draft it degenerates to decode)
             kind = "verify"
+            if self.injector is not None:
+                self.injector.before_launch(self, "verify", payload)
             rows, out = payload, self._launch_verify(payload)
         else:
+            if self.injector is not None:
+                self.injector.before_launch(self, "decode", payload)
             rows, out = payload, self._launch_decode(payload)
         return _Pending(kind=kind, payload=payload, rows=rows, out_dev=out,
                         t0=t0, t_dispatched=time.perf_counter(),
@@ -547,6 +680,103 @@ class Engine:
         elif pending.waiting:
             # decode-ready slots sat out this step: head-of-line stall
             self._stall_accum += t1 - pending.t0
+
+    # ---------------------------------------------- quarantine / deadlines
+
+    def _pad_pages(self, pages: List[int], fill: int) -> jnp.ndarray:
+        """Pad a page list to the fixed table width so the jitted zero /
+        poison calls compile exactly once per engine config."""
+        width = max(self.pool.table_width, 1)
+        return jnp.asarray((list(pages) + [fill] * width)[:width], jnp.int32)
+
+    def poison_slot(self, slot_idx: int) -> None:
+        """Fault injection: NaN-fill the slot's most recent exclusively-
+        owned KV page (or its state-slot row).  At the decode seam the
+        newest page always holds positions past every sharer's prompt, so
+        only the target row ever reads it — the poison is strictly
+        per-request, which is what makes the exact-survivor contract
+        testable."""
+        slot = self.sched.slots[slot_idx]
+        assert slot is not None
+        if self.pool.spec.paged and slot.pages:
+            page = next((p for p in reversed(slot.pages)
+                         if self.pool.ref(p) == 1), None)
+            assert page is not None, \
+                f"slot {slot_idx} owns no exclusive page to poison"
+            self.pool.kv = self._poison(self.pool.kv,
+                                        self._pad_pages([page], fill=page))
+        elif self.states is not None:
+            self.states.poison(slot_idx)
+
+    def _scrub_slot(self, slot_idx: int) -> None:
+        """Zero a quarantined slot's exclusively-owned pages (and state row)
+        before they return to the free list.  Mandatory, not cosmetic:
+        masked attention is a zero-*weight* multiply, so a NaN in a recycled
+        page would poison every future request whose table points at it
+        even at softmax weight zero.  Shared (radix) pages are finite by
+        construction — prompts are poisoned only past the shared region —
+        and co-owned, so they are left alone."""
+        slot = self.sched.slots[slot_idx]
+        assert slot is not None
+        if self.pool.spec.paged and slot.pages:
+            excl = [p for p in slot.pages if self.pool.ref(p) == 1]
+            if excl:
+                self.pool.kv = self._zero(self.pool.kv,
+                                          self._pad_pages(excl, NULL_PAGE))
+                self.pool.note_scrubbed(len(excl))
+        if self.states is not None:
+            self.states.scrub(slot_idx)
+
+    def _quarantine_slot(self, slot_idx: int, reason: str,
+                         now: float) -> None:
+        """Terminal-fail one live request without touching its batchmates:
+        drop any staged plan (the slot set changes), scrub the pages it
+        exclusively owns, release everything through the normal retire
+        path, and emit the failure terminal.  Survivors replay nothing —
+        their tokens were never wrong — so their streams stay byte-exact."""
+        slot = self.sched.slots[slot_idx]
+        assert slot is not None
+        req = slot.req
+        self._drop_staged()
+        self._scrub_slot(slot_idx)
+        req.error = reason
+        req.t_finish = now
+        self.sched.retire(slot_idx)
+        self._m_quarantined.inc()
+        self.tracer.on_finished(req.rid, now, len(req.generated),
+                                error=reason)
+
+    def _quarantine_rid(self, rid: int, reason: str) -> None:
+        """Quarantine by request id (the step-error path: the fault names a
+        rid, not a slot).  No-op if the rid is no longer live."""
+        now = time.perf_counter()
+        for i, slot in enumerate(self.sched.slots):
+            if slot is not None and slot.req.rid == rid:
+                self._quarantine_slot(i, reason, now)
+                return
+
+    def _evict_deadlines(self) -> None:
+        """Expire queued and mid-flight requests whose deadline passed.
+        Mid-flight eviction frees the slot immediately — finishing a request
+        its client already gave up on is negative goodput."""
+        now = time.perf_counter()
+        expired_q, expired_live = self.sched.sweep_deadlines(now)
+        for req in expired_q:
+            req.error = "deadline_exceeded"
+            req.t_finish = now
+            self.sched.finished.append(req)
+            self._m_deadline_evict.inc()
+            self.tracer.on_rejected(req.rid, now, "deadline_exceeded")
+        for i in expired_live:
+            self._drop_staged()
+            slot = self.sched.slots[i]
+            req = slot.req
+            req.error = "deadline_exceeded"
+            req.t_finish = now
+            self.sched.retire(i)
+            self._m_deadline_evict.inc()
+            self.tracer.on_finished(req.rid, now, len(req.generated),
+                                    error="deadline_exceeded")
 
     def _stage_next(self, pending: _Pending) -> bool:
         """While the dispatched step runs on device, pre-build the host plan
@@ -674,8 +904,7 @@ class Engine:
             self.tracer.on_first_token(req.rid, now)
             tok = int(logits_row.argmax())
             req.generated.append(tok)
-            if self.on_token is not None:
-                self.on_token(req.rid, len(req.generated) - 1, tok, now)
+            self._emit_token(req.rid, len(req.generated) - 1, tok, now)
             self._maybe_retire(slot_idx, now)
 
     def _launch_prefill(self, adms: List[Admission], t0: float):
@@ -719,10 +948,18 @@ class Engine:
         logits = np.asarray(pending.out_dev)     # blocks: device step done
         now = time.perf_counter()
         for r, (slot_idx, req, n_done, n_chunk) in enumerate(pending.rows):
+            slot = self.sched.slots[slot_idx]
+            if slot is None or slot.req is not req:
+                continue              # cancelled/quarantined under our feet
             self.tracer.on_chunk(req.rid, pending.t0, now,
                                  n_done=n_done, n_chunk=n_chunk)
+            if not np.isfinite(logits[r]).all():
+                # checked *before* _after_chunk so a poisoned prompt never
+                # publishes its pages to the radix cache
+                self._quarantine_slot(slot_idx, "nan_logits", now)
+                continue
             pages = (pending.payload[r].pages if pending.kind == "prefill"
-                     else self.sched.slots[slot_idx].pages)
+                     else slot.pages)
             self._after_chunk(slot_idx, req, n_done, n_chunk, logits[r],
                               now, pages)
 
@@ -781,27 +1018,36 @@ class Engine:
         state = self.states.state if self.states is not None else {}
         t_launch = time.perf_counter()
         with self.tracer.annotate("decode_step"):
-            nxt, self.pool.kv, state = self._decode(
+            nxt, ok, self.pool.kv, state = self._decode(
                 self.params, self.pool.kv, state, meta, jnp.asarray(tokens))
         if self.states is not None:
             self.states.state = state
-        return nxt, t_launch
+        return nxt, ok, t_launch
 
     def _collect_decode(self, pending: _Pending) -> None:
         """Collect half of a decode step: block on the device tokens, then
-        advance cursors, fire streaming hooks, retire finished slots."""
-        nxt_dev, t_launch = pending.out_dev
+        advance cursors, fire streaming hooks, retire finished slots.  A row
+        whose finite flag came back False is quarantined instead of emitting
+        its garbage argmax — its survivors' rows are untouched."""
+        nxt_dev, ok_dev, t_launch = pending.out_dev
         nxt = np.asarray(nxt_dev)                # blocks: device step done
+        ok = np.asarray(ok_dev)
         now = time.perf_counter()
         self._h_decode_step.observe(now - t_launch)
+        if self.admission is not None:
+            self.admission.observe_step(now - t_launch)
         for i in pending.rows:
             slot = self.sched.slots[i]
+            if slot is None:
+                continue              # quarantined earlier in this collect
+            if not ok[i]:
+                self._quarantine_slot(i, "nan_logits", now)
+                continue
             slot.pos += 1
             tok = int(nxt[i])
             slot.req.generated.append(tok)
-            if self.on_token is not None:
-                self.on_token(slot.req.rid, len(slot.req.generated) - 1,
-                              tok, now)
+            self._emit_token(slot.req.rid, len(slot.req.generated) - 1,
+                             tok, now)
             self._maybe_retire(i, now)
 
     # ------------------------------------------------------------- speculate
@@ -861,11 +1107,11 @@ class Engine:
         state = self.states.state if self.states is not None else {}
         t_launch = time.perf_counter()
         with self.tracer.annotate("verify_step"):
-            nxt, self.pool.kv, state = self._verify(
+            nxt, ok, self.pool.kv, state = self._verify(
                 self.params, self.pool.kv, state, meta, jnp.asarray(tokens))
         if self.states is not None:
             self.states.state = state
-        return nxt, t_launch, drafts
+        return nxt, ok, t_launch, drafts
 
     def _collect_verify(self, pending: _Pending) -> None:
         """Collect half of a verify step: block on the [B, Q] greedy tokens,
@@ -874,12 +1120,20 @@ class Engine:
         one-token decode steps would have produced.  EOS or budget reached
         mid-emit stops the emission there (trailing accepted tokens are
         discarded exactly as decode would never have produced them)."""
-        nxt_dev, t_launch, drafts = pending.out_dev
+        nxt_dev, ok_dev, t_launch, drafts = pending.out_dev
         nxt = np.asarray(nxt_dev)                # blocks: device step done
+        ok = np.asarray(ok_dev)
         now = time.perf_counter()
         self._h_decode_step.observe(now - t_launch)
+        if self.admission is not None:
+            self.admission.observe_step(now - t_launch)
         for i in pending.rows:
             slot = self.sched.slots[i]
+            if slot is None:
+                continue              # quarantined earlier in this collect
+            if not ok[i]:
+                self._quarantine_slot(i, "nan_logits", now)
+                continue
             req = slot.req
             draft = drafts[i]
             a = accept_length(draft, nxt[i, :len(draft)]) if draft else 0
@@ -890,8 +1144,7 @@ class Engine:
                 tok = int(nxt[i, j])
                 slot.pos += 1
                 req.generated.append(tok)
-                if self.on_token is not None:
-                    self.on_token(req.rid, len(req.generated) - 1, tok, now)
+                self._emit_token(req.rid, len(req.generated) - 1, tok, now)
                 done = len(req.generated) >= req.max_new
                 if self.scfg.eos_id >= 0 and tok == self.scfg.eos_id:
                     done = True
@@ -900,6 +1153,14 @@ class Engine:
                     self.sched.retire(i)
                     self.tracer.on_finished(req.rid, now, len(req.generated))
                     break
+
+    def _emit_token(self, rid: int, index: int, tok: int, now: float) -> None:
+        """Fire the streaming hook and the injector's token seam (the
+        client-disconnect fault watches the stream, not the scheduler)."""
+        if self.on_token is not None:
+            self.on_token(rid, index, tok, now)
+        if self.injector is not None:
+            self.injector.on_token(rid, index)
 
     def _maybe_retire(self, slot_idx: int, now: float) -> None:
         req = self.sched.slots[slot_idx].req

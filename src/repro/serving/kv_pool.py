@@ -118,6 +118,8 @@ class PagedKVPool:
             "pool.pages_released", "pages returned to the free list")
         self._m_shares = self.metrics.counter(
             "pool.refs_shared", "extra owners added via share()")
+        self._m_scrubbed = self.metrics.counter(
+            "pool.pages_scrubbed", "pages zero-scrubbed during quarantine")
         self._m_live = self.metrics.gauge(
             "pool.pages_live", "pages currently allocated (refcount > 0)")
         self._m_free = self.metrics.gauge(
@@ -214,6 +216,20 @@ class PagedKVPool:
         self._m_live.set(len(self._ref))
         self._m_free.set(len(self._free))
 
+    def note_scrubbed(self, n: int) -> None:
+        """Record ``n`` pages zero-scrubbed by the engine's quarantine path."""
+        self._m_scrubbed.inc(n)
+
+    def conservation_ok(self) -> bool:
+        """Counter reconciliation: every page ever allocated is either live
+        or has been released, and the free list + live set tile the pool
+        (minus the reserved null page)."""
+        alloc = self.metrics.value("pool.pages_allocated")
+        released = self.metrics.value("pool.pages_released")
+        if alloc != released + len(self._ref):
+            return False
+        return len(self._free) + len(self._ref) == self.total_pages - 1
+
     # exclusive-ownership spelling used by pre-refcount call sites/tests
     free = release
 
@@ -291,3 +307,22 @@ class StateSlotPool:
         self.state = jax.tree.map(
             lambda a, s: a.at[:, slot].set(jnp.asarray(s, a.dtype)),
             self.state, saved)
+
+    # --------------------------------------------------- fault-tolerance hooks
+
+    def _fill_row(self, slot: int, value: float) -> None:
+        def fill(a):
+            if not jnp.issubdtype(a.dtype, jnp.floating):
+                return a
+            return a.at[:, slot].set(jnp.asarray(value, a.dtype))
+        self.state = jax.tree.map(fill, self.state)
+
+    def scrub(self, slot: int) -> None:
+        """Zero one slot row (quarantine cleanup).  Rows are overwritten at
+        the next claim anyway; scrubbing keeps the any-idle-row-is-finite
+        invariant so a stale NaN can never leak through a masked read."""
+        self._fill_row(slot, 0.0)
+
+    def poison(self, slot: int) -> None:
+        """Fill one slot row with NaN (fault injection only)."""
+        self._fill_row(slot, float("nan"))

@@ -79,6 +79,10 @@ class Request:
     # checkpoint-on-preempt snapshot: (pos, host state pytree), or None
     checkpoint: Optional[Tuple[int, Any]] = None
     error: str = ""                      # nonempty: rejected or cancelled
+    # --- fault tolerance / QoS (serving/admission) ---
+    deadline: Optional[float] = None         # absolute: finish by this time
+    ttft_deadline: Optional[float] = None    # absolute: first token by this
+    retry_after_s: float = 0.0               # backoff hint set when shed
 
     @property
     def finished(self) -> bool:
@@ -219,6 +223,27 @@ class Scheduler:
         if end <= n_done:                  # can't happen with chunk >= ps;
             end = min(n_prompt, n_done + self.chunk)   # guard anyway
         return end - n_done
+
+    def sweep_deadlines(self, now: float) -> Tuple[List[Request], List[int]]:
+        """Deadline police: requests whose total deadline passed, or whose
+        TTFT deadline passed before any token, are expired.  Queued expirees
+        are removed from the queue and returned; live expirees are returned
+        as still-bound slot indices — the engine owns the terminal path
+        (staged-step teardown, tracer instant, metrics) and retires them."""
+        def expired(req: Request) -> bool:
+            if req.deadline is not None and now > req.deadline:
+                return True
+            return (req.ttft_deadline is not None and req.t_first is None
+                    and now > req.ttft_deadline)
+
+        expired_q = [r for r in self.queue if expired(r)]
+        for r in expired_q:
+            self.queue.remove(r)
+        if expired_q:
+            self._m_queue.set(len(self.queue))
+        expired_live = [i for i, s in enumerate(self.slots)
+                        if s is not None and expired(s.req)]
+        return expired_q, expired_live
 
     # ------------------------------------------------------------ scheduling
 

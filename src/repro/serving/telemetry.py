@@ -402,9 +402,13 @@ class Tracer:
         self._rec(rid).n_restores += 1
         self.instant(REQUEST_PID, rid, "restored", t)
 
-    def on_finished(self, rid: int, t: float, n_tokens: int) -> None:
+    def on_finished(self, rid: int, t: float, n_tokens: int,
+                    error: str = "") -> None:
         """Terminal transition: closes the rid's ``decode`` span and emits
-        the ``finished`` instant with the request's summary args."""
+        the ``finished`` instant with the request's summary args.  A
+        nonempty ``error`` marks a mid-flight failure terminal (quarantine,
+        cancel, deadline eviction) — same instant, extra ``error`` arg, so
+        trace consumers see exactly one terminal per rid either way."""
         if not self.enabled:
             return
         rec = self._rec(rid)
@@ -412,12 +416,13 @@ class Tracer:
         rec.terminal = True
         t_first = rec.t_first if rec.t_first is not None else t
         self.span(REQUEST_PID, rid, "decode", t_first, t, n_tokens=n_tokens)
+        extra = {"error": error} if error else {}
         self.instant(
             REQUEST_PID, rid, "finished", t,
             ttft_s=t_first - rec.arrival, finish_s=t - rec.arrival,
             tpot_s=(t - t_first) / max(n_tokens - 1, 1),
             n_tokens=n_tokens, n_prefill_chunks=rec.n_chunks,
-            n_preemptions=rec.n_preemptions)
+            n_preemptions=rec.n_preemptions, **extra)
 
     # ------------------------------------------------------------ emission
 

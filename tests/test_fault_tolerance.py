@@ -1,0 +1,354 @@
+"""Fault-injection, recovery, and overload-control coverage.
+
+The contract under test is **exact-survivor recovery**: whatever fault is
+injected (poisoned logits, raised step errors, page-pool pressure, client
+disconnects), the engine quarantines only the offending request — failed
+terminally, pages scrubbed and released, trace closed — while every other
+request's tokens stay byte-identical to a fault-free run.  On top of that:
+
+* cancel mid-prefill releases the unpublished page tail (pool conservation)
+* deadline-aware admission sheds at the door with a backoff hint and evicts
+  expired requests mid-flight (queued and bound)
+* the health state machine walks starting → healthy → draining → drained
+  and refuses invalid transitions
+* the watchdog fails pending streams when the pipeline stops progressing
+  (driven by a detok_stall fault) instead of hanging clients
+* an HTTP client disconnect mid-stream leaves the other streams byte-exact
+"""
+import asyncio
+import dataclasses
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, ServeConfig, reduced
+from repro.models.registry import init_params
+from repro.serving import (AdmissionController, Engine, FaultPlan,
+                           HealthState, ServingLoop, generate_static,
+                           stream_request, validate_trace)
+
+
+def _cfg(name="qwen2-0.5b"):
+    return dataclasses.replace(reduced(ARCHS[name]), remat="none")
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(1, cfg.vocab, size=n).tolist() for n in lens]
+
+
+def _baseline(cfg, params, prompts, budgets, scfg):
+    ref, _ = generate_static(cfg, params, prompts, budgets, scfg,
+                             batch_size=1)
+    return ref
+
+
+def _check_survivors(results, ref, targeted):
+    """targeted: rid -> expected error substring."""
+    for r in results:
+        if r.rid in targeted:
+            assert r.failed and targeted[r.rid] in r.error, (r.rid, r.error)
+            # partial output is a strict prefix of the clean baseline
+            assert r.tokens == ref[r.rid][:len(r.tokens)], r.rid
+        else:
+            assert not r.failed, (r.rid, r.error)
+            assert r.tokens == ref[r.rid], r.rid
+
+
+# ------------------------------------------------- quarantine per fault kind
+
+def test_nan_logits_quarantine_survivors_exact():
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    scfg = ServeConfig(page_size=8, max_slots=4, max_len=48)
+    prompts = _prompts(cfg, [6, 14, 9, 20], seed=1)
+    budgets = [8, 6, 8, 5]
+    plan = FaultPlan.parse("nan_logits:rid=2,at=2")
+    eng = Engine(cfg, scfg, params, faults=plan)
+    results, _ = eng.run_offline(prompts, budgets)
+
+    assert plan.unfired() == []
+    _check_survivors(results, _baseline(cfg, params, prompts, budgets, scfg),
+                     {2: "nan_logits"})
+    # the poisoned request produced exactly `at` tokens before quarantine
+    assert len(results[2].tokens) == 2
+    assert eng.metrics.value("engine.quarantined") == 1
+    assert eng.metrics.get("engine.faults_injected").labels(
+        kind="nan_logits").value == 1
+    # its pages were NaN-scrubbed before returning to the free list
+    assert eng.metrics.value("pool.pages_scrubbed") >= 1
+    assert eng.pool.num_allocated == 0 and eng.pool.conservation_ok()
+    assert validate_trace(eng.tracer.to_dict()) == []
+
+
+def test_step_error_quarantine_survivors_exact():
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    scfg = ServeConfig(page_size=8, max_slots=4, max_len=48)
+    prompts = _prompts(cfg, [6, 14, 9, 20], seed=2)
+    budgets = [8, 6, 8, 5]
+    plan = FaultPlan.parse("step_error:rid=0,at=3")
+    eng = Engine(cfg, scfg, params, faults=plan)
+    results, _ = eng.run_offline(prompts, budgets)
+
+    assert plan.unfired() == []
+    _check_survivors(results, _baseline(cfg, params, prompts, budgets, scfg),
+                     {0: "step_error"})
+    assert eng.metrics.value("engine.quarantined") == 1
+    assert eng.pool.num_allocated == 0 and eng.pool.conservation_ok()
+
+
+def test_pool_pressure_all_requests_survive_exact():
+    """Hostage pages force eviction/preemption churn (and possibly an
+    injector-resolved deadlock) but nobody fails and tokens stay exact."""
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    scfg = ServeConfig(page_size=8, max_slots=3, max_len=32, num_pages=9)
+    prompts = _prompts(cfg, [7, 15, 9, 12], seed=3)
+    budgets = [9, 8, 10, 7]
+    plan = FaultPlan.parse("pool_pressure:at=3,pages=4,steps=4")
+    eng = Engine(cfg, scfg, params, faults=plan)
+    results, _ = eng.run_offline(prompts, budgets)
+
+    assert plan.unfired() == []
+    _check_survivors(results, _baseline(cfg, params, prompts, budgets, scfg),
+                     {})
+    assert eng.pool.num_allocated == 0 and eng.pool.conservation_ok()
+
+
+def test_client_disconnect_cancels_only_target():
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    scfg = ServeConfig(page_size=8, max_slots=4, max_len=48)
+    prompts = _prompts(cfg, [6, 14, 9], seed=4)
+    budgets = [8, 8, 8]
+    plan = FaultPlan.parse("client_disconnect:rid=1,at=2")
+    eng = Engine(cfg, scfg, params, faults=plan)
+    results, _ = eng.run_offline(prompts, budgets)
+
+    assert plan.unfired() == []
+    _check_survivors(results, _baseline(cfg, params, prompts, budgets, scfg),
+                     {1: "cancelled"})
+    assert eng.metrics.value("engine.cancelled") == 1
+    assert eng.pool.num_allocated == 0 and eng.pool.conservation_ok()
+
+
+def test_fault_plan_parse_rejects_bad_specs():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan.parse("frobnicate:rid=1")
+    with pytest.raises(ValueError, match="unknown fault field"):
+        FaultPlan.parse("nan_logits:rid=1,bogus=2")
+    with pytest.raises(ValueError, match="at >= 1"):
+        FaultPlan.parse("nan_logits:rid=1,at=0")
+    with pytest.raises(ValueError, match="empty fault plan"):
+        FaultPlan.parse(" ; ")
+
+
+# ------------------------------------------------------- cancel mid-prefill
+
+def test_cancel_mid_prefill_releases_unpublished_tail():
+    """Cancel between prefill chunks: the pages holding the already-filled
+    chunks are not yet radix-published and must still return to the pool."""
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    scfg = ServeConfig(page_size=8, max_slots=2, max_len=64,
+                       prefill_chunk_tokens=8)
+    eng = Engine(cfg, scfg, params)
+    long_prompt = _prompts(cfg, [30], seed=5)[0]      # 4 chunks of 8
+    rid = eng.add_request(long_prompt, 8)
+    assert eng.step()                                 # first chunk only
+    assert eng.pool.num_allocated > 0                 # mid-prefill, holding
+    eng.cancel(rid)
+    for _ in range(8):
+        if not eng.step():
+            break
+    (res,) = eng.collect()
+    assert res.failed and "cancelled" in res.error
+    assert eng.pool.num_allocated == 0 and eng.pool.conservation_ok()
+    # pool-conservation counters: everything allocated was released
+    assert (eng.metrics.value("pool.pages_allocated")
+            == eng.metrics.value("pool.pages_released"))
+    assert validate_trace(eng.tracer.to_dict()) == []
+
+
+# -------------------------------------------------- deadlines and admission
+
+def _adm_engine(**scfg_kw):
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    scfg = ServeConfig(page_size=8, max_slots=2, max_len=48,
+                       admission_control=True, **scfg_kw)
+    return cfg, params, scfg, Engine(cfg, scfg, params)
+
+
+def test_admission_sheds_hopeless_deadline_with_backoff_hint():
+    cfg, params, scfg, eng = _adm_engine()
+    p = _prompts(cfg, [6], seed=6)[0]
+    rid = eng.add_request(p, 4, deadline_s=1e-6)      # < step-time prior
+    (res,) = eng.collect()
+    assert res.rid == rid and res.failed
+    assert "shed" in res.error and "overloaded" in res.error
+    assert res.retry_after_s > 0
+    assert res.tokens == []
+    assert eng.metrics.get("admission.shed").labels(
+        reason="overloaded").value == 1
+    # no-deadline requests are never shed by the estimator
+    rid2 = eng.add_request(p, 4)
+    results, _ = eng.run_offline([], [])              # drain what's live
+    assert eng.metrics.value("engine.deadline_evictions") == 0
+
+
+def test_deadline_eviction_queued_and_live():
+    cfg, params, scfg, eng = _adm_engine()
+    prompts = _prompts(cfg, [6, 9, 7], seed=7)
+    r0 = eng.add_request(prompts[0], 12, deadline_s=120.0)
+    r1 = eng.add_request(prompts[1], 12, deadline_s=120.0)
+    r2 = eng.add_request(prompts[2], 12, deadline_s=120.0)  # queued (2 slots)
+    eng.step()
+    # force expiry deterministically rather than racing wall-clock: one
+    # queued victim and one bound victim; everything else keeps its 120 s
+    past = time.perf_counter() - 1.0
+    assert eng.sched.queue                            # r2 still waiting
+    eng.sched.queue[-1].deadline = past
+    live_slot = next(s for s in eng.sched.slots if s is not None)
+    live_slot.req.deadline = past
+    while eng.step():
+        pass
+    results = {r.rid: r for r in eng.collect()}
+    expired = [r for r in results.values()
+               if r.failed and "deadline_exceeded" in r.error]
+    assert len(expired) == 2                          # one queued + one live
+    assert eng.metrics.value("engine.deadline_evictions") == 2
+    assert eng.pool.num_allocated == 0 and eng.pool.conservation_ok()
+    assert validate_trace(eng.tracer.to_dict()) == []
+
+
+def test_admission_controller_estimates():
+    adm = AdmissionController(max_slots=4, step_s_prior=0.05)
+    assert adm.estimate_queue_wait(0) == 0.0
+    assert adm.check(0) is None                       # no deadline: admit
+    assert adm.check(0, deadline_s=1e-6) == "overloaded"
+    # calibration: observed service time drives the wave estimate
+    for _ in range(8):
+        adm.observe_result(ttft_s=0.1, service_s=1.0)
+    assert adm.estimate_queue_wait(4) == pytest.approx(1.0)
+    assert adm.estimate_queue_wait(5) == pytest.approx(2.0)
+    assert adm.check(5, deadline_s=10.0) is None
+    assert adm.check(5, deadline_s=2.5) == "overloaded"
+    hint = adm.retry_after_s(5)
+    assert 0.05 <= hint <= 45.0                       # jittered, bounded
+
+
+# ----------------------------------------------------- health state machine
+
+def test_health_state_machine_transitions():
+    h = HealthState()
+    assert h.state == "starting" and h.accepting
+    assert h.mark_healthy()
+    assert not h.mark_healthy()                       # idempotent
+    assert h.begin_drain()
+    assert not h.mark_healthy()                       # no way back
+    assert h.draining and not h.accepting
+    assert h.mark_drained()
+    assert h.history == ["starting", "healthy", "draining", "drained"]
+    assert not h.mark_degraded("too late")            # terminal
+    d = h.to_dict()
+    assert d["state"] == "drained" and d["ok"] is False
+
+
+def test_draining_engine_sheds_new_requests():
+    cfg, params, scfg, eng = _adm_engine()
+    eng.health.mark_healthy()
+    eng.health.begin_drain()
+    rid = eng.add_request(_prompts(cfg, [5], seed=8)[0], 4)
+    (res,) = eng.collect()
+    assert res.failed and "draining" in res.error and res.retry_after_s > 0
+
+
+# ------------------------------------------------ watchdog via detok stall
+
+def test_watchdog_fails_pending_streams_on_stalled_pipeline():
+    """A detok_stall fault wedges the bounded event queue; the watchdog
+    must fail the pending stream with a terminal error instead of letting
+    the client hang, and mark the server degraded."""
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    scfg = ServeConfig(page_size=8, max_slots=2, max_len=48)
+    warm = Engine(cfg, scfg, params)                  # jit warm-up run
+    warm.run_offline(_prompts(cfg, [6], seed=9), 4)
+
+    plan = FaultPlan.parse("detok_stall:at=2,stall_s=3.0")
+    eng = Engine(cfg, scfg, params, faults=plan)
+
+    async def main():
+        serving = ServingLoop(eng, overlap=True, collect_queue_size=1,
+                              watchdog_s=0.5)
+        await serving.start()
+        try:
+            events = await asyncio.wait_for(
+                stream_request(serving, _prompts(cfg, [6], seed=9)[0], 16,
+                               timeout_s=60.0),
+                timeout=60.0)
+        finally:
+            await serving.stop()
+        return events
+
+    events = asyncio.run(main())
+    assert plan.unfired() == []
+    final = events[-1]
+    assert final["type"] == "error" and "watchdog" in final["error"]
+    assert eng.metrics.value("server.watchdog_trips") == 1
+    assert eng.health.state == "degraded"
+
+
+# --------------------------------------------- HTTP disconnect mid-stream
+
+def test_http_client_disconnect_survivors_byte_exact():
+    """Three streaming HTTP clients; one drops mid-stream.  The survivors'
+    streamed tokens stay byte-identical to the static baseline, the
+    abandoned request's pages are freed, and the trace stays well-formed."""
+    from repro.launch.serve_http import HttpFrontend, _sse_client
+
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    scfg = ServeConfig(page_size=8, max_slots=3, max_len=48)
+    eng = Engine(cfg, scfg, params)
+    prompts = _prompts(cfg, [6, 13, 9], seed=10)
+    budgets = [6, 24, 8]                              # rid 1 drops early
+
+    async def main():
+        serving = ServingLoop(eng, overlap=True)
+        frontend = HttpFrontend(serving)
+        await serving.start()
+        server = await asyncio.start_server(frontend.handle, "127.0.0.1", 0)
+        port = server.sockets[0].getsockname()[1]
+        try:
+            outs = await asyncio.wait_for(asyncio.gather(
+                _sse_client("127.0.0.1", port, prompts[0], budgets[0]),
+                _sse_client("127.0.0.1", port, prompts[1], budgets[1],
+                            disconnect_after=2),
+                _sse_client("127.0.0.1", port, prompts[2], budgets[2]),
+            ), timeout=300.0)
+            # wait for the engine to notice the dead socket and drain
+            deadline = time.monotonic() + 60.0
+            while (eng.sched.has_work() or not serving._submit.empty()) \
+                    and time.monotonic() < deadline:
+                await asyncio.sleep(0.02)
+        finally:
+            server.close()
+            await server.wait_closed()
+            await serving.stop()
+        return outs
+
+    outs = asyncio.run(main())
+    ref = _baseline(cfg, params, prompts, budgets, scfg)
+    for i in (0, 2):
+        assert outs[i]["final"]["type"] == "done"
+        assert outs[i]["streamed"] == ref[i], f"survivor {i} diverged"
+    # the dropped client saw a clean prefix before walking away
+    assert outs[1]["streamed"] == ref[1][:len(outs[1]["streamed"])]
+    assert eng.metrics.value("engine.cancelled") == 1
+    assert eng.pool.num_allocated == 0 and eng.pool.conservation_ok()
+    assert validate_trace(eng.tracer.to_dict()) == []
